@@ -1,0 +1,103 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every benchmark produces ``Row``s carrying the derived metric next to the
+paper's claimed value (when the paper states one), so faithfulness is
+auditable from the CSV alone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Set
+
+import numpy as np
+
+from repro.core import memory, pyvm
+from repro.core.costmodel import DEFAULT_HW, HW
+from repro.core.isa import Op
+from repro.core.memory import Grant, RegionTable
+from repro.core.pyvm import TraceEvent
+from repro.core.simulator import TaskSim, simulate_task
+from repro.core.verifier import VerifiedOperator, verify
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float        # latency of one op (or blank for rate rows)
+    derived: float            # the figure's metric (latency us, Mops, GB/s)
+    unit: str = "us"
+    paper: Optional[float] = None   # the paper's claimed value, if stated
+    note: str = ""
+
+    def ratio(self) -> Optional[float]:
+        if self.paper in (None, 0):
+            return None
+        return self.derived / self.paper
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.4g},{self.derived:.4g}"
+
+
+def run_traced(workload, build_fn, params: Sequence[int], *,
+               n_devices: int = 1, home: int = 0,
+               populate_args: Optional[dict] = None,
+               setup_fn=None) -> tuple:
+    """Verify + populate + run on the pyvm oracle with tracing.
+
+    Returns (vop, trace, result, rt, mem_before)."""
+    rt = workload.regions()
+    prog = build_fn(rt)
+    vop = verify(prog, grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(n_devices, rt)
+    if hasattr(workload, "populate"):
+        workload.populate(mem, rt, **(populate_args or {}))
+    if setup_fn is not None:
+        setup_fn(mem, rt)
+    before = mem.copy()
+    res = pyvm.run(vop, rt, mem, list(params), home=home, record_trace=True)
+    assert res.status in (0, 1), f"operator failed: status={res.status}"
+    return vop, res.trace, res, rt, before
+
+
+def count_rtts(trace: Sequence[TraceEvent], *,
+               client_dev: Optional[int] = None) -> int:
+    """Round trips a Tiara invocation costs: 1 for request/reply, plus one
+    per remote synchronous op, plus one per Wait that joins remote async
+    ops to *third parties* (parallel replica writes count once — the
+    paper's 2-RTT lock).  Writes streamed back to the requester itself
+    (``client_dev``) ride the reply path and add no round trip."""
+    rtts = 1
+    pending_third_party = False
+    for ev in trace:
+        if ev.op == Op.MEMCPY and ev.remote:
+            to_client = client_dev is not None and ev.dst_dev == client_dev \
+                and not ev.src_remote
+            if to_client:
+                continue
+            if ev.is_async:
+                pending_third_party = True
+            else:
+                rtts += 1
+        elif ev.op in (Op.LOAD, Op.STORE, Op.CAS, Op.CAA) and ev.remote:
+            rtts += 1
+        elif ev.op == Op.WAIT and pending_third_party:
+            rtts += 1
+            pending_third_party = False
+    if pending_third_party:
+        rtts += 1
+    return rtts
+
+
+def fmt_table(rows: List[Row], title: str) -> str:
+    out = [f"== {title} =="]
+    out.append(f"{'name':44s} {'latency_us':>11s} {'derived':>10s} "
+               f"{'unit':>6s} {'paper':>8s} {'ratio':>6s}  note")
+    for r in rows:
+        ratio = r.ratio()
+        out.append(
+            f"{r.name:44s} {r.us_per_call:11.3f} {r.derived:10.3f} "
+            f"{r.unit:>6s} "
+            f"{(f'{r.paper:8.3f}' if r.paper is not None else '       -')} "
+            f"{(f'{ratio:6.2f}' if ratio is not None else '     -')}  {r.note}")
+    return "\n".join(out)

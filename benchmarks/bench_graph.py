@@ -1,0 +1,95 @@
+"""Figures 6 & 7 — graph-traversal latency and throughput vs. depth.
+
+Tiara numbers come from the cycle-level MP simulator replaying the traced
+operator; baselines are the paper's analytical models (§4.1).
+Paper anchors: depth-10 latency 8.78 us vs RDMA 25.0 us (2.85x);
+depth-3 saturated throughput 29.5 Mops (3.4x RDMA), RPC 3.55 Mops at
+16 cores / 4.88 at 22, RedN ~1 Mops.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import operators as ops
+from repro.core import simulator as sim
+from repro.core.frontend import compile_source
+
+from benchmarks._workbench import Row, run_traced
+
+DEPTHS = (1, 2, 3, 5, 10)
+MAX_DEPTH = 16
+
+_WALK_SRC = '''
+def walk(start, depth):
+    cur = start
+    for _ in bounded(depth, {cap}):
+        cur = load("graph", cur + 1)
+    return cur
+'''
+
+
+def _tiara(depth: int, hw: cm.HW):
+    w = ops.GraphWalk(n_nodes=1024, max_depth=MAX_DEPTH)
+    rt = w.regions()
+
+    def build(rt):
+        return compile_source(_WALK_SRC.format(cap=MAX_DEPTH), regions=rt)
+
+    def do(mem, rt_):
+        pass
+
+    vop, trace, res, rt, _ = run_traced(w, build, [0, depth])
+    # pointer chase: loop-carried address chain, never pipelineable
+    return sim.simulate_task(vop, trace, hw, serial_chain=True)
+
+
+def rows(hw: cm.HW = cm.DEFAULT_HW) -> List[Row]:
+    out: List[Row] = []
+    paper_lat = {10: 8.78}
+    paper_rdma_lat = {10: 25.0}
+    paper_tput = {3: 29.5}
+    for d in DEPTHS:
+        ts = _tiara(d, hw)
+        tput = sim.saturated_throughput_mops(ts, hw)
+        out.append(Row(f"fig6/graph/tiara/depth={d}", ts.latency_us,
+                       ts.latency_us, "us", paper_lat.get(d),
+                       note=f"bottleneck={sim.bottleneck(ts, hw)}"))
+        out.append(Row(f"fig6/graph/rdma/depth={d}",
+                       cm.rdma_chain_latency_us(d),
+                       cm.rdma_chain_latency_us(d), "us",
+                       paper_rdma_lat.get(d)))
+        out.append(Row(f"fig6/graph/rpc/depth={d}", cm.rpc_latency_us(d),
+                       cm.rpc_latency_us(d), "us"))
+        out.append(Row(f"fig6/graph/redn/depth={d}",
+                       cm.redn_latency_us(2 * d),
+                       cm.redn_latency_us(2 * d), "us"))
+        out.append(Row(f"fig6/graph/prism/depth={d}",
+                       cm.prism_latency_us(d), cm.prism_latency_us(d), "us"))
+        out.append(Row(f"fig7/graph/tiara/depth={d}", ts.latency_us, tput,
+                       "Mops", paper_tput.get(d)))
+        out.append(Row(f"fig7/graph/rdma/depth={d}",
+                       cm.rdma_chain_latency_us(d),
+                       cm.rdma_chain_throughput_mops(d), "Mops"))
+        out.append(Row(f"fig7/graph/rpc16/depth={d}", cm.rpc_latency_us(d),
+                       cm.rpc_throughput_mops(d), "Mops",
+                       3.55 if d == 3 else None))
+        out.append(Row(f"fig7/graph/rpc22/depth={d}", cm.rpc_latency_us(d),
+                       cm.rpc_throughput_mops(d, cores=hw.rpc_cores_sat),
+                       "Mops", 4.88 if d == 3 else None))
+        out.append(Row(f"fig7/graph/redn/depth={d}",
+                       cm.redn_latency_us(2 * d),
+                       cm.redn_throughput_mops(2 * d), "Mops",
+                       1.0 if d == 1 else None))
+    # headline ratios
+    t10 = _tiara(10, hw)
+    out.append(Row("fig6/speedup/tiara_vs_rdma/depth=10", t10.latency_us,
+                   cm.rdma_chain_latency_us(10) / t10.latency_us, "x", 2.85))
+    t3 = _tiara(3, hw)
+    out.append(Row("fig7/speedup/tiara_vs_rdma/depth=3", t3.latency_us,
+                   sim.saturated_throughput_mops(t3, hw)
+                   / cm.rdma_chain_throughput_mops(3), "x", 3.4))
+    return out

@@ -1,0 +1,80 @@
+"""Figure 9 — distributed-lock latency vs. contention.
+
+Paper anchors: RDMA needs 5 sequential RTTs uncontended and degrades 2.5x
+from 1 to 16 clients; RedN degrades 4.9x; RPC ~1.2x (overtaking Tiara at
+~4 clients); Tiara collapses to 2 RTTs (abstract: 2.9x lower uncontended,
+3.1x lower at 16 clients).
+
+Faithfulness note (reported, not hidden): the paper's own RTT accounting
+caps the uncontended gain at 5 RTT / 2 RTT = 2.5x, yet the abstract claims
+2.9x — the claims are internally inconsistent at the ~15% level.  We report
+both our cycle-level simulation (which additionally pays the four local
+DMA ops of Fig. 5) and the pure RTT-count model.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import memory
+from repro.core import operators as ops
+from repro.core import simulator as sim
+
+from benchmarks._workbench import Row, run_traced
+
+CLIENTS = (1, 2, 4, 8, 16)
+
+
+def rows(hw: cm.HW = cm.DEFAULT_HW) -> List[Row]:
+    d = ops.DistLock()
+
+    def setup(mem, rt):
+        memory.write_region(mem, rt, 0, "lock", [0, 42])
+
+    vop, trace, res, rt, _ = run_traced(
+        d, d.build, [0, 1, 777, 1, 1, 2, 1], n_devices=3, setup_fn=setup)
+    assert res.ok
+    ts = sim.simulate_task(vop, trace, hw)
+
+    out: List[Row] = [
+        Row("fig9/lock/tiara/uncontended(sim)", ts.latency_us,
+            ts.latency_us, "us",
+            note="CAS + state rw + parallel replica writes + release"),
+        Row("fig9/lock/tiara/uncontended(rtt-model)",
+            cm.tiara_lock_latency_us(hw), cm.tiara_lock_latency_us(hw),
+            "us", note="paper's 2-RTT accounting"),
+        Row("fig9/lock/rdma/uncontended", cm.rdma_lock_latency_us(hw),
+            cm.rdma_lock_latency_us(hw), "us", 12.5, note="5 RTTs"),
+        Row("fig9/lock/speedup/tiara_vs_rdma(sim)", ts.latency_us,
+            cm.rdma_lock_latency_us(hw) / ts.latency_us, "x", 2.9,
+            note="paper claim exceeds its own 5RTT/2RTT=2.5 bound"),
+        Row("fig9/lock/speedup/tiara_vs_rdma(rtt-model)",
+            cm.tiara_lock_latency_us(hw),
+            cm.rdma_lock_latency_us(hw) / cm.tiara_lock_latency_us(hw),
+            "x", 2.9),
+    ]
+    for c in CLIENTS:
+        for system in ("tiara", "rdma", "rpc", "redn"):
+            lat = cm.lock_latency_contended_us(system, c, hw)
+            paper = None
+            if c == 16 and system == "rdma":
+                paper = cm.rdma_lock_latency_us(hw) * 2.5
+            out.append(Row(f"fig9/lock/{system}/clients={c}", lat, lat, "us",
+                           paper))
+    # degradation factors 1 -> 16 clients
+    for system, claim in (("rdma", 2.5), ("redn", 4.9), ("rpc", 1.2),
+                          ("tiara", None)):
+        deg = (cm.lock_latency_contended_us(system, 16, hw)
+               / cm.lock_latency_contended_us(system, 1, hw))
+        out.append(Row(f"fig9/lock/degradation/{system}",
+                       cm.lock_latency_contended_us(system, 16, hw),
+                       deg, "x", claim))
+    out.append(Row(
+        "fig9/lock/speedup/tiara_vs_rdma/clients=16",
+        cm.lock_latency_contended_us("tiara", 16, hw),
+        cm.lock_latency_contended_us("rdma", 16, hw)
+        / cm.lock_latency_contended_us("tiara", 16, hw), "x", 3.1))
+    return out

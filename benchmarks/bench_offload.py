@@ -1,0 +1,63 @@
+"""Figures 2 & 3 — when does memory-side offloading beat one-sided RDMA?
+
+Fig. 2 (BlueField-2 measurement): off-path offload *increases* latency for
+every operator because each ARM-core host-memory access costs 1.7 us via
+internal RDMA, close to the 1.9 us cable RTT.  Model: one-sided RDMA pays
+the cable RTT plus one NIC-native host access (~0.7 us [calib: reproduces
+the paper's 38% atomic-read regression]); BF-2 pays the RTT plus one
+internal-RDMA hop per dependent access.
+
+Fig. 3 (analytical sweep): offload latency = RTT + depth x host_mem; the
+crossover where offload wins sits at host_mem ~ RTT x (d-1)/d -> RTT.
+Tiara's 0.75 us PCIe DMA and BF-3 DPA's 0.85 us both sit well below it.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import costmodel as cm
+
+from benchmarks._workbench import Row
+
+NIC_NATIVE_HOST_US = 0.7   # [calib: 38% BF-2 atomic-read regression]
+
+# (name, dependent host accesses per op)
+OPERATORS = (("atomic_read", 1), ("ptw3", 3), ("graph_d5", 5))
+
+
+def rows(hw: cm.HW = cm.DEFAULT_HW) -> List[Row]:
+    out: List[Row] = []
+    rtt = cm.BF2_CABLE_RTT_US
+    for name, hops in OPERATORS:
+        # each dependent one-sided access pays the cable RTT, which already
+        # ends in the remote NIC's native host access
+        one_sided = hops * (rtt + NIC_NATIVE_HOST_US)
+        bf2 = rtt + hops * cm.BF2_HOST_ACCESS_US
+        tiara = rtt + hops * cm.TIARA_HOST_ACCESS_US
+        bf3 = rtt + hops * cm.BF3_DPA_HOST_ACCESS_US
+        out.append(Row(f"fig2/{name}/one_sided_rdma", one_sided, one_sided,
+                       "us"))
+        out.append(Row(f"fig2/{name}/bf2_offload", bf2, bf2, "us",
+                       note="off-path ARM, 1.7us/host access"))
+        out.append(Row(f"fig2/{name}/tiara", tiara, tiara, "us"))
+        out.append(Row(f"fig2/{name}/bf3_dpa", bf3, bf3, "us"))
+        if name == "atomic_read":
+            out.append(Row("fig2/atomic_read/bf2_regression", bf2,
+                           bf2 / one_sided - 1, "frac", 0.38,
+                           note="paper: BF-2 regresses 38%"))
+
+    # Fig 3: sweep host-memory latency at depth 16; crossover -> RTT
+    depth = 16
+    client = depth * hw.rtt_us
+    for h_us in (0.35, cm.TIARA_HOST_ACCESS_US, cm.BF3_DPA_HOST_ACCESS_US,
+                 1.7, 2.4, 2.5, 3.0):
+        off = cm.offload_chain_latency_us(h_us, depth, hw)
+        out.append(Row(f"fig3/depth16/host_mem={h_us}us", off,
+                       client / off, "x",
+                       note="speedup>1 means offload wins"))
+    crossover = hw.rtt_us * (depth - 1) / depth
+    out.append(Row("fig3/crossover_host_mem_latency", crossover, crossover,
+                   "us", hw.rtt_us,
+                   note="-> RTT as depth grows (paper Fig. 3)"))
+    return out

@@ -1,0 +1,64 @@
+"""Figure 8 — 3-level page-table walk latency + throughput.
+
+Paper anchors: RDMA 4 RTTs = 10.0 us; Tiara 3.75 us (62% lower, 2.7x);
+throughput ~25 Mops vs RDMA 0.1 Mops.  Note the paper's 3.75 us implies a
+~0.42 us effective per-level cost, tighter than its own Fig. 6 per-hop
+0.79 us — we report our simulator's number (serialized 0.75 us DMAs) and
+the ratio, see EXPERIMENTS.md §Calibration.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import costmodel as cm
+from repro.core import operators as ops
+from repro.core import simulator as sim
+
+from benchmarks._workbench import Row, run_traced
+
+
+def rows(hw: cm.HW = cm.DEFAULT_HW) -> List[Row]:
+    p = ops.PageTableWalk(fanout=64, n_pages=64)
+
+    # Latency: full walk + 4 KB page fetch streamed back to the caller.
+    vop, trace, res, rt, _ = run_traced(
+        p, p.build, [_first_va(p)], populate_args={"seed": 7})
+    ts_full = sim.simulate_task(vop, trace, hw, reply_payload_bytes=0)
+
+    # Throughput: translation-only ('each translation is one message').
+    vop_t, trace_t, _, _, _ = run_traced(
+        p, p.build_translate_only, [_first_va(p)], populate_args={"seed": 7})
+    ts_tr = sim.simulate_task(vop_t, trace_t, hw)
+    tput = sim.saturated_throughput_mops(ts_tr, hw)
+
+    rdma_lat = cm.rdma_ptw_latency_us(3, hw)
+    return [
+        Row("fig8/ptw/tiara/latency", ts_tr.latency_us, ts_tr.latency_us,
+            "us", 3.75, note="translate-only walk, 3 chained DMAs"),
+        Row("fig8/ptw/tiara/latency+page", ts_full.latency_us,
+            ts_full.latency_us, "us",
+            note="with 4 KB page fetch (ODRP-style remote paging)"),
+        Row("fig8/ptw/rdma/latency", rdma_lat, rdma_lat, "us", 10.0),
+        Row("fig8/ptw/rpc/latency", cm.rpc_latency_us(3, hw),
+            cm.rpc_latency_us(3, hw), "us"),
+        Row("fig8/ptw/redn/latency", cm.redn_latency_us(9, hw),
+            cm.redn_latency_us(9, hw), "us",
+            note="3 WRs/level for shift/mask arithmetic"),
+        Row("fig8/ptw/tiara/throughput", ts_tr.latency_us, tput, "Mops",
+            25.0, note=f"bottleneck={sim.bottleneck(ts_tr, hw)}"),
+        Row("fig8/ptw/rdma/throughput", rdma_lat,
+            cm.rdma_chain_throughput_mops(4, hw), "Mops",
+            note="paper quotes 0.1 Mops measured; verb-rate model shown"),
+        Row("fig8/ptw/reduction/tiara_vs_rdma", ts_tr.latency_us,
+            1 - ts_tr.latency_us / rdma_lat, "frac", 0.62),
+    ]
+
+
+def _first_va(p: ops.PageTableWalk) -> int:
+    import numpy as np
+    from repro.core import memory
+    rt = p.regions()
+    mem = memory.make_pool(1, rt)
+    vamap = p.populate(mem, rt, seed=7)
+    return next(iter(vamap.keys()))

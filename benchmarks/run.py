@@ -1,0 +1,78 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints the required ``name,us_per_call,derived`` CSV followed by
+human-readable comparison tables (derived vs. the paper's claimed value
+with the ratio).  The Tiara side is the cycle-level MP simulator replaying
+verified-operator traces; baselines are the paper's analytical models.
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--only fig10] [--json out]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from benchmarks import (bench_graph, bench_lock, bench_moe, bench_offload,
+                        bench_paged_attention, bench_ptw, bench_table1)
+from benchmarks._workbench import fmt_table
+
+MODULES = [
+    ("table1", "Table 1: RTT cost of indirection", bench_table1),
+    ("fig2_3", "Figures 2-3: offload crossover", bench_offload),
+    ("fig6_7", "Figures 6-7: graph traversal", bench_graph),
+    ("fig8", "Figure 8: page-table walk", bench_ptw),
+    ("fig9", "Figure 9: distributed lock", bench_lock),
+    ("fig10", "Figure 10: disaggregated PagedAttention",
+     bench_paged_attention),
+    ("sec4.5", "Section 4.5: MoE expert gather", bench_moe),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module key")
+    ap.add_argument("--json", default=None, help="dump rows as JSON")
+    args = ap.parse_args()
+
+    all_rows = []
+    tables = []
+    for key, title, mod in MODULES:
+        if args.only and args.only not in key:
+            continue
+        t0 = time.time()
+        rows = mod.rows()
+        dt = time.time() - t0
+        all_rows.extend(rows)
+        tables.append(fmt_table(rows, f"{title}  [{dt:.1f}s]"))
+
+    print("name,us_per_call,derived")
+    for r in all_rows:
+        print(r.csv())
+    print()
+    for t in tables:
+        print(t)
+        print()
+
+    claims = [r for r in all_rows if r.paper is not None]
+    ok = sum(1 for r in claims if r.ratio() is not None
+             and 0.7 <= r.ratio() <= 1.3)
+    print(f"== claim check: {ok}/{len(claims)} paper-anchored rows within "
+          f"+/-30% of the claimed value ==")
+    worst = sorted((r for r in claims if r.ratio() is not None),
+                   key=lambda r: abs(1 - r.ratio()), reverse=True)[:5]
+    for r in worst:
+        print(f"   largest deviation: {r.name}: derived {r.derived:.3g} "
+              f"vs paper {r.paper:.3g} (x{r.ratio():.2f}) {r.note}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([r.__dict__ for r in all_rows], f, indent=1)
+        print(f"wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

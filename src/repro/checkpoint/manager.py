@@ -1,0 +1,154 @@
+"""Checkpointing: step-atomic, async, retention, reshard-on-load.
+
+Layout:  <dir>/step_<n>/arrays.npz + tree.json + data_state.json
+Writes go to a temp directory renamed into place (a crash mid-save never
+corrupts the latest checkpoint).  Arrays are saved device-agnostic (full
+host values); restore applies the *target* mesh's shardings, so a run may
+resume on a different pod count (elastic re-scale) — the reshard is just a
+different ``device_put``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Callable, List, Optional
+
+import jax
+import numpy as np
+
+_SEP = "||"
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return f"k:{p.key}"
+    if hasattr(p, "idx"):
+        return f"i:{p.idx}"
+    if hasattr(p, "name"):
+        return f"n:{p.name}"
+    return f"r:{p}"
+
+
+def save(tree: Any, directory: str, step: int, *,
+         extra: Optional[dict] = None) -> str:
+    """Synchronous atomic save; returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    meta = {"step": step, "n_arrays": len(arrays), "extra": extra or {}}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+class AsyncSaver:
+    """Backgrounds the host-side write; at most one save in flight."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[str] = None
+
+    def save(self, tree, directory: str, step: int,
+             extra: Optional[dict] = None) -> None:
+        self.wait()
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+
+        def work():
+            self.last_path = save(host_tree, directory, step, extra=extra)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1))
+             for name in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", name))]
+    return max(steps) if steps else None
+
+
+def restore(target_like: Any, directory: str,
+            step: Optional[int] = None, *,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``target_like``; if ``shardings`` is
+    given (pytree of jax.sharding.Sharding or a callable leaf->sharding),
+    arrays land sharded on the *current* mesh — elastic re-scale."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat = jax.tree_util.tree_flatten_with_path(target_like)
+    leaves, treedef = jax.tree_util.tree_flatten(target_like)
+    out = []
+    shard_leaves = None
+    if shardings is not None and not callable(shardings):
+        shard_leaves = jax.tree_util.tree_flatten(shardings)[0]
+    for i, (pathkeys, leaf) in enumerate(flat[0]):
+        key = _SEP.join(_path_str(p) for p in pathkeys)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = data[key]
+        if hasattr(leaf, "dtype"):
+            if arr.dtype.kind == "V":
+                # npz stores ml_dtypes (bfloat16, ...) as raw void bytes;
+                # reinterpret against the target leaf dtype
+                arr = arr.view(leaf.dtype)
+            else:
+                arr = arr.astype(leaf.dtype)
+        if shardings is None:
+            out.append(jax.numpy.asarray(arr))
+        else:
+            sh = (shardings(leaf) if callable(shardings)
+                  else shard_leaves[i])
+            out.append(jax.device_put(arr, sh))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def retain(directory: str, keep: int) -> List[str]:
+    """Delete all but the newest ``keep`` checkpoints; returns removed."""
+    if not os.path.isdir(directory):
+        return []
+    steps = sorted(int(m.group(1))
+                   for name in os.listdir(directory)
+                   if (m := re.fullmatch(r"step_(\d+)", name)))
+    removed = []
+    for s in steps[:-keep] if keep > 0 else []:
+        p = os.path.join(directory, f"step_{s:08d}")
+        shutil.rmtree(p)
+        removed.append(p)
+    return removed
+
+
+def meta(directory: str, step: int) -> dict:
+    with open(os.path.join(directory, f"step_{step:08d}", "meta.json")) as f:
+        return json.load(f)

@@ -1,0 +1,177 @@
+"""Architecture configs — the 10 assigned architectures + shape suite.
+
+``get_config(name)`` resolves an ``--arch`` id; each architecture lives in
+its own module with the exact published numbers.  ``SHAPES`` carries the
+assigned input-shape suite; ``cell_applicable`` encodes the long_500k
+sub-quadratic rule and encoder/decoder caveats (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+from repro.models.mamba import MambaSpec
+from repro.models.moe import MoESpec
+from repro.models.rwkv import RWKVSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str = "attn"            # attn | mamba | rwkv
+    mlp: str = "swiglu"           # swiglu | relu2 | gelu | moe | rwkv_cm
+    moe: Optional[MoESpec] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    pattern: Tuple[LayerSpec, ...]
+    head_dim: int
+    source: str = ""
+    norm: str = "rmsnorm"
+    rope: str = "rope"            # rope | mrope | none
+    rope_theta: float = 1_000_000.0
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    tie_embeddings: bool = False
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    frontend: Optional[str] = None   # audio | vision (stubs: see DESIGN.md)
+    sub_quadratic: bool = False
+    mamba: MambaSpec = MambaSpec()
+    rwkv: RWKVSpec = RWKVSpec()
+    attn_impl: str = "auto"
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    page_size: int = 128          # paged-KV page (tokens)
+    remat: str = "full"           # none | dots | full (train-mode scan body)
+    scan_layers: bool = True      # False: unroll (dry-run FLOP accounting —
+    #                               XLA cost_analysis counts loop bodies once)
+    dp_spec: Optional[Tuple[str, ...]] = None   # batch-dim mesh axes for
+    #                               explicit activation sharding hints
+    #                               (set by the launcher; needs use_mesh)
+    paged_attn_fn: Optional[Any] = None   # launcher-injected one-round
+    #                               sequence-parallel decode (§Perf cell 1)
+    remat_unit: str = "pattern"   # pattern | layer (checkpoint granularity)
+    moe_hints: bool = False       # explicit dispatch-buffer shardings
+    moe_fn: Optional[Any] = None  # launcher-injected local-dispatch EP MoE
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding rows padded to a multiple of 256 so the vocab dim
+        shards evenly on the model axis (padded logits are masked)."""
+        return (self.vocab + 255) // 256 * 256
+
+    @property
+    def n_repeat(self) -> int:
+        assert self.n_layers % len(self.pattern) == 0, \
+            f"{self.name}: {self.n_layers} layers not a multiple of " \
+            f"pattern length {len(self.pattern)}"
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(s.kind != "attn" for s in self.pattern)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+ARCH_IDS = (
+    "internlm2-1.8b",
+    "granite-3-8b",
+    "stablelm-1.6b",
+    "nemotron-4-15b",
+    "llama4-scout-17b-a16e",
+    "llama4-maverick-400b-a17b",
+    "jamba-v0.1-52b",
+    "rwkv6-1.6b",
+    "seamless-m4t-medium",
+    "qwen2-vl-7b",
+)
+
+_MODULES = {
+    "internlm2-1.8b": "internlm2_1_8b",
+    "granite-3-8b": "granite_3_8b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "tiny-lm": "tiny_lm",
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    key = name.strip().lower().replace("_", "-")
+    if key not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[key]}")
+    return mod.CONFIG
+
+
+def reduce_config(cfg: ArchConfig) -> ArchConfig:
+    """Reduced same-family config for CPU smoke tests: small width, few
+    layers (but >= one full pattern period), tiny vocab/experts, preserved
+    GQA grouping and layer-kind structure."""
+    group = max(1, cfg.n_heads // cfg.n_kv_heads)
+    n_kv = 1 if cfg.n_kv_heads < cfg.n_heads else 2
+    n_heads = group * n_kv if cfg.n_kv_heads < cfg.n_heads else 2
+    head_dim = 32
+    d_model = 128
+    pattern = []
+    for spec in cfg.pattern:
+        moe = spec.moe
+        if moe is not None:
+            # capacity high enough that smoke tests never drop tokens —
+            # prefill+decode must match the full forward exactly
+            moe = dataclasses.replace(moe, n_experts=min(4, moe.n_experts),
+                                      d_ff_expert=64, capacity_factor=8.0)
+        pattern.append(dataclasses.replace(spec, moe=moe))
+    n_repeat = min(2, cfg.n_repeat)
+    return cfg.replace(
+        n_layers=len(pattern) * n_repeat,
+        d_model=d_model, n_heads=n_heads, n_kv_heads=n_kv,
+        head_dim=head_dim, d_ff=160, vocab=512,
+        pattern=tuple(pattern),
+        n_enc_layers=min(2, cfg.n_enc_layers),
+        mamba=dataclasses.replace(cfg.mamba, d_state=8, dt_rank=8),
+        rwkv=dataclasses.replace(cfg.rwkv, head_size=32, decay_lora=16),
+        mrope_sections=(4, 6, 6),
+        dtype="float32", param_dtype="float32", page_size=8,
+    )
+
+
+def cell_applicable(cfg: ArchConfig, shape: ShapeSpec
+                    ) -> Tuple[bool, str]:
+    """(runnable, reason) for an (arch x shape) cell."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 500k-token dense KV "
+                       "decode excluded per assignment (DESIGN.md §4)")
+    return True, ""

@@ -1,0 +1,16 @@
+"""RWKV-6 (Finch) 1.6B — attention-free, data-dependent decay
+[arXiv:2404.05892].  DESIGN.md §5: the paper's indirection-collapse is
+inapplicable (no KV block table); implemented without the technique."""
+from repro.configs import ArchConfig, LayerSpec
+from repro.models.rwkv import RWKVSpec
+
+CONFIG = ArchConfig(
+    name="rwkv6-1.6b", family="ssm",
+    n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=7168, vocab=65536, head_dim=64,
+    pattern=(LayerSpec(kind="rwkv", mlp="rwkv_cm"),),
+    norm="layernorm", rope="none",
+    rwkv=RWKVSpec(head_size=64, decay_lora=64),
+    sub_quadratic=True,
+    source="arXiv:2404.05892",
+)

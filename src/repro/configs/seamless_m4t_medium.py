@@ -1,0 +1,17 @@
+"""SeamlessM4T-medium — encoder-decoder, multimodal [arXiv:2308.11596].
+
+The audio frontend is a STUB per the assignment: input_specs() supplies
+precomputed frame embeddings (B, S_enc, d_model).  Deviation note: we use
+RoPE for self-attention in place of upstream relative/sinusoidal positions
+(DESIGN.md §8)."""
+from repro.configs import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-medium", family="audio",
+    n_layers=12, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab=256206, head_dim=64,
+    pattern=(LayerSpec(kind="attn", mlp="gelu"),),
+    norm="layernorm", rope="rope", rope_theta=10000.0,
+    enc_dec=True, n_enc_layers=12, frontend="audio",
+    source="arXiv:2308.11596",
+)

@@ -1,0 +1,232 @@
+"""Hardware constants and analytical baseline models (paper §4.1).
+
+The paper's own methodology: Tiara latencies are cycle-accurate on a
+calibrated simulator (5 ns clock, 150-cycle PCIe DMA, 500-cycle RDMA RTT);
+the non-Tiara baselines are *analytical models* with published constants.
+This module carries those constants and the baseline models; the Tiara
+side is `repro.core.simulator` (trace-driven, cycle-level).
+
+Every constant is either quoted directly from the paper (marked [paper])
+or calibrated to reproduce a number the paper reports (marked [calib],
+with the anchor).  Benchmarks print derived vs. paper-claimed side by side.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    # --- clock & fabric [paper §4.1] -----------------------------------
+    clk_ns: float = 5.0                  # 200 MHz MP clock
+    pcie_dma_cycles: int = 150           # 0.75 us host DRAM access via PCIe
+    rdma_rtt_cycles: int = 500           # 2.5 us RDMA Read RTT
+    n_mps: int = 8
+    tasks_per_mp: int = 12               # 96 dispatcher slots
+    # --- bandwidths ------------------------------------------------------
+    wire_gbps: float = 100.0             # 100 GbE
+    wire_eff_gbs: float = 12.0           # effective line rate [paper §4.6]
+    pcie_gbs: float = 12.8               # PCIe 3 x16 effective bulk
+    # PCIe small-request channel: one outstanding DMA issued per
+    # ``dma_issue_cycles`` (random 64 B read rate ~100 M/s) [calib:
+    # anchors Tiara graph throughput ~29.5 Mops at depth 3]
+    dma_issue_cycles: int = 2
+    # --- MP micro-costs ---------------------------------------------------
+    instr_cycles: int = 1                # scalar FSM, 1 op/cycle
+    dispatch_cycles: int = 4             # task setup: op_id lookup + regs
+    # --- baseline systems -------------------------------------------------
+    rtt_us: float = 2.5                  # [paper]
+    rpc_dispatch_us: float = 1.5         # [paper]
+    rpc_hop_us: float = 0.17             # cached-DRAM hop [paper]
+    rpc_core_rate_mops: float = 0.222    # [calib: 16 cores = 3.55 Mops §4.2]
+    rpc_cores: int = 16                  # paper's RPC baseline core count
+    rpc_cores_sat: int = 22              # saturation configuration
+    redn_wr_us: float = 1.1              # per chained WR [paper]
+    prism_hop_us: float = 0.5            # [paper]
+    rdma_verb_mops: float = 26.0         # [calib: RedN "26x below RDMA at
+    #                                       depth 1" with RedN ~1 Mops §4.2]
+    client_wr_build_us: float = 1.2      # client-side WR construction
+    #                                    # [calib: batched RDMA 2.7 GB/s at
+    #                                    #  4 KB and ~4.3 GB/s at 8 KB, Fig 10]
+    rpc_per_expert_us: float = 1.225     # [calib: RPC 41.7 us at k=32 §4.5]
+
+    @property
+    def dma_us(self) -> float:
+        return self.pcie_dma_cycles * self.clk_ns / 1e3
+
+    @property
+    def slots(self) -> int:
+        return self.n_mps * self.tasks_per_mp
+
+    @property
+    def wire_bytes_per_us(self) -> float:
+        return self.wire_eff_gbs * 1e3
+
+    @property
+    def pcie_bytes_per_us(self) -> float:
+        return self.pcie_gbs * 1e3
+
+
+DEFAULT_HW = HW()
+
+
+# =============================================================================
+# Analytical baselines — one-sided RDMA, RPC, RedN, PRISM
+# =============================================================================
+
+def rdma_chain_latency_us(depth: int, hw: HW = DEFAULT_HW) -> float:
+    """Dependent chain of ``depth`` one-sided reads: depth x RTT."""
+    return depth * hw.rtt_us
+
+
+def rdma_chain_throughput_mops(depth: int, hw: HW = DEFAULT_HW) -> float:
+    """Verb rate divided across the ``depth`` verbs each op needs."""
+    return hw.rdma_verb_mops / max(depth, 1)
+
+
+def rpc_latency_us(hops: int, hw: HW = DEFAULT_HW) -> float:
+    """One RTT + dispatch + node-local cached-DRAM hops."""
+    return hw.rtt_us + hw.rpc_dispatch_us + hops * hw.rpc_hop_us
+
+
+def rpc_throughput_mops(hops: int, hw: HW = DEFAULT_HW,
+                        cores: int = 0) -> float:
+    del hops  # the paper's RPC rate is message-rate-bound, not hop-bound
+    return (cores or hw.rpc_cores) * hw.rpc_core_rate_mops
+
+
+def redn_latency_us(wrs: int, hw: HW = DEFAULT_HW) -> float:
+    """Doorbell-ordered WR chain on the memory-side NIC: 1 RTT + per-WR
+    fetch cost (RedN's throughput killer, paper §2.2)."""
+    return hw.rtt_us + wrs * hw.redn_wr_us
+
+
+def redn_throughput_mops(wrs: int, hw: HW = DEFAULT_HW) -> float:
+    """8 processing units serialized by doorbell ordering."""
+    return min(hw.n_mps / (wrs * hw.redn_wr_us), 1.0)
+
+
+def prism_latency_us(hops: int, hw: HW = DEFAULT_HW) -> float:
+    return hw.rtt_us + hops * hw.prism_hop_us
+
+
+def prism_throughput_mops(hops: int, hw: HW = DEFAULT_HW) -> float:
+    """PRISM tracks RDMA (NIC-native, no doorbell ordering) [paper §4.2]."""
+    return rdma_chain_throughput_mops(hops, hw)
+
+
+# --- workload-specific baselines -------------------------------------------
+
+def rdma_ptw_latency_us(levels: int = 3, hw: HW = DEFAULT_HW) -> float:
+    """k levels + final data fetch: (k+1) RTTs (Table 1)."""
+    return (levels + 1) * hw.rtt_us
+
+
+def rdma_lock_latency_us(hw: HW = DEFAULT_HW) -> float:
+    """CAS + read + 2 replica writes + release: 5 sequential RTTs."""
+    return 5 * hw.rtt_us
+
+
+def tiara_lock_latency_us(hw: HW = DEFAULT_HW) -> float:
+    """Client->primary, local CAS + parallel replica writes, ack: 2 RTTs."""
+    return 2 * hw.rtt_us
+
+
+def redn_lock_latency_us(hw: HW = DEFAULT_HW) -> float:
+    """1 RTT but ~6 WRs of doorbell-ordered chain."""
+    return hw.rtt_us + 6 * hw.redn_wr_us
+
+
+def rpc_lock_latency_us(hw: HW = DEFAULT_HW) -> float:
+    return 2 * hw.rtt_us + hw.rpc_dispatch_us + 4 * hw.rpc_hop_us
+
+
+# Contention scaling factors, calibrated to Fig. 9's reported degradations
+# between 1 and 16 clients (RDMA 2.5x, RedN 4.9x, RPC ~1.2x; Tiara read off
+# the figure at ~1.9x).  latency(c) = latency(1) * (1 + alpha * (c - 1)).
+LOCK_CONTENTION_ALPHA = {
+    "rdma": (2.5 - 1) / 15,
+    "redn": (4.9 - 1) / 15,
+    "rpc": (1.2 - 1) / 15,
+    "tiara": (1.94 - 1) / 15,
+}
+
+
+def lock_latency_contended_us(system: str, clients: int,
+                              hw: HW = DEFAULT_HW) -> float:
+    base = {
+        "rdma": rdma_lock_latency_us(hw),
+        "redn": redn_lock_latency_us(hw),
+        "rpc": rpc_lock_latency_us(hw),
+        "tiara": tiara_lock_latency_us(hw),
+    }[system]
+    return base * (1 + LOCK_CONTENTION_ALPHA[system] * (clients - 1))
+
+
+# --- PagedAttention / bulk gather baselines (Fig. 10) ------------------------
+
+def batched_rdma_gather_gbs(total_bytes: int, block_bytes: int,
+                            hw: HW = DEFAULT_HW) -> float:
+    """Optimally batched RDMA: 1 RTT for the block table, then the client
+    builds one WR per block and posts the batch (Table 1 footnote).  WR
+    construction happens before the second round can complete, so it
+    serializes with the transfer — this is what keeps batched RDMA at
+    2.7 GB/s for 4 KB blocks in Fig. 10."""
+    n = max(total_bytes // block_bytes, 1)
+    build_us = n * hw.client_wr_build_us
+    transfer_us = total_bytes / hw.wire_bytes_per_us
+    lat = 2 * hw.rtt_us + build_us + transfer_us
+    return total_bytes / lat / 1e3  # GB/s
+
+def rpc_gather_gbs(total_bytes: int, block_bytes: int,
+                   hw: HW = DEFAULT_HW) -> float:
+    """Server-side RPC resolves and streams; per-block touch cost on the
+    server CPU plus wire time."""
+    n = max(total_bytes // block_bytes, 1)
+    per_block_us = hw.rpc_hop_us * 2
+    lat = hw.rtt_us + hw.rpc_dispatch_us + max(n * per_block_us,
+                                               total_bytes / hw.wire_bytes_per_us)
+    return total_bytes / lat / 1e3
+
+
+def redn_gather_gbs(total_bytes: int, block_bytes: int,
+                    hw: HW = DEFAULT_HW) -> float:
+    """WR chain per block: doorbell ordering costs ~1.1 us per block."""
+    n = max(total_bytes // block_bytes, 1)
+    lat = hw.rtt_us + max(n * hw.redn_wr_us,
+                          total_bytes / hw.wire_bytes_per_us)
+    return total_bytes / lat / 1e3
+
+
+# --- MoE expert gather (§4.5) ------------------------------------------------
+
+def rdma_moe_latency_us(k: int, slab_bytes: int = 8192,
+                        hw: HW = DEFAULT_HW) -> float:
+    """2 RTTs (table read, then batched slab reads) + wire serialization.
+    [calib: the paper's 26.7 us at k=32 is exactly 2xRTT + 256 KB/12 GB/s,
+    i.e. it charges no WR-build cost here, unlike Fig. 10.]"""
+    return 2 * hw.rtt_us + k * slab_bytes / hw.wire_bytes_per_us
+
+
+def rpc_moe_latency_us(k: int, slab_bytes: int = 8192,
+                       hw: HW = DEFAULT_HW) -> float:
+    """Per-expert dispatch dominates as k grows (paper §4.5).
+    [calib: 41.7 us at k=32 = RTT + 32 x 1.225 us.]"""
+    del slab_bytes
+    return hw.rtt_us + k * hw.rpc_per_expert_us
+
+
+# --- offload crossover model (Figs. 2 & 3) -----------------------------------
+
+def offload_chain_latency_us(host_mem_us: float, depth: int,
+                             hw: HW = DEFAULT_HW) -> float:
+    """Generic memory-side offload: 1 RTT + depth x host-memory accesses.
+    Offloading beats client-side RDMA iff host_mem_us < RTT (Fig. 3)."""
+    return hw.rtt_us + depth * host_mem_us
+
+
+BF2_HOST_ACCESS_US = 1.7      # BlueField-2 internal RDMA hop [paper §2.2]
+BF3_DPA_HOST_ACCESS_US = 0.85  # BF-3 DPA datasheet [paper §2.2]
+TIARA_HOST_ACCESS_US = 0.75    # PCIe DMA [paper]
+BF2_CABLE_RTT_US = 1.9         # back-to-back DAC cable [paper §2.2]

@@ -1,0 +1,207 @@
+"""Region-based disaggregated memory model.
+
+A memory *pool* is the flat word-addressed DRAM of one host (one row of the
+``(n_devices, pool_words)`` int64 array the VM executes against).  Hosts in
+a Tiara deployment register *regions* — power-of-two-sized windows — and
+grant sets of regions to tenants.  Operators address memory exclusively as
+``(device, region_id, offset)``; the region id must be statically declared
+(verified at registration), and the offset is masked by the region size, so
+the data path performs no bounds check (DESIGN.md §2).
+
+The same layout is shared by every host in the pool (a common simplification
+for symmetric memory blades); per-host private layouts would only change the
+bookkeeping here, not the ISA or the VM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import isa
+
+
+def _is_pow2(x: int) -> bool:
+    return x > 0 and (x & (x - 1)) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """A registered memory window (word granularity, power-of-two size)."""
+
+    rid: int
+    name: str
+    base: int           # word offset within the host pool
+    size: int           # words, power of two
+    writable: bool = True
+
+    def __post_init__(self):
+        if not _is_pow2(self.size):
+            raise ValueError(f"region {self.name}: size {self.size} not a power of two")
+        if self.base < 0:
+            raise ValueError(f"region {self.name}: negative base")
+
+    @property
+    def mask(self) -> int:
+        return self.size - 1
+
+    @property
+    def end(self) -> int:
+        return self.base + self.size
+
+
+class RegionTable:
+    """Host-side region registry; the static side of the memory subsystem.
+
+    The table compiles to three dense int64 vectors (base/mask/writable)
+    which the VM closes over as compile-time constants — region metadata
+    never travels on the data path.
+    """
+
+    def __init__(self, pool_words: int):
+        if pool_words <= 0:
+            raise ValueError("pool must be non-empty")
+        self.pool_words = int(pool_words)
+        self._regions: List[Region] = []
+        self._by_name: Dict[str, Region] = {}
+
+    def register(self, name: str, size_words: int, *, base: Optional[int] = None,
+                 writable: bool = True, align: bool = True) -> Region:
+        """Register a region; allocates after the current high-water mark."""
+        if name in self._by_name:
+            raise ValueError(f"region {name!r} already registered")
+        if base is None:
+            base = self.high_water
+            if align and size_words > 0:
+                # Align the base to the region size so wrapped offsets stay
+                # inside naturally aligned hardware pages.
+                base = (base + size_words - 1) & ~(size_words - 1)
+        region = Region(rid=len(self._regions), name=name, base=base,
+                        size=size_words, writable=writable)
+        if region.end > self.pool_words:
+            raise ValueError(
+                f"region {name!r} [{region.base}, {region.end}) exceeds pool "
+                f"of {self.pool_words} words")
+        for other in self._regions:
+            if region.base < other.end and other.base < region.end:
+                raise ValueError(f"region {name!r} overlaps {other.name!r}")
+        self._regions.append(region)
+        self._by_name[name] = region
+        return region
+
+    @property
+    def high_water(self) -> int:
+        return max((r.end for r in self._regions), default=0)
+
+    def __len__(self) -> int:
+        return len(self._regions)
+
+    def __iter__(self):
+        return iter(self._regions)
+
+    def __getitem__(self, key) -> Region:
+        if isinstance(key, str):
+            return self._by_name[key]
+        return self._regions[key]
+
+    def rid(self, name: str) -> int:
+        return self._by_name[name].rid
+
+    def names(self) -> List[str]:
+        return [r.name for r in self._regions]
+
+    def as_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(base, mask, writable) int64 vectors, one entry per region."""
+        n = len(self._regions)
+        base = np.zeros(n, dtype=np.int64)
+        mask = np.zeros(n, dtype=np.int64)
+        writable = np.zeros(n, dtype=np.int64)
+        for r in self._regions:
+            base[r.rid] = r.base
+            mask[r.rid] = r.mask
+            writable[r.rid] = int(r.writable)
+        return base, mask, writable
+
+
+@dataclasses.dataclass(frozen=True)
+class Grant:
+    """A tenant's capability: which regions it may read / write.
+
+    The verifier checks an operator's statically declared region accesses
+    against its tenant's grant at registration time; after that the data
+    path runs with no per-access check (the paper's multi-tenant story).
+    """
+
+    tenant: str
+    readable: frozenset
+    writable: frozenset
+
+    @staticmethod
+    def of(tenant: str, readable: Iterable[int],
+           writable: Iterable[int] = ()) -> "Grant":
+        readable = frozenset(int(r) for r in readable)
+        writable = frozenset(int(w) for w in writable)
+        return Grant(tenant=tenant, readable=readable | writable,
+                     writable=writable)
+
+    @staticmethod
+    def all_of(table: RegionTable, tenant: str = "root") -> "Grant":
+        rids = [r.rid for r in table]
+        wids = [r.rid for r in table if r.writable]
+        return Grant.of(tenant, rids, wids)
+
+
+def next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def packed_table(specs: Sequence[Tuple[str, int]], *,
+                 extra_words: int = 0) -> RegionTable:
+    """Build a RegionTable sized exactly for ``specs`` (name, size_words
+    rounded up to a power of two), accounting for natural alignment."""
+    cursor = 0
+    layout = []
+    specs = [(name, next_pow2(size)) for name, size in specs]
+    for name, size in specs:
+        base = (cursor + size - 1) & ~(size - 1) if size > 0 else cursor
+        layout.append((name, base, size))
+        cursor = base + size
+    rt = RegionTable(pool_words=cursor + extra_words)
+    for name, base, size in layout:
+        rt.register(name, size, base=base)
+    return rt
+
+
+def make_pool(n_devices: int, table: RegionTable,
+              fill: int = 0) -> np.ndarray:
+    """Allocate the (n_devices, pool_words) int64 backing store."""
+    mem = np.full((n_devices, table.pool_words), fill, dtype=np.int64)
+    return mem
+
+
+def write_region(mem: np.ndarray, table: RegionTable, device: int,
+                 region: str, data: Sequence[int], offset: int = 0) -> None:
+    """Host-side (control path) helper to populate a region."""
+    r = table[region]
+    data = np.asarray(data, dtype=np.int64)
+    if offset + data.size > r.size:
+        raise ValueError(f"write of {data.size} words at {offset} exceeds "
+                         f"region {region!r} ({r.size} words)")
+    mem[device, r.base + offset: r.base + offset + data.size] = data
+
+
+def read_region(mem: np.ndarray, table: RegionTable, device: int,
+                region: str, offset: int = 0,
+                count: Optional[int] = None) -> np.ndarray:
+    r = table[region]
+    if count is None:
+        count = r.size - offset
+    if offset + count > r.size:
+        raise ValueError("read exceeds region")
+    return np.asarray(mem[device, r.base + offset: r.base + offset + count])
+
+
+def bytes_to_words(n_bytes: int) -> int:
+    return (n_bytes + isa.WORD_BYTES - 1) // isa.WORD_BYTES

@@ -1,0 +1,120 @@
+"""Operator registry — the NIC's control plane.
+
+Models one Tiara NIC: a region table over the host pool, per-tenant grants,
+and the 256-entry ``op_id -> start_pc`` dispatch table (paper §3).
+``register()`` is the eBPF-load moment: compile output goes through the
+static verifier against the *tenant's* grant; only then does the operator
+get a slot.  ``invoke()`` is the data path — O(1) dispatch, no checks.
+
+The instruction stores are per-MP BRAMs of 1024 entries; we model one
+shared store and enforce the aggregate capacity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Set
+
+import numpy as np
+
+from repro.core import isa, vm
+from repro.core.memory import Grant, RegionTable
+from repro.core.program import TiaraProgram
+from repro.core.verifier import VerifiedOperator, verify
+
+
+class RegistrationError(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class Slot:
+    op_id: int
+    tenant: str
+    verified: VerifiedOperator
+    start_pc: int
+
+
+class OperatorRegistry:
+    def __init__(self, regions: RegionTable, *, n_devices: int = 1,
+                 max_steps: Optional[int] = None):
+        self.regions = regions
+        self.n_devices = int(n_devices)
+        self.max_steps = max_steps
+        self._grants: Dict[str, Grant] = {}
+        self._slots: Dict[int, Slot] = {}
+        self._by_name: Dict[str, int] = {}
+        self._store_used = 0
+
+    # -- tenants --------------------------------------------------------
+
+    def add_tenant(self, grant: Grant) -> None:
+        self._grants[grant.tenant] = grant
+
+    def grant_of(self, tenant: str) -> Grant:
+        if tenant not in self._grants:
+            raise RegistrationError(f"unknown tenant {tenant!r}")
+        return self._grants[tenant]
+
+    # -- registration (control path) -------------------------------------
+
+    def register(self, tenant: str, program: TiaraProgram) -> int:
+        grant = self.grant_of(tenant)
+        kwargs = {}
+        if self.max_steps is not None:
+            kwargs["max_steps"] = self.max_steps
+        verified = verify(program, grant=grant, regions=self.regions,
+                          **kwargs)
+        if len(self._slots) >= isa.OP_TABLE_SIZE:
+            raise RegistrationError("op_id table full (256 entries)")
+        if self._store_used + program.n_instr > isa.INSTR_STORE_SIZE:
+            raise RegistrationError(
+                f"instruction store full: {self._store_used} + "
+                f"{program.n_instr} > {isa.INSTR_STORE_SIZE}")
+        op_id = len(self._slots)
+        self._slots[op_id] = Slot(op_id=op_id, tenant=tenant,
+                                  verified=verified,
+                                  start_pc=self._store_used)
+        self._store_used += program.n_instr
+        self._by_name[f"{tenant}/{program.name}"] = op_id
+        return op_id
+
+    def lookup(self, tenant: str, name: str) -> int:
+        return self._by_name[f"{tenant}/{name}"]
+
+    def __getitem__(self, op_id: int) -> Slot:
+        return self._slots[op_id]
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    @property
+    def store_used(self) -> int:
+        return self._store_used
+
+    def dispatch_table(self) -> np.ndarray:
+        """The 256-entry op_id -> start_pc hardware table (-1 = empty)."""
+        t = np.full(isa.OP_TABLE_SIZE, -1, dtype=np.int64)
+        for op_id, slot in self._slots.items():
+            t[op_id] = slot.start_pc
+        return t
+
+    # -- invocation (data path) -------------------------------------------
+
+    def invoke(self, op_id: int, mem: np.ndarray,
+               params: Sequence[int] = (), *, home: int = 0,
+               failed: Optional[Set[int]] = None) -> vm.InvokeResult:
+        slot = self._slots[op_id]
+        return vm.invoke(slot.verified, self.regions, mem, params,
+                         home=home, failed=failed)
+
+    def dump(self) -> str:
+        lines = []
+        for op_id, slot in sorted(self._slots.items()):
+            p = slot.verified.program
+            lines.append(
+                f"op {op_id:3d}  tenant={slot.tenant:<12s} "
+                f"{p.name:<20s} {p.n_instr:3d} instrs  "
+                f"bound={slot.verified.step_bound:<8d} "
+                f"regions r={p.regions_read} w={p.regions_written}")
+        return "\n".join(lines)

@@ -1,0 +1,370 @@
+"""JAX execution engine for verified Tiara operators.
+
+One memory processor (MP) is modeled as a ``lax.while_loop`` whose carry is
+the architectural state of the paper's Fig. 4 datapath — pc, the 16x64 b
+register file, the depth-8 loop stack, the in-flight async counter — plus
+the memory pool itself.  Each step decodes ``code[pc]`` (the program is a
+compile-time constant: the "BRAM instruction store") and dispatches through
+``lax.switch``.
+
+The *verified step bound* is the loop fuel: registration-time verification
+proves the VM can never hit it, and the property tests assert exactly that.
+
+Semantics are defined by ``repro.core.pyvm`` — keep the two in lockstep.
+All ISA values are int64; because x64 mode is not enabled globally (model
+code runs in default 32-bit mode), every entry point here wraps execution
+in a local x64 configuration context.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from functools import partial
+from typing import Dict, NamedTuple, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import isa
+from repro.core.isa import (Alu, Op, FLAG_ASYNC, FLAG_DEV_REG,
+                            FLAG_DSTDEV_REG, FLAG_IMMB, FLAG_LEN_REG,
+                            FLAG_MREG, FLAG_SRCDEV_REG, FLAG_THR_REG,
+                            DEV_LOCAL, ERR_REG)
+from repro.core.memory import RegionTable
+from repro.core.verifier import VerifiedOperator
+
+_REG_MASK = isa.NUM_REGS - 1
+
+
+@contextlib.contextmanager
+def x64():
+    """Locally enable 64-bit mode (the ISA is 64-bit; models stay 32-bit)."""
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_enable_x64", old)
+
+
+class VMState(NamedTuple):
+    pc: jnp.ndarray          # i64 scalar
+    regs: jnp.ndarray        # i64[16]
+    lstack: jnp.ndarray      # i64[8, 3]  (start, end, remaining)
+    lsp: jnp.ndarray         # i64 scalar
+    inflight: jnp.ndarray    # i64 scalar
+    mem: jnp.ndarray         # i64[n_dev, pool_words]
+    halted: jnp.ndarray      # bool
+    ret: jnp.ndarray         # i64
+    status: jnp.ndarray      # i64
+    steps: jnp.ndarray       # i64
+    ctrl: jnp.ndarray        # i64: 0 = advance (loop-iterate check), 1 = taken jump (pop)
+    pc_new: jnp.ndarray      # i64
+
+
+class VMResult(NamedTuple):
+    mem: jnp.ndarray
+    ret: jnp.ndarray
+    status: jnp.ndarray
+    steps: jnp.ndarray
+    regs: jnp.ndarray
+
+
+def _i64(x) -> jnp.ndarray:
+    return jnp.asarray(x, dtype=jnp.int64)
+
+
+def build_vm(op: VerifiedOperator, regions: RegionTable, n_devices: int):
+    """Returns a jit-compiled ``f(mem, params, home, failed) -> VMResult``.
+
+    ``mem``: int64[n_devices, pool_words]; ``params``: int64[<=8];
+    ``home``: the executing host's device id; ``failed``: bool[n_devices]
+    marking unreachable hosts (async Memcpy to them sets the error flag).
+    Call under ``vm.x64()`` (or use :func:`invoke`).
+    """
+    code_np = np.asarray(op.code, dtype=np.int64)
+    n_instr = int(code_np.shape[0])
+    fuel = int(op.step_bound)
+    base_np, mask_np, _ = regions.as_arrays()
+    # Static memcpy window: the largest cap used by this program.
+    memcpy_caps = [int(r[isa.F_IMM]) for r in code_np
+                   if int(r[isa.F_OP]) == int(Op.MEMCPY)]
+    max_window = int(min(max(memcpy_caps, default=1), isa.MAX_MEMCPY_WORDS))
+    n_dev = int(n_devices)
+
+    def run(mem, params, home, failed):
+        code = jnp.asarray(code_np)
+        base_c = jnp.asarray(base_np)
+        mask_c = jnp.asarray(mask_np)
+        home = _i64(home)
+        mem = jnp.asarray(mem, jnp.int64)
+        failed = jnp.asarray(failed, jnp.bool_)
+
+        regs0 = jnp.zeros(isa.NUM_REGS, jnp.int64)
+        params = jnp.asarray(params, jnp.int64).reshape(-1)
+        regs0 = lax.dynamic_update_slice(regs0, params, (0,)) \
+            if params.shape[0] else regs0
+
+        def dev_of(s: VMState, field, via_reg):
+            dreg = s.regs[field & _REG_MASK]
+            d = jnp.where(via_reg, dreg, field)
+            return jnp.where(d == DEV_LOCAL, home, jnp.mod(d, n_dev))
+
+        def phys(rid, off):
+            return base_c[rid] + (off & mask_c[rid])
+
+        def alu_eval(aop, a, b):
+            sh = b & 63
+            vals = [
+                a + b, a - b, a * b, a & b, a | b, a ^ b,
+                a << sh, lax.shift_right_logical(a, sh),
+                (a == b).astype(jnp.int64), (a != b).astype(jnp.int64),
+                (a < b).astype(jnp.int64), (a >= b).astype(jnp.int64),
+                jnp.minimum(a, b), jnp.maximum(a, b), a, a,
+            ]
+            return jnp.stack(vals)[jnp.clip(aop, 0, 15)]
+
+        def advance(s: VMState, **kw) -> VMState:
+            return s._replace(ctrl=_i64(0), pc_new=s.pc + 1, **kw)
+
+        # --- one branch per opcode ------------------------------------
+        def br_nop(s, row):
+            return advance(s)
+
+        def br_movi(s, row):
+            return advance(s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK]
+                           .set(row[isa.F_IMM]))
+
+        def br_alu(s, row):
+            rhs = jnp.where(row[isa.F_FLAGS] & FLAG_IMMB, row[isa.F_IMM],
+                            s.regs[row[isa.F_B] & _REG_MASK])
+            val = alu_eval(row[isa.F_D], s.regs[row[isa.F_A] & _REG_MASK], rhs)
+            return advance(s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK].set(val))
+
+        def br_load(s, row):
+            dev = dev_of(s, row[isa.F_E],
+                         (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0)
+            addr = phys(row[isa.F_A],
+                        s.regs[row[isa.F_B] & _REG_MASK] + row[isa.F_IMM])
+            val = s.mem[dev, addr]
+            return advance(s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK].set(val))
+
+        def br_store(s, row):
+            dev = dev_of(s, row[isa.F_E],
+                         (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0)
+            addr = phys(row[isa.F_A],
+                        s.regs[row[isa.F_B] & _REG_MASK] + row[isa.F_IMM])
+            val = s.regs[row[isa.F_DST] & _REG_MASK]
+            return advance(s, mem=s.mem.at[dev, addr].set(val))
+
+        def br_memcpy(s, row):
+            flags = row[isa.F_FLAGS]
+            ddev = dev_of(s, row[isa.F_DST], (flags & FLAG_DSTDEV_REG) != 0)
+            sdev = dev_of(s, row[isa.F_C], (flags & FLAG_SRCDEV_REG) != 0)
+            drid, srid = row[isa.F_A], row[isa.F_D]
+            cap = row[isa.F_IMM]
+            lnreg = s.regs[row[isa.F_IMM2] & _REG_MASK]
+            ln = jnp.where(flags & FLAG_LEN_REG,
+                           jnp.clip(lnreg, 0, cap), cap)
+            ln = jnp.minimum(jnp.minimum(ln, mask_c[drid] + 1),
+                             mask_c[srid] + 1)
+            fail = failed[ddev] | failed[sdev]
+            ln = jnp.where(fail, 0, ln)
+            i = jnp.arange(max_window, dtype=jnp.int64)
+            soff = s.regs[row[isa.F_E] & _REG_MASK]
+            doff = s.regs[row[isa.F_B] & _REG_MASK]
+            sphys = base_c[srid] + ((soff + i) & mask_c[srid])
+            dphys = base_c[drid] + ((doff + i) & mask_c[drid])
+            svals = s.mem[sdev, sphys]
+            live = i < ln
+            # Masked lanes all write the lane-0 value to the lane-0 slot so
+            # duplicate scatter indices always carry identical values.
+            val0 = jnp.where(ln > 0, svals[0], s.mem[ddev, dphys[0]])
+            w_idx = jnp.where(live, dphys, dphys[0])
+            w_val = jnp.where(live, svals, val0)
+            mem = s.mem.at[ddev, w_idx].set(w_val)
+            err = jnp.where(fail, s.regs[ERR_REG] | 1, s.regs[ERR_REG])
+            regs = s.regs.at[ERR_REG].set(err)
+            inflight = jnp.where(
+                flags & FLAG_ASYNC,
+                jnp.minimum(s.inflight + 1, isa.MAX_INFLIGHT), s.inflight)
+            return advance(s, mem=mem, regs=regs, inflight=inflight)
+
+        def _br_casa(s, row, is_cas):
+            dev = dev_of(s, row[isa.F_E],
+                         (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0)
+            addr = phys(row[isa.F_A],
+                        s.regs[row[isa.F_B] & _REG_MASK] + row[isa.F_IMM])
+            old = s.mem[dev, addr]
+            hit = old == s.regs[row[isa.F_C] & _REG_MASK]
+            swp = s.regs[row[isa.F_D] & _REG_MASK]
+            new = jnp.where(hit, swp if is_cas else old + swp, old)
+            return advance(
+                s, mem=s.mem.at[dev, addr].set(new),
+                regs=s.regs.at[row[isa.F_DST] & _REG_MASK].set(old))
+
+        def br_cas(s, row):
+            return _br_casa(s, row, True)
+
+        def br_caa(s, row):
+            return _br_casa(s, row, False)
+
+        def br_jump(s, row):
+            cond = row[isa.F_D]
+            lhs = s.regs[row[isa.F_A] & _REG_MASK]
+            rhs = jnp.where(row[isa.F_FLAGS] & FLAG_IMMB, row[isa.F_IMM],
+                            s.regs[row[isa.F_B] & _REG_MASK])
+            take = jnp.where(
+                cond == int(Alu.ALWAYS), True,
+                jnp.where(cond == int(Alu.EQ), lhs == rhs,
+                          jnp.where(cond == int(Alu.NE), lhs != rhs,
+                                    jnp.where(cond == int(Alu.LT), lhs < rhs,
+                                              lhs >= rhs))))
+            return s._replace(
+                ctrl=jnp.where(take, _i64(1), _i64(0)),
+                pc_new=jnp.where(take, s.pc + 1 + row[isa.F_IMM2], s.pc + 1))
+
+        def br_loop(s, row):
+            cap = row[isa.F_IMM]
+            m = jnp.where(row[isa.F_FLAGS] & FLAG_MREG,
+                          jnp.clip(s.regs[row[isa.F_B] & _REG_MASK], 0, cap),
+                          cap)
+            skip = m <= 0
+            frame = jnp.stack([s.pc + 1, s.pc + row[isa.F_IMM2], m])
+            sp = jnp.clip(s.lsp, 0, isa.LOOP_STACK_DEPTH - 1)
+            pushed = s.lstack.at[sp].set(frame)
+            return s._replace(
+                lstack=jnp.where(skip, s.lstack, pushed),
+                lsp=jnp.where(skip, s.lsp, s.lsp + 1),
+                ctrl=_i64(0),
+                pc_new=jnp.where(skip, s.pc + 1 + row[isa.F_IMM2], s.pc + 1))
+
+        def br_wait(s, row):
+            thr = jnp.where(row[isa.F_FLAGS] & FLAG_THR_REG,
+                            s.regs[row[isa.F_A] & _REG_MASK], row[isa.F_IMM])
+            return advance(s, inflight=jnp.minimum(
+                s.inflight, jnp.maximum(thr, 0)))
+
+        def br_ret(s, row):
+            return advance(s, halted=jnp.asarray(True),
+                           ret=s.regs[row[isa.F_A] & _REG_MASK],
+                           status=row[isa.F_IMM])
+
+        branches = [br_nop, br_movi, br_alu, br_load, br_store, br_memcpy,
+                    br_cas, br_caa, br_jump, br_loop, br_wait, br_ret]
+
+        # --- post-step loop bookkeeping --------------------------------
+        def loop_fixup(s: VMState) -> VMState:
+            # taken jump: pop every frame whose body the jump escaped
+            def pop_cond(t):
+                lsp, = t
+                return (lsp > 0) & (s.lstack[jnp.maximum(lsp - 1, 0), 1]
+                                    < s.pc_new)
+
+            def pop_body(t):
+                lsp, = t
+                return (lsp - 1,)
+
+            (pop_lsp,) = lax.while_loop(pop_cond, pop_body, (s.lsp,))
+
+            # normal advance: iterate / pop frames whose body just ended
+            def it_cond(t):
+                stack, lsp, pcn, done = t
+                top_end = stack[jnp.maximum(lsp - 1, 0), 1]
+                return (~done) & (lsp > 0) & (pcn == top_end + 1)
+
+            def it_body(t):
+                stack, lsp, pcn, done = t
+                idx = jnp.maximum(lsp - 1, 0)
+                rem = stack[idx, 2] - 1
+                cont = rem > 0
+                stack2 = stack.at[idx, 2].set(rem)
+                return (jnp.where(cont, stack2, stack),
+                        jnp.where(cont, lsp, lsp - 1),
+                        jnp.where(cont, stack[idx, 0], pcn),
+                        cont)
+
+            it_stack, it_lsp, it_pcn, _ = lax.while_loop(
+                it_cond, it_body,
+                (s.lstack, s.lsp, s.pc_new, jnp.asarray(False)))
+
+            is_jump = s.ctrl == 1
+            return s._replace(
+                pc=jnp.where(is_jump, s.pc_new, it_pcn),
+                lsp=jnp.where(is_jump, pop_lsp, it_lsp),
+                lstack=jnp.where(is_jump, s.lstack, it_stack))
+
+        def step(s: VMState) -> VMState:
+            row = code[jnp.clip(s.pc, 0, n_instr - 1)]
+            opc = jnp.clip(row[isa.F_OP], 0, len(branches) - 1).astype(jnp.int32)
+            s2 = lax.switch(opc, branches, s, row)
+            s2 = s2._replace(steps=s2.steps + 1)
+            return lax.cond(s2.halted, lambda t: t, loop_fixup, s2)
+
+        def cond(s: VMState):
+            return (~s.halted) & (s.pc < n_instr) & (s.steps < fuel)
+
+        init = VMState(
+            pc=_i64(0), regs=regs0,
+            lstack=jnp.zeros((isa.LOOP_STACK_DEPTH, 3), jnp.int64),
+            lsp=_i64(0), inflight=_i64(0), mem=mem,
+            halted=jnp.asarray(False), ret=_i64(0),
+            status=_i64(isa.STATUS_FELL_OFF), steps=_i64(0),
+            ctrl=_i64(0), pc_new=_i64(0))
+
+        final = lax.while_loop(cond, step, init)
+        status = jnp.where(
+            final.halted, final.status,
+            jnp.where(final.steps >= fuel, _i64(isa.STATUS_FUEL),
+                      _i64(isa.STATUS_FELL_OFF)))
+        return VMResult(mem=final.mem, ret=final.ret, status=status,
+                        steps=final.steps, regs=final.regs)
+
+    return jax.jit(run, static_argnames=())
+
+
+_VM_CACHE: Dict[Tuple, object] = {}
+
+
+def invoke(op: VerifiedOperator, regions: RegionTable, mem: np.ndarray,
+           params: Sequence[int] = (), *, home: int = 0,
+           failed: Optional[Set[int]] = None) -> "InvokeResult":
+    """Convenience entry point: numpy in, numpy out, x64 handled."""
+    n_dev = int(mem.shape[0])
+    base, mask, _ = regions.as_arrays()
+    # content-keyed cache (object ids recycle after GC — never key on id)
+    key = (op.code.tobytes(), base.tobytes(), mask.tobytes(),
+           op.step_bound, n_dev)
+    with x64():
+        fn = _VM_CACHE.get(key)
+        if fn is None:
+            fn = build_vm(op, regions, n_dev)
+            _VM_CACHE[key] = fn
+        p = np.zeros(max(len(params), 1), dtype=np.int64)
+        for i, v in enumerate(params):
+            p[i] = np.int64(np.uint64(v & (2**64 - 1)).astype(np.uint64).view(np.int64)) \
+                if v > 2**63 - 1 or v < -2**63 else np.int64(v)
+        failed_mask = np.zeros(n_dev, dtype=bool)
+        for f in (failed or ()):
+            failed_mask[f] = True
+        out = fn(jnp.asarray(mem, jnp.int64), jnp.asarray(p),
+                 np.int64(home), jnp.asarray(failed_mask))
+        out = jax.tree_util.tree_map(np.asarray, out)
+    return InvokeResult(mem=out.mem, ret=int(out.ret), status=int(out.status),
+                        steps=int(out.steps), regs=out.regs)
+
+
+@dataclasses.dataclass
+class InvokeResult:
+    mem: np.ndarray
+    ret: int
+    status: int
+    steps: int
+    regs: np.ndarray
+
+    @property
+    def ok(self) -> bool:
+        return self.status == isa.STATUS_OK

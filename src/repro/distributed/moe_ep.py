@@ -1,0 +1,134 @@
+"""Expert-parallel MoE with fully local dispatch — §Perf cell 2.
+
+Baseline ``moe_apply`` expresses dispatch as dense scatters into
+(E, C, D) buffers and lets GSPMD partition them; on the 16x16 mesh XLA
+routes the token buffers with PB-scale all-gather/all-reduce chains
+(EXPERIMENTS.md §Perf).  This variant applies the paper's move at the MoE
+layer: *the tokens are the requests; resolve them where the experts
+live.*  Under ``shard_map``:
+
+  * activations are dp-sharded and model-replicated, so every model rank
+    already holds its dp-shard's tokens: it dispatches *locally* into
+    buffers for its OWN E/16 experts — no dispatch collective at all;
+  * expert weights are EP-sharded over model and FSDP-sharded over data:
+    the data-dim shards all-gather once per layer (standard FSDP);
+  * each rank's expert outputs combine with ONE psum over the model axis
+    (every token's routed expert lives on exactly one rank).
+
+Per layer the wire carries O(weights/16 + activations) instead of the
+scatter cascade.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.models.moe import MoESpec, _capacity
+
+
+def make_moe_ep(mesh: Mesh, dp: Tuple[str, ...], spec: MoESpec,
+                model_axis: str = "model"):
+    """Returns fn(params, x) -> (y, aux) matching moe_apply semantics."""
+    msize = mesh.shape[model_axis]
+    assert spec.n_experts % msize == 0, (spec.n_experts, msize)
+    e_local = spec.n_experts // msize
+    data_axis = "data"
+
+    def local(router, wi, wg, wo, shared, x):
+        # x (B_local, S, D) — model-replicated; weights: router (D, E),
+        # wi/wg (E_local, D/dsz, F), wo (E_local, F, D/dsz)
+        b, s, d = x.shape
+        t = b * s
+        xf = x.reshape(t, d)
+        e, k = spec.n_experts, spec.top_k
+        cap = _capacity(t, spec)      # per-dp-shard capacity
+
+        # FSDP: reassemble the D-sharded expert weights once per layer
+        wi_full = lax.all_gather(wi, data_axis, axis=1, tiled=True)
+        wg_full = lax.all_gather(wg, data_axis, axis=1, tiled=True)
+        wo_full = lax.all_gather(wo, data_axis, axis=2, tiled=True)
+
+        logits = (xf @ router).astype(jnp.float32)           # (T, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, eidx = lax.top_k(probs, k)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+        onehot = jax.nn.one_hot(eidx, e, dtype=jnp.int32)
+        flat_oh = onehot.reshape(t * k, e)
+        pos = jnp.cumsum(flat_oh, axis=0) - flat_oh
+        pos = jnp.sum(pos * flat_oh, axis=-1)
+        eflat = eidx.reshape(t * k)
+        keep = pos < cap
+
+        # local dispatch: only this rank's experts
+        midx = lax.axis_index(model_axis)
+        mine = (eflat // e_local) == midx
+        live = (keep & mine).astype(xf.dtype)
+        le = jnp.clip(eflat - midx * e_local, 0, e_local - 1)
+        slot = jnp.minimum(pos, cap - 1)
+        x_rep = jnp.repeat(xf, k, axis=0) * live[:, None]
+        disp = jnp.zeros((e_local, cap, d), xf.dtype)
+        disp = disp.at[le, slot].add(x_rep)
+
+        h = jnp.einsum("ecd,edf->ecf", disp, wi_full.astype(xf.dtype))
+        g = jnp.einsum("ecd,edf->ecf", disp, wg_full.astype(xf.dtype))
+        out_buf = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h,
+                             wo_full.astype(xf.dtype))
+
+        y = out_buf[le, slot] * live[:, None]                # (T*K, D)
+        y = (y.reshape(t, k, d)
+             * gate[..., None].astype(xf.dtype)).sum(axis=1)
+        # every token's expert output lives on exactly one model rank
+        y = lax.psum(y, model_axis)
+
+        if shared is not None:
+            sh_wi, sh_wg, sh_wo = shared
+            # shared expert is TP-sharded over model on F: partial + psum
+            hs = jax.nn.silu(xf @ sh_wg) * (xf @ sh_wi)
+            y = y + lax.psum(hs @ sh_wo, model_axis)
+
+        me = probs.mean(axis=0)
+        ce = onehot.sum(axis=1).astype(jnp.float32).mean(axis=0)
+        balance = spec.balance_coef * e * jnp.sum(me * ce) / k
+        zloss = spec.router_z_coef * jnp.mean(
+            jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+        aux = lax.pmean(balance + zloss, dp)   # tokens are dp-sharded
+        return y.reshape(b, s, d), aux
+
+    # shared expert TP over model on F; D replicated inside the region
+    shared_specs = ((P(None, "model"), P(None, "model"),
+                     P("model", None)) if spec.shared_expert else None)
+
+    def apply(params, x):
+        shared = None
+        if spec.shared_expert:
+            sh = params["shared"]
+            shared = (sh["wi"], sh["wg"], sh["wo"])
+
+        def wrapped(router, wi, wg, wo, x, *maybe_shared):
+            return local(router, wi, wg, wo,
+                         maybe_shared if maybe_shared else None, x)
+
+        in_specs = [P(None, None),                      # router (tiny)
+                    P("model", "data", None),           # wi
+                    P("model", "data", None),           # wg
+                    P("model", None, "data"),           # wo
+                    P(tuple(dp), None, None)]           # x
+        args = [params["router"], params["wi"], params["wg"],
+                params["wo"], x]
+        if shared is not None:
+            in_specs += list(shared_specs)
+            args += list(shared)
+        fn = shard_map(wrapped, mesh=mesh, in_specs=tuple(in_specs),
+                       out_specs=(P(tuple(dp), None, None), P()),
+                       check_rep=False)
+        return fn(*args)
+
+    return apply

@@ -1,0 +1,108 @@
+"""One-round remote indirection resolution — Tiara's 1-RTT on the ICI.
+
+The pod-level Indirection Wall: a consumer shard holds *logical* block ids
+whose translation table and payload pages live on owner shards (co-partitioned: logical id i and
+its physical page belong to the same owner, as each memory node resolves
+into its own DRAM — the paper's setting).  Client-
+side resolution (one-sided-RDMA style) costs one collective round per
+indirection level:
+
+    round 1: gather table entries from owners   (ids -> physical)
+    round 2: gather payload rows from owners    (physical -> data)
+
+``tiara_fetch`` ships the *request* to the owner instead — exactly the
+paper's pre-registered operator executing on the memory side:
+
+    all_to_all(requests) -> owner resolves locally (register-chained
+    loads against its own table+pool shards) -> all_to_all(payloads)
+
+Two collectives total, *independent of indirection depth*, and only
+(requests + payloads) cross the wire — never intermediate pointers.
+``client_side_fetch`` implements the baseline for the same layout; the
+roofline test asserts the round/byte reduction from the lowered HLO.
+
+Layout (per shard, axis size P): table (T/P,) int32 — logical id i owned
+by shard i // (T/P); pool (N/P, R) — physical row p owned by shard
+p // (N/P); ids (n,) per shard, any logical ids.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+
+def _owner_route(ids, owner, n_shards: int, quota: int):
+    """Bucket ids by owner shard with a fixed per-destination quota.
+    Returns (routed (n_shards, quota) int32 with -1 padding,
+             inverse positions to un-permute results)."""
+    n = ids.shape[0]
+    # stable rank of each id within its owner bucket
+    onehot = owner[:, None] == jnp.arange(n_shards)[None, :]
+    rank = jnp.cumsum(onehot, axis=0) - onehot
+    slot = jnp.sum(rank * onehot, axis=1)                    # (n,)
+    ok = slot < quota
+    flat_pos = owner * quota + jnp.minimum(slot, quota - 1)
+    routed = jnp.full((n_shards * quota,), -1, jnp.int32)
+    routed = routed.at[flat_pos].set(jnp.where(ok, ids.astype(jnp.int32),
+                                               -1))
+    return routed.reshape(n_shards, quota), flat_pos, ok
+
+
+def make_tiara_fetch(mesh: Mesh, axis: str, n_logical: int, n_rows: int,
+                     quota: int):
+    """Build the one-round fetch for a pool sharded over ``axis``."""
+    n_shards = mesh.shape[axis]
+    t_shard = n_logical // n_shards
+    r_shard = n_rows // n_shards
+
+    def local(table_l, pool_l, ids):
+        my = lax.axis_index(axis)
+        owner = (ids // t_shard).astype(jnp.int32)
+        routed, flat_pos, ok = _owner_route(ids, owner, n_shards, quota)
+        # --- round trip 1 of 1: ship requests to owners ----------------
+        reqs = lax.all_to_all(routed, axis, 0, 0, tiled=True)
+        reqs = reqs.reshape(n_shards, quota)
+        # --- memory-side resolution: register-chained loads -------------
+        live = reqs >= 0
+        loff = jnp.where(live, reqs - my * t_shard, 0)
+        phys = table_l[jnp.clip(loff, 0, t_shard - 1)]       # chained load 1
+        poff = jnp.where(live, phys - my * r_shard, 0)
+        rows = pool_l[jnp.clip(poff, 0, r_shard - 1)]        # chained load 2
+        rows = jnp.where(live[..., None], rows, 0)
+        # --- reply travels back with the second half of the round trip --
+        back = lax.all_to_all(rows, axis, 0, 0, tiled=True)
+        back = back.reshape(n_shards * quota, -1)
+        out = back[flat_pos] * ok[:, None].astype(back.dtype)
+        return out
+
+    fetch = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis), P(axis, None), P(axis)),
+        out_specs=P(axis))
+
+    def run(table, pool, ids):
+        return fetch(table, pool, ids)
+
+    return run
+
+
+def client_side_fetch(table, pool, ids):
+    """Baseline: client-side resolution.  Under GSPMD with table/pool
+    sharded over the axis, each of the two gathers becomes its own
+    collective round (and moves intermediate pointers + gathered data
+    across shards)."""
+    phys = table[ids]            # round 1: dependent gather on the table
+    return pool[phys]            # round 2: dependent gather on the pool
+
+
+def reference_fetch(table, pool, ids):
+    return np.asarray(pool)[np.asarray(table)[np.asarray(ids)]]

@@ -1,0 +1,119 @@
+"""Tiled causal flash attention (prefill path).
+
+Standard flash-style running softmax with BlockSpec VMEM tiling; GQA is
+handled by mapping each q-head grid index onto its kv head in the
+``index_map`` (no materialized head broadcast).  Sequence-length masking
+rides in SMEM via scalar prefetch, like the paged kernel's block table.
+
+Layout: q (B, QH, S, D); k/v (B, KVH, S, D); out (B, QH, S, D).
+Grid: (B, QH, Sq/bq, Sk/bk), k blocks innermost.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, scale: float, causal: bool):
+    b = pl.program_id(0)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    length = lengths_ref[b]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: skip k blocks strictly above the diagonal band
+    live = (ik * block_k <= iq * block_q + block_q - 1) if causal else True
+
+    @pl.when(jnp.logical_and(live, ik * block_k < length))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qpos = iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kpos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = kpos < length
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_cur
+
+    @pl.when(ik == pl.num_programs(3) - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
+                           lengths: Optional[jax.Array] = None, *,
+                           causal: bool = True,
+                           scale: Optional[float] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    batch, qh, seq_q, head_dim = q.shape
+    _, kvh, seq_k, _ = k.shape
+    assert qh % kvh == 0
+    group = qh // kvh
+    if scale is None:
+        scale = head_dim ** -0.5
+    block_q = min(block_q, seq_q)
+    block_k = min(block_k, seq_k)
+    assert seq_q % block_q == 0 and seq_k % block_k == 0
+    if lengths is None:
+        lengths = jnp.full((batch,), seq_k, jnp.int32)
+
+    grid = (batch, qh, seq_q // block_q, seq_k // block_k)
+    kernel = functools.partial(_flash_kernel, block_q=block_q,
+                               block_k=block_k, scale=float(scale),
+                               causal=causal)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, head_dim),
+                         lambda b, h, iq, ik, ln: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, head_dim),
+                         lambda b, h, iq, ik, ln, g=group: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, head_dim),
+                         lambda b, h, iq, ik, ln, g=group: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, head_dim),
+                               lambda b, h, iq, ik, ln: (b, h, iq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, head_dim), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k, v)

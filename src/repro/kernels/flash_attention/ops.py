@@ -1,0 +1,38 @@
+"""Public jitted entry point for prefill attention."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import (flash_attention_chunked,
+                                               flash_attention_ref)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "impl",
+                                             "block_q", "block_k"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    lengths: Optional[jax.Array] = None, *,
+                    causal: bool = True, scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    impl: str = "auto") -> jax.Array:
+    """Causal (or full) attention, (B, H, S, D) layout, GQA-aware."""
+    if impl == "auto":
+        impl = "kernel" if _on_tpu() else "xla"
+    if impl == "xla":
+        if q.shape[2] >= 2048:     # keep score memory O(S * chunk)
+            return flash_attention_chunked(q, k, v, lengths, causal=causal,
+                                           scale=scale)
+        return flash_attention_ref(q, k, v, lengths, causal=causal,
+                                   scale=scale)
+    return flash_attention_kernel(q, k, v, lengths, causal=causal,
+                                  scale=scale, block_q=block_q,
+                                  block_k=block_k,
+                                  interpret=(impl == "kernel_interpret"))

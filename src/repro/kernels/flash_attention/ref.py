@@ -1,0 +1,91 @@
+"""Pure-jnp oracle for tiled causal attention."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        lengths: Optional[jax.Array] = None, *,
+                        causal: bool = True,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q (B, QH, Sq, D); k/v (B, KVH, Sk, D) with GQA broadcast."""
+    batch, qh, seq_q, head_dim = q.shape
+    _, kvh, seq_k, _ = k.shape
+    group = qh // kvh
+    if scale is None:
+        scale = head_dim ** -0.5
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    qpos = jnp.arange(seq_q)[:, None]
+    kpos = jnp.arange(seq_k)[None, :]
+    mask = jnp.ones((seq_q, seq_k), bool)
+    if causal:
+        mask = kpos <= qpos
+    mask = mask[None, None]
+    if lengths is not None:
+        mask = jnp.logical_and(mask,
+                               kpos[None, None] < lengths[:, None, None, None])
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)   # fully-masked rows
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def flash_attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                            lengths: Optional[jax.Array] = None, *,
+                            causal: bool = True,
+                            scale: Optional[float] = None,
+                            chunk: int = 1024) -> jax.Array:
+    """XLA fallback with O(S * chunk) score memory: lax.scan over query
+    chunks.  This is what the dry-run lowers for long prefill (the Pallas
+    kernel replaces it on real TPUs)."""
+    batch, qh, seq_q, head_dim = q.shape
+    _, kvh, seq_k, _ = k.shape
+    group = qh // kvh
+    if scale is None:
+        scale = head_dim ** -0.5
+    chunk = min(chunk, seq_q)
+    if seq_q % chunk != 0:
+        return flash_attention_ref(q, k, v, lengths, causal=causal,
+                                   scale=scale)
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    n_chunks = seq_q // chunk
+    qc = q.reshape(batch, qh, n_chunks, chunk, head_dim)
+    qc = qc.transpose(2, 0, 1, 3, 4)               # (n, B, H, c, D)
+    kpos = jnp.arange(seq_k)[None, None, None, :]
+    lmask = (kpos < lengths[:, None, None, None]) if lengths is not None \
+        else True
+
+    # checkpoint the chunk: backward recomputes the (B,H,c,S) scores
+    # instead of saving them as scan residuals (hundreds of GB at 32k)
+    @jax.checkpoint
+    def chunk_attn(i, qi):
+        s = jnp.einsum("bhqd,bhkd->bhqk", qi.astype(jnp.float32) * scale,
+                       kr.astype(jnp.float32))
+        mask = jnp.broadcast_to(lmask, s.shape) if lengths is not None \
+            else jnp.ones_like(s, bool)
+        if causal:
+            qpos = i * chunk + jnp.arange(chunk)[None, None, :, None]
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        s = jnp.where(mask, s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(jnp.isnan(p), 0.0, p)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+        return o.astype(q.dtype)
+
+    def body(_, args):
+        i, qi = args
+        return None, chunk_attn(i, qi)
+
+    _, outs = jax.lax.scan(body, None,
+                           (jnp.arange(n_chunks), qc))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(batch, qh, seq_q, head_dim)
+    return out

@@ -1,0 +1,123 @@
+"""Paged-attention decode kernel — Tiara's register-chained load on TPU.
+
+The Indirection Wall on a TPU: decode attention must read KV data whose
+HBM location is known only through the Block Table.  A host-driven design
+gathers pages with XLA ops (extra HBM round trips and a materialized
+contiguous copy).  Here the *loaded value is the next address*: the block
+table rides in SMEM via scalar prefetch, and each grid step's BlockSpec
+``index_map`` dereferences it to choose which HBM page the next DMA brings
+into VMEM — the exact analogue of a Tiara MP chaining ``Load``s, with the
+async-copy/compute overlap playing the paper's ``async Memcpy + Wait``.
+
+Layout:
+  q            (B, KVH, G, D)     one new token per sequence, grouped GQA
+  k/v_pages    (P, page, KVH, D)  the paged KV pool
+  block_tables (B, maxp) int32    logical page i of seq b -> physical page
+  lengths      (B,) int32         tokens currently in each sequence
+  out          (B, KVH, G, D)
+
+Grid: (B, KVH, maxp), pages innermost; flash-style running softmax in
+VMEM scratch.  Pages past a sequence's length still prefetch (the table
+pads with page 0) but their compute is skipped with ``pl.when`` — the
+standard dummy-fetch idiom for data-dependent grids.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(lengths_ref, tables_ref,      # scalar prefetch (SMEM)
+                       q_ref, k_ref, v_ref,          # VMEM blocks
+                       o_ref,                        # VMEM output block
+                       m_scr, l_scr, acc_scr,        # VMEM scratch
+                       *, page_size: int, scale: float):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    length = lengths_ref[b]
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(i * page_size < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (page, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)            # (page, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, page)
+        pos = i * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_scr[...]                                  # (G, 1)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_cur
+
+    @pl.when(i == pl.num_programs(2) - 1)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           lengths: jax.Array, *,
+                           scale: Optional[float] = None,
+                           interpret: bool = False) -> jax.Array:
+    """Raw pallas_call wrapper; use repro.kernels.paged_attention.ops for
+    the jitted public entry point."""
+    batch, kvh, group, head_dim = q.shape
+    n_pages, page_size, kvh_p, head_dim_p = k_pages.shape
+    assert (kvh_p, head_dim_p) == (kvh, head_dim), "KV layout mismatch"
+    assert v_pages.shape == k_pages.shape
+    b_t, max_pages = block_tables.shape
+    assert b_t == batch and lengths.shape == (batch,)
+    if scale is None:
+        scale = head_dim ** -0.5
+
+    grid = (batch, kvh, max_pages)
+    kernel = functools.partial(_paged_attn_kernel, page_size=page_size,
+                               scale=float(scale))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, group, head_dim),
+                         lambda b, h, i, ln, bt: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, head_dim),
+                         lambda b, h, i, ln, bt: (bt[b, i], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, head_dim),
+                         lambda b, h, i, ln, bt: (bt[b, i], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, head_dim),
+                               lambda b, h, i, ln, bt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, head_dim), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32),
+      q, k_pages, v_pages)

@@ -1,0 +1,55 @@
+"""Public jitted entry point for paged decode attention.
+
+Chooses the Pallas kernel on TPU (interpret-mode on CPU for validation)
+or the pure-jnp reference as an XLA fallback, and handles the
+(B, QH, D) <-> (B, KVH, G, D) GQA grouping.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "impl"))
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_tables: jax.Array, lengths: jax.Array, *,
+                    scale: Optional[float] = None,
+                    impl: str = "auto") -> jax.Array:
+    """Decode attention against a paged KV cache.
+
+    q: (B, QH, D) — one new token per sequence;
+    k_pages/v_pages: (P, page, KVH, D); block_tables: (B, maxp) int32;
+    lengths: (B,) int32.  QH must be a multiple of KVH (GQA).
+
+    impl: 'auto' | 'kernel' | 'kernel_interpret' | 'xla'.
+    'auto' uses the Pallas kernel on TPU and XLA elsewhere (the kernel in
+    interpret mode is for correctness tests, not speed).
+    """
+    batch, qh, head_dim = q.shape
+    kvh = k_pages.shape[2]
+    assert qh % kvh == 0, f"q heads {qh} not a multiple of kv heads {kvh}"
+    group = qh // kvh
+    qg = q.reshape(batch, kvh, group, head_dim)
+
+    if impl == "auto":
+        impl = "kernel" if _on_tpu() else "xla"
+    if impl == "xla":
+        out = paged_attention_ref(qg, k_pages, v_pages, block_tables,
+                                  lengths, scale=scale)
+    else:
+        out = paged_attention_kernel(
+            qg, k_pages, v_pages, block_tables, lengths, scale=scale,
+            interpret=(impl == "kernel_interpret"))
+    return out.reshape(batch, qh, head_dim)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for paged decode attention."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, block_tables: jax.Array,
+                        lengths: jax.Array, *,
+                        scale: Optional[float] = None) -> jax.Array:
+    """out[b, h, g] = softmax(q . K[b]) V[b] over the first lengths[b]
+    tokens of the pages named by block_tables[b]."""
+    batch, kvh, group, head_dim = q.shape
+    _, page_size, _, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    if scale is None:
+        scale = head_dim ** -0.5
+
+    # gather: (B, maxp, page, KVH, D) -> (B, S, KVH, D)
+    k = k_pages[block_tables].reshape(batch, max_pages * page_size, kvh,
+                                      head_dim)
+    v = v_pages[block_tables].reshape(batch, max_pages * page_size, kvh,
+                                      head_dim)
+    s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    pos = jnp.arange(max_pages * page_size)[None, None, None, :]
+    mask = pos < lengths[:, None, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.tiara_gather.ops import tiara_gather
+from repro.kernels.tiara_gather.kernel import tiara_gather_kernel
+from repro.kernels.tiara_gather.ref import tiara_gather_ref
+
+__all__ = ["tiara_gather", "tiara_gather_kernel", "tiara_gather_ref"]

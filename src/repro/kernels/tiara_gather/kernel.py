@@ -1,0 +1,50 @@
+"""Generic double-indirection gather — the Tiara ISA's Load-chain as a
+BlockSpec.
+
+``out[i] = pool[table[ids[i]]]``: both the request list and the
+translation table ride in SMEM via scalar prefetch, and the HBM page each
+grid step DMAs into VMEM is chosen by dereferencing *two* levels of
+indirection inside the ``index_map`` — a 2-level page-table walk executed
+by the memory system itself, one pass, no materialized intermediate.
+
+Used for MoE expert-slab gather (expert id -> translation table -> slab)
+and raw KV block fetch outside attention.  Rows are (row_words,) and the
+pool is (n_rows, row_words).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(ids_ref, table_ref, pool_ref, o_ref):
+    del ids_ref, table_ref       # consumed by the index_map (the point!)
+    o_ref[...] = pool_ref[...]
+
+
+def tiara_gather_kernel(pool: jax.Array, table: jax.Array,
+                        ids: jax.Array, *, interpret: bool = False
+                        ) -> jax.Array:
+    """pool (N, R); table (T,) int32: logical -> physical row;
+    ids (n,) int32: requested logical rows.  Returns (n, R)."""
+    n_rows, row_words = pool.shape
+    (n_req,) = ids.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_req,),
+        in_specs=[
+            pl.BlockSpec((1, row_words),
+                         lambda i, ids_r, tbl_r: (tbl_r[ids_r[i]], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, row_words),
+                               lambda i, ids_r, tbl_r: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_req, row_words), pool.dtype),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), table.astype(jnp.int32), pool)

@@ -1,0 +1,26 @@
+"""Public jitted entry point for the double-indirection gather."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.tiara_gather.kernel import tiara_gather_kernel
+from repro.kernels.tiara_gather.ref import tiara_gather_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def tiara_gather(pool: jax.Array, table: jax.Array, ids: jax.Array, *,
+                 impl: str = "auto") -> jax.Array:
+    """out[i] = pool[table[ids[i]]] — one fused pass on TPU."""
+    if impl == "auto":
+        impl = "kernel" if _on_tpu() else "xla"
+    if impl == "xla":
+        return tiara_gather_ref(pool, table, ids)
+    return tiara_gather_kernel(pool, table, ids,
+                               interpret=(impl == "kernel_interpret"))

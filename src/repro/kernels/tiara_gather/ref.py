@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the double-indirection gather."""
+
+from __future__ import annotations
+
+import jax
+
+
+def tiara_gather_ref(pool: jax.Array, table: jax.Array,
+                     ids: jax.Array) -> jax.Array:
+    return pool[table[ids]]

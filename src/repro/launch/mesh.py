@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) over 256 chips; multi-pod adds a leading
+pure-DP ``pod`` axis (2 x 256 = 512 chips).  Functions, not module-level
+constants, so importing this module never touches jax device state (the
+dry-run must set XLA_FLAGS before any device query).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel axis bundle for batch sharding on this mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh) -> int:
+    out = 1
+    for a in dp_axes(mesh):
+        out *= mesh.shape[a]
+    return out

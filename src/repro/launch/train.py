@@ -1,0 +1,47 @@
+"""Training launcher: --arch <id> on the local device mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tiny-lm --steps 50
+
+Production note: on a real multi-host pod this entry point runs under
+jax.distributed with the same code path; the dry-run (dryrun.py) is the
+no-hardware proof of the production mesh configuration.
+"""
+
+import argparse
+
+from repro.configs import get_config, reduce_config
+from repro.data import DataConfig
+from repro.training import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny-lm")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--state-bits", type=int, default=32, choices=[8, 32])
+    ap.add_argument("--micro-batches", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config of the same family")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch)
+    tcfg = TrainerConfig(total_steps=args.steps, log_every=5,
+                         ckpt_every=max(args.steps // 4, 1),
+                         ckpt_dir=args.ckpt, peak_lr=args.lr,
+                         warmup=max(args.steps // 10, 1),
+                         state_bits=args.state_bits,
+                         micro_batches=args.micro_batches)
+    state = Trainer(cfg, tcfg, dcfg).run()
+    print(f"finished at step {int(state.step)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""GQA attention: training/prefill (flash path) and paged decode (Tiara path).
+
+Weights: wq (D, QH*hd) / wk,wv (D, KVH*hd) sharded TP-on-heads x FSDP-on-D;
+wo transposed.  Decode attends against the paged KV pool through the block
+table — the Pallas kernel on TPU resolves the table in-kernel (DESIGN.md
+§2); prefill scatters its KV into the same pages so decode can continue.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention
+from repro.models.layers import apply_mrope, apply_rope
+from repro.models.param import ParamDef
+
+
+def attn_defs(d_model: int, n_heads: int, n_kv_heads: int, head_dim: int):
+    return {
+        "wq": ParamDef((d_model, n_heads * head_dim), P("data", "model")),
+        "wk": ParamDef((d_model, n_kv_heads * head_dim), P("data", "model")),
+        "wv": ParamDef((d_model, n_kv_heads * head_dim), P("data", "model")),
+        "wo": ParamDef((n_heads * head_dim, d_model), P("model", "data"),
+                       fan_in=n_heads * head_dim),
+    }
+
+
+def _qkv(params, x, n_heads, n_kv_heads, head_dim):
+    b, s, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, s, n_heads, head_dim)
+    k = (x @ params["wk"]).reshape(b, s, n_kv_heads, head_dim)
+    v = (x @ params["wv"]).reshape(b, s, n_kv_heads, head_dim)
+    return q, k, v
+
+
+def _position_encode(q, k, cfg, positions, positions3):
+    if cfg.rope == "mrope":
+        q = apply_mrope(q, positions3, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions3, cfg.mrope_sections, cfg.rope_theta)
+    elif cfg.rope == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def attention_full(params, x, cfg, *, positions=None, positions3=None,
+                   lengths=None, causal=True,
+                   kv_override: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """Training / prefill attention over the whole sequence.
+
+    Returns (out, (k, v)) with k/v in (B, S, KVH, hd) layout (post-RoPE) so
+    the caller can page them for serving.  ``kv_override`` supplies
+    precomputed cross-attention KV (encoder-decoder)."""
+    b, s, _ = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    q, k, v = _qkv(params, x, nh, nkv, hd)
+    if kv_override is not None:
+        # cross-attention: precomputed encoder KV, no rotary on either side
+        # (seamless/NLLB style uses learned/sinusoidal positions upstream)
+        k, v = kv_override
+    else:
+        q, k = _position_encode(q, k, cfg, positions, positions3)
+    out = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), lengths,
+                          causal=causal, impl=cfg.attn_impl)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
+    return out @ params["wo"], (k, v)
+
+
+class PagedKV(NamedTuple):
+    """Per-attention-layer paged KV pool (the disaggregated memory region)."""
+    k_pages: jax.Array    # (P, page, KVH, hd)
+    v_pages: jax.Array
+
+
+def scatter_prefill_kv(kv: PagedKV, k: jax.Array, v: jax.Array,
+                       block_tables: jax.Array) -> PagedKV:
+    """Write prefill KV (B, S, KVH, hd) into the pages named by the block
+    table (S must be maxp * page; the allocator pads)."""
+    b, s, nkv, hd = k.shape
+    page = kv.k_pages.shape[1]
+    maxp = block_tables.shape[1]
+    assert s <= maxp * page, (s, maxp, page)
+    if s < maxp * page:                       # pad to whole pages; padded
+        pad = maxp * page - s                 # positions are never attended
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    flat_idx = block_tables.reshape(-1)
+    k_r = k.reshape(b * maxp, page, nkv, hd)
+    v_r = v.reshape(b * maxp, page, nkv, hd)
+    return PagedKV(kv.k_pages.at[flat_idx].set(k_r.astype(kv.k_pages.dtype)),
+                   kv.v_pages.at[flat_idx].set(v_r.astype(kv.v_pages.dtype)))
+
+
+def attention_decode(params, x, cfg, kv: PagedKV, block_tables, lengths, *,
+                     positions3=None) -> Tuple[jax.Array, PagedKV]:
+    """One-token decode: append this token's KV to its page, then attend
+    over lengths+1 tokens through the block table."""
+    b, s, _ = x.shape
+    assert s == 1, "decode is one token per sequence"
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    page = kv.k_pages.shape[1]
+    q, k, v = _qkv(params, x, nh, nkv, hd)
+    positions = lengths[:, None].astype(jnp.int32)
+    q, k = _position_encode(q, k, cfg, positions, positions3)
+
+    if getattr(cfg, "paged_attn_fn", None) is not None:
+        # one-round sequence-parallel path (distributed/paged_decode):
+        # pages never move; the request ships to their owners
+        out, k_pages, v_pages = cfg.paged_attn_fn(
+            q[:, 0], kv.k_pages, kv.v_pages, k[:, 0], v[:, 0],
+            block_tables, lengths.astype(jnp.int32))
+        out = out.reshape(b, 1, nh * hd)
+        return out @ params["wo"], PagedKV(k_pages, v_pages)
+
+    page_idx = jnp.take_along_axis(
+        block_tables, (lengths // page)[:, None].astype(jnp.int32), axis=1
+    )[:, 0]
+    page_off = (lengths % page).astype(jnp.int32)
+    k_pages = kv.k_pages.at[page_idx, page_off].set(
+        k[:, 0].astype(kv.k_pages.dtype))
+    v_pages = kv.v_pages.at[page_idx, page_off].set(
+        v[:, 0].astype(kv.v_pages.dtype))
+    new_kv = PagedKV(k_pages, v_pages)
+
+    out = paged_attention(q[:, 0], k_pages, v_pages, block_tables,
+                          (lengths + 1).astype(jnp.int32),
+                          impl=cfg.attn_impl)
+    out = out.reshape(b, 1, nh * hd)
+    return out @ params["wo"], new_kv

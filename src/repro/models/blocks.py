@@ -1,0 +1,164 @@
+"""Layer blocks: norm + mixer (attn/mamba/rwkv) + norm + FFN (mlp/moe/cm).
+
+One ``block_defs``/``block_apply`` pair covers every assigned architecture;
+the repeating-pattern transformer stacks these per pattern element and
+``lax.scan``s over repetitions (transformer.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, LayerSpec
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.attention import PagedKV
+from repro.models.layers import apply_norm, mlp, mlp_defs, norm_defs
+from repro.models.moe import moe_apply, moe_defs
+
+
+def block_defs(cfg: ArchConfig, spec: LayerSpec, *, cross: bool = False):
+    d = cfg.d_model
+    defs: Dict[str, Any] = {"norm1": norm_defs(cfg.norm, d)}
+    if spec.kind == "attn":
+        defs["mix"] = attn_mod.attn_defs(d, cfg.n_heads, cfg.n_kv_heads,
+                                         cfg.head_dim)
+    elif spec.kind == "mamba":
+        defs["mix"] = mamba_mod.mamba_defs(d, cfg.mamba)
+    elif spec.kind == "rwkv":
+        defs["mix"] = rwkv_mod.rwkv_time_defs(d, cfg.rwkv)
+    else:
+        raise ValueError(spec.kind)
+    if cross:
+        defs["norm_x"] = norm_defs(cfg.norm, d)
+        defs["cross"] = attn_mod.attn_defs(d, cfg.n_heads, cfg.n_kv_heads,
+                                           cfg.head_dim)
+    defs["norm2"] = norm_defs(cfg.norm, d)
+    if spec.mlp == "moe":
+        defs["ffn"] = moe_defs(d, spec.moe)
+    elif spec.mlp == "rwkv_cm":
+        defs["ffn"] = rwkv_mod.rwkv_channel_defs(d, cfg.d_ff)
+    else:
+        defs["ffn"] = mlp_defs(d, cfg.d_ff, spec.mlp)
+    return defs
+
+
+class BlockCache(NamedTuple):
+    """Union cache for one layer; unused fields are size-0 placeholders so
+    the pytree structure is uniform across layer kinds (scan-friendly)."""
+    paged: Optional[PagedKV] = None
+    mamba: Optional[mamba_mod.MambaCache] = None
+    rwkv: Optional[rwkv_mod.RWKVCache] = None
+    cross_k: Optional[jax.Array] = None
+    cross_v: Optional[jax.Array] = None
+
+
+def init_block_cache(cfg: ArchConfig, spec: LayerSpec, batch: int,
+                     pages_per_layer: int, dtype, *,
+                     cross_len: int = 0) -> BlockCache:
+    paged = mamba_c = rwkv_c = cross_k = cross_v = None
+    if spec.kind == "attn":
+        shape = (pages_per_layer, cfg.page_size, cfg.n_kv_heads,
+                 cfg.head_dim)
+        paged = PagedKV(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    elif spec.kind == "mamba":
+        mamba_c = mamba_mod.init_mamba_cache(batch, cfg.d_model, cfg.mamba,
+                                             dtype)
+    elif spec.kind == "rwkv":
+        rwkv_c = rwkv_mod.init_rwkv_cache(batch, cfg.d_model, cfg.rwkv,
+                                          dtype)
+    if cross_len:
+        cshape = (batch, cross_len, cfg.n_kv_heads, cfg.head_dim)
+        cross_k, cross_v = jnp.zeros(cshape, dtype), jnp.zeros(cshape, dtype)
+    return BlockCache(paged=paged, mamba=mamba_c, rwkv=rwkv_c,
+                      cross_k=cross_k, cross_v=cross_v)
+
+
+def block_apply(params, x: jax.Array, cfg: ArchConfig, spec: LayerSpec, *,
+                mode: str,                     # train | prefill | decode
+                ctx: Dict[str, Any],
+                cache: Optional[BlockCache] = None,
+                ) -> Tuple[jax.Array, Optional[BlockCache], jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new = cache._asdict() if cache is not None else None
+    h = apply_norm(cfg.norm, params["norm1"], x)
+
+    if spec.kind == "attn":
+        if mode == "decode":
+            out, paged = attn_mod.attention_decode(
+                params["mix"], h, cfg, cache.paged, ctx["block_tables"],
+                ctx["lengths"], positions3=ctx.get("positions3"))
+            new["paged"] = paged
+        else:
+            out, (k, v) = attn_mod.attention_full(
+                params["mix"], h, cfg, positions=ctx.get("positions"),
+                positions3=ctx.get("positions3"),
+                causal=ctx.get("causal", True))
+            if mode == "prefill" and cache is not None:
+                new["paged"] = attn_mod.scatter_prefill_kv(
+                    cache.paged, k, v, ctx["block_tables"])
+    elif spec.kind == "mamba":
+        out, mc = mamba_mod.mamba_forward(
+            params["mix"], h, cfg.mamba,
+            cache.mamba if cache is not None else None,
+            lengths=ctx.get("lengths") if mode == "prefill" else None)
+        if cache is not None:
+            new["mamba"] = mc
+    elif spec.kind == "rwkv":
+        out, (state, last_x) = rwkv_mod.rwkv_time_mix(
+            params["mix"], h, cfg.rwkv,
+            cache.rwkv if cache is not None else None,
+            lengths=ctx.get("lengths") if mode == "prefill" else None)
+        if cache is not None:
+            new["rwkv"] = cache.rwkv._replace(state=state, x_time=last_x)
+    else:
+        raise ValueError(spec.kind)
+    x = x + out
+
+    if "cross" in params:
+        hx = apply_norm(cfg.norm, params["norm_x"], x)
+        if mode == "decode":
+            kv = (cache.cross_k, cache.cross_v)
+        else:
+            # project encoder output to this layer's cross KV
+            enc = ctx["enc_out"]
+            b, se, _ = enc.shape
+            k = (enc @ params["cross"]["wk"]).reshape(
+                b, se, cfg.n_kv_heads, cfg.head_dim)
+            v = (enc @ params["cross"]["wv"]).reshape(
+                b, se, cfg.n_kv_heads, cfg.head_dim)
+            kv = (k, v)
+            if cache is not None:
+                new["cross_k"] = k.astype(cache.cross_k.dtype)
+                new["cross_v"] = v.astype(cache.cross_v.dtype)
+        out, _ = attn_mod.attention_full(
+            params["cross"], hx, cfg, causal=False,
+            lengths=ctx.get("enc_lengths"), kv_override=kv)
+        x = x + out
+
+    h = apply_norm(cfg.norm, params["norm2"], x)
+    if spec.mlp == "moe":
+        if getattr(cfg, "moe_fn", None) is not None:
+            out, aux = cfg.moe_fn(params["ffn"], h)
+        else:
+            out, aux = moe_apply(params["ffn"], h, spec.moe,
+                                 hints=getattr(cfg, "moe_hints", False))
+    elif spec.mlp == "rwkv_cm":
+        prev = cache.rwkv.x_chan if (cache is not None and
+                                     cache.rwkv is not None) else None
+        out, last_c = rwkv_mod.rwkv_channel_mix(
+            params["ffn"], h, prev,
+            lengths=ctx.get("lengths") if mode == "prefill" else None)
+        if cache is not None and new.get("rwkv") is not None:
+            new["rwkv"] = new["rwkv"]._replace(x_chan=last_c)
+    else:
+        out = mlp(params["ffn"], h, spec.mlp)
+    x = x + out
+
+    new_cache = BlockCache(**new) if new is not None else None
+    return x, new_cache, aux

@@ -1,0 +1,160 @@
+"""Shared layers: norms, MLPs, rotary embeddings (RoPE + M-RoPE), embed."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.param import ParamDef
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_defs(d: int):
+    return {"scale": ParamDef((d,), P(None), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def layernorm_defs(d: int):
+    return {"scale": ParamDef((d,), P(None), init="ones"),
+            "bias": ParamDef((d,), P(None), init="zeros")}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) \
+        + params["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def norm_defs(kind: str, d: int):
+    return rmsnorm_defs(d) if kind == "rmsnorm" else layernorm_defs(d)
+
+
+def apply_norm(kind: str, params, x):
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_defs(d_model: int, d_ff: int, kind: str):
+    if kind == "swiglu":
+        return {"wi": ParamDef((d_model, d_ff), P("data", "model")),
+                "wg": ParamDef((d_model, d_ff), P("data", "model")),
+                "wo": ParamDef((d_ff, d_model), P("model", "data"))}
+    # relu2 (squared ReLU, Nemotron-4) and gelu share the 2-matrix shape
+    return {"wi": ParamDef((d_model, d_ff), P("data", "model")),
+            "wo": ParamDef((d_ff, d_model), P("model", "data"))}
+
+
+def mlp(params, x, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(x @ params["wi"]))
+    elif kind == "gelu":
+        h = jax.nn.gelu(x @ params["wi"])
+    else:
+        raise ValueError(f"unknown mlp kind {kind!r}")
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, D) or (..., S, D); positions (..., S)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                    # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (..., S, half)
+    if x.ndim == ang.ndim + 1:                                # head dim present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array,
+                sections: Tuple[int, int, int],
+                theta: float = 1_000_000.0) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, D); positions3: (3, B, S) — temporal/height/width position
+    ids (the vision stub supplies them precomputed).  The half-dim rotary
+    frequency bands are split into ``sections`` (t, h, w), each rotated by
+    its own position stream; text tokens carry identical t/h/w ids, which
+    makes this collapse to standard RoPE for pure text.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)                    # (half,)
+    # (3, B, S, half)
+    ang_all = positions3[..., None].astype(jnp.float32) * freqs
+    parts = []
+    start = 0
+    for sec_i, sec in enumerate(sections):
+        parts.append(ang_all[sec_i, ..., start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)                     # (B, S, half)
+    ang = ang[..., None, :]                                   # head dim
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_defs(vocab_padded: int, d_model: int, tie: bool):
+    defs = {"tokens": ParamDef((vocab_padded, d_model), P("model", "data"),
+                               init="embed")}
+    if not tie:
+        defs["head"] = ParamDef((d_model, vocab_padded), P("data", "model"))
+    return defs
+
+
+def embed(params, tokens: jax.Array, dtype) -> jax.Array:
+    return params["tokens"].astype(dtype)[tokens]
+
+
+def unembed(params, x: jax.Array, vocab: Optional[int] = None) -> jax.Array:
+    if "head" in params:
+        logits = (x @ params["head"]).astype(jnp.float32)
+    else:
+        logits = (x @ params["tokens"].T.astype(x.dtype)).astype(jnp.float32)
+    if vocab is not None and vocab < logits.shape[-1]:
+        # mask padding rows so the softmax never sees them
+        pad_mask = jnp.arange(logits.shape[-1]) >= vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits

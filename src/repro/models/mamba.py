@@ -1,0 +1,173 @@
+"""Mamba (S6) block — Jamba's attention-free layer.
+
+Selective SSM with input-dependent (dt, B, C): a linear recurrence over
+time executed with ``lax.scan`` (state (B, d_inner, d_state) carry).  The
+scan keeps HLO size and compile memory flat in sequence length, which is
+what the multi-pod dry-run needs; a chunked Pallas selective-scan kernel
+is the documented real-hardware fast path (DESIGN.md §Arch-applicability
+notes the Tiara technique itself does not apply: state addresses are
+affine, there is no indirection to collapse).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.param import ParamDef
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaSpec:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: Optional[int] = None
+
+    def dims(self, d_model: int) -> Tuple[int, int]:
+        d_inner = self.expand * d_model
+        dt_rank = self.dt_rank or max(1, d_model // 16)
+        return d_inner, dt_rank
+
+
+def mamba_defs(d_model: int, spec: MambaSpec):
+    d_inner, dt_rank = spec.dims(d_model)
+    return {
+        "in_proj": ParamDef((d_model, 2 * d_inner), P("data", "model")),
+        "conv_w": ParamDef((spec.d_conv, d_inner), P(None, "model")),
+        "conv_b": ParamDef((d_inner,), P("model"), init="zeros"),
+        "x_proj": ParamDef((d_inner, dt_rank + 2 * spec.d_state),
+                           P("model", None)),
+        "dt_proj": ParamDef((dt_rank, d_inner), P(None, "model")),
+        "dt_bias": ParamDef((d_inner,), P("model"), init="zeros"),
+        "A_log": ParamDef((d_inner, spec.d_state), P("model", None),
+                          init="zeros"),
+        "D_skip": ParamDef((d_inner,), P("model"), init="ones"),
+        "out_proj": ParamDef((d_inner, d_model), P("model", "data")),
+    }
+
+
+class MambaCache(NamedTuple):
+    h: jax.Array         # (B, d_inner, d_state) SSM state
+    conv: jax.Array      # (B, d_conv - 1, d_inner) rolling conv window
+
+
+def init_mamba_cache(batch: int, d_model: int, spec: MambaSpec,
+                     dtype=jnp.float32) -> MambaCache:
+    d_inner, _ = spec.dims(d_model)
+    return MambaCache(
+        h=jnp.zeros((batch, d_inner, spec.d_state), jnp.float32),
+        conv=jnp.zeros((batch, spec.d_conv - 1, d_inner), dtype))
+
+
+def _ssm_inputs(params, x_conv, spec: MambaSpec, dt_rank: int):
+    """x_conv (B, S, d_inner) -> (dt, bm, cm): small per-step inputs; the
+    (B, S, d_inner, d_state) recurrence coefficients are formed lazily
+    inside the checkpointed chunks (memory!)."""
+    d_state = spec.d_state
+    xdb = x_conv @ params["x_proj"]
+    dt_r = xdb[..., :dt_rank]
+    bm = xdb[..., dt_rank:dt_rank + d_state].astype(jnp.float32)
+    cm = xdb[..., dt_rank + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus((dt_r @ params["dt_proj"]
+                          + params["dt_bias"]).astype(jnp.float32))
+    return dt, bm, cm
+
+
+def _conv_causal(params, x, spec: MambaSpec, prefix: Optional[jax.Array]):
+    """Depthwise causal conv over time. prefix: (B, d_conv-1, d_inner)."""
+    if prefix is None:
+        prefix = jnp.zeros((x.shape[0], spec.d_conv - 1, x.shape[-1]),
+                           x.dtype)
+    xp = jnp.concatenate([prefix, x], axis=1)
+    out = params["conv_b"].astype(x.dtype)
+    acc = jnp.zeros_like(x) + out
+    s = x.shape[1]
+    for j in range(spec.d_conv):
+        acc = acc + xp[:, j:j + s] * params["conv_w"][j].astype(x.dtype)
+    return jax.nn.silu(acc), xp[:, -(spec.d_conv - 1):] \
+        if spec.d_conv > 1 else prefix
+
+
+def mamba_forward(params, x: jax.Array, spec: MambaSpec,
+                  cache: Optional[MambaCache] = None,
+                  lengths: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, Optional[MambaCache]]:
+    """x (B, S, D); returns (out, new_cache if cache given).
+
+    ``lengths`` (prefill with right-padding): positions >= length take an
+    identity recurrence step so padding never pollutes the carried state,
+    and the conv tail is gathered at the true sequence end."""
+    b, s, d_model = x.shape
+    d_inner, dt_rank = spec.dims(d_model)
+    xz = x @ params["in_proj"]
+    x_in, z = xz[..., :d_inner], xz[..., d_inner:]
+    x_conv, conv_tail = _conv_causal(params, x_in, spec,
+                                     cache.conv if cache else None)
+    dt, bm, cm = _ssm_inputs(params, x_conv, spec, dt_rank)
+    xcf = x_conv.astype(jnp.float32)
+    a_mat = -jnp.exp(params["A_log"].astype(jnp.float32))   # (d_inner, N)
+
+    if lengths is not None:
+        valid = (jnp.arange(s)[None, :] < lengths[:, None])  # (B, S)
+        if spec.d_conv > 1:
+            # conv window ending at the true last token; xp coords offset
+            # by (d_conv - 1), so window index = length + j
+            xp = jnp.concatenate(
+                [cache.conv if cache is not None else
+                 jnp.zeros((b, spec.d_conv - 1, d_inner), x_in.dtype),
+                 x_in], axis=1)
+            idx = jnp.clip(lengths[:, None]
+                           + jnp.arange(spec.d_conv - 1)[None, :],
+                           0, xp.shape[1] - 1)
+            conv_tail = jnp.take_along_axis(xp, idx[..., None], axis=1)
+    else:
+        valid = jnp.ones((b, s), bool)
+
+    h0 = cache.h if cache is not None else jnp.zeros(
+        (b, d_inner, spec.d_state), jnp.float32)
+
+    def recur(h, t):
+        """One chunk (or the whole sequence when short).  The (B, C,
+        d_inner, N) coefficients live only inside this (checkpointed)
+        region; backward recomputes them chunk by chunk."""
+        dt_c, xc_c, bm_c, cm_c, v_c = t
+        a = jnp.exp(dt_c[..., None] * a_mat)                # (B,C,d,N)
+        bx = (dt_c * xc_c)[..., None] * bm_c[..., None, :]
+        vm = v_c[..., None, None]
+        a = jnp.where(vm, a, 1.0)
+        bx = jnp.where(vm, bx, 0.0)
+
+        def step(hh, tt):
+            a_t, bx_t, c_t = tt
+            hh = a_t * hh + bx_t
+            return hh, jnp.einsum("bds,bs->bd", hh, c_t)
+
+        h, ys = jax.lax.scan(step, h,
+                             (a.swapaxes(0, 1), bx.swapaxes(0, 1),
+                              cm_c.swapaxes(0, 1)))
+        return h, ys                                        # ys (C, B, d)
+
+    chunk = 256
+    if s > chunk and s % chunk == 0:
+        n_chunks = s // chunk
+
+        def rs(t):
+            return t.reshape((b, n_chunks, chunk) + t.shape[2:]) \
+                    .swapaxes(0, 1)
+
+        hT, ys = jax.lax.scan(jax.checkpoint(recur), h0,
+                              (rs(dt), rs(xcf), rs(bm), rs(cm), rs(valid)))
+        y = ys.transpose(2, 0, 1, 3).reshape(b, s, d_inner)
+    else:
+        hT, ys = recur(h0, (dt, xcf, bm, cm, valid))
+        y = ys.swapaxes(0, 1)                                # (B,S,d_inner)
+    y = y + params["D_skip"].astype(jnp.float32) * x_conv.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    new_cache = MambaCache(h=hT, conv=conv_tail) if cache is not None else None
+    return out, new_cache

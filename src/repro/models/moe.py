@@ -1,0 +1,124 @@
+"""Mixture-of-Experts layer with capacity-based dispatch and EP sharding.
+
+Experts live as stacked (E, ...) tensors sharded over the ``model`` axis
+(expert parallelism) and FSDP-sharded over ``data`` on the d_model dim.
+Dispatch is the GShard-style capacity scheme expressed as dense scatters,
+which GSPMD partitions cleanly (an all_to_all-based path is evaluated as a
+§Perf hillclimb alternative in the distributed runtime).
+
+The expert-id -> slab translation this layer performs at serving time is
+the paper's §4.5 workload; the serving offload path resolves it with the
+tiara_gather kernel / the NIC operator instead of a host round trip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.param import ParamDef
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    shared_expert: bool = False     # Llama-4 style always-on shared expert
+    capacity_factor: float = 1.25
+    router_z_coef: float = 1e-3
+    balance_coef: float = 1e-2
+
+
+def moe_defs(d_model: int, spec: MoESpec):
+    e, f = spec.n_experts, spec.d_ff_expert
+    defs = {
+        "router": ParamDef((d_model, e), P("data", None)),
+        "wi": ParamDef((e, d_model, f), P("model", "data", None)),
+        "wg": ParamDef((e, d_model, f), P("model", "data", None)),
+        "wo": ParamDef((e, f, d_model), P("model", None, "data"), fan_in=f),
+    }
+    if spec.shared_expert:
+        defs["shared"] = {
+            "wi": ParamDef((d_model, f), P("data", "model")),
+            "wg": ParamDef((d_model, f), P("data", "model")),
+            "wo": ParamDef((f, d_model), P("model", "data")),
+        }
+    return defs
+
+
+def _capacity(n_tokens: int, spec: MoESpec) -> int:
+    cap = int(n_tokens * spec.top_k * spec.capacity_factor
+              / spec.n_experts)
+    return max(8, (cap + 3) // 4 * 4)
+
+
+def moe_apply(params, x: jax.Array, spec: MoESpec, *,
+              hints: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    ``hints``: explicit EP shardings on the dispatch/expert buffers so
+    GSPMD routes tokens with one gather per direction instead of
+    replicating the buffers (§Perf cell 2); requires an ambient mesh with
+    ("data", "model") axes."""
+    def hint(t, *axes):
+        if not hints:
+            return t
+        return jax.lax.with_sharding_constraint(t, P(*axes))
+
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    e, k = spec.n_experts, spec.top_k
+    cap = _capacity(t, spec)
+
+    logits = (xf @ params["router"]).astype(jnp.float32)      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                      # (T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # position of each assignment within its expert (drop beyond capacity)
+    onehot = jax.nn.one_hot(eidx, e, dtype=jnp.int32)          # (T, K, E)
+    flat_oh = onehot.reshape(t * k, e)
+    pos = jnp.cumsum(flat_oh, axis=0) - flat_oh                # (T*K, E)
+    pos = jnp.sum(pos * flat_oh, axis=-1)                      # (T*K,)
+    eflat = eidx.reshape(t * k)
+    keep = (pos < cap).astype(xf.dtype)
+    slot = jnp.minimum(pos, cap - 1)
+
+    # dispatch: (E, C, D) buffers (dropped tokens contribute zeros)
+    disp = jnp.zeros((e, cap, d), xf.dtype)
+    x_rep = jnp.repeat(xf, k, axis=0) * keep[:, None]
+    x_rep = hint(x_rep, ("data",), None)
+    disp = disp.at[eflat, slot].add(x_rep)
+    disp = hint(disp, "model", None, "data")
+
+    # expert FFN (SwiGLU), EP-sharded einsums
+    h = jnp.einsum("ecd,edf->ecf", disp, params["wi"].astype(xf.dtype))
+    g = jnp.einsum("ecd,edf->ecf", disp, params["wg"].astype(xf.dtype))
+    h = jax.nn.silu(hint(g, "model", None, None)) * h
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(xf.dtype))
+    out_buf = hint(out_buf, "model", None, "data")
+
+    # combine
+    y = out_buf[eflat, slot] * keep[:, None]                   # (T*K, D)
+    y = hint(y, ("data",), None)
+    y = (y.reshape(t, k, d)
+         * gate[..., None].astype(xf.dtype)).sum(axis=1)
+
+    if spec.shared_expert:
+        sh = params["shared"]
+        hs = jax.nn.silu(xf @ sh["wg"]) * (xf @ sh["wi"])
+        y = y + hs @ sh["wo"]
+
+    # aux losses: load balance (Switch) + router z-loss
+    me = probs.mean(axis=0)                                    # (E,)
+    ce = (onehot.sum(axis=1).astype(jnp.float32)).mean(axis=0)  # (E,)
+    balance = spec.balance_coef * e * jnp.sum(me * ce) / k
+    zloss = spec.router_z_coef * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return y.reshape(b, s, d), balance + zloss

@@ -1,0 +1,177 @@
+"""RWKV-6 (Finch) block — data-dependent decay linear attention.
+
+Time-mix: per-head matrix state S (hd x hd) updated with an
+*input-dependent* diagonal decay w_t (the Finch contribution) plus a
+first-occurrence bonus u; channel-mix: token-shifted squared-ReLU FFN.
+Both recurrences run as ``lax.scan`` over time (compile-size-flat, the
+dry-run requirement; see mamba.py for the hardware note).
+
+DESIGN.md §Arch-applicability: attention-free — there is no KV block
+table, so the paper's indirection-collapse has nothing to collapse here;
+the recurrent state is still registered as a Tiara memory region for the
+disaggregated-state example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.param import ParamDef
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVSpec:
+    head_size: int = 64
+    decay_lora: int = 64
+
+
+def rwkv_time_defs(d_model: int, spec: RWKVSpec):
+    dl = spec.decay_lora
+    return {
+        # token-shift interpolation coefficients for r/k/v/w/g
+        "mu": ParamDef((5, d_model), P(None, None), init="zeros"),
+        "wr": ParamDef((d_model, d_model), P("data", "model")),
+        "wk": ParamDef((d_model, d_model), P("data", "model")),
+        "wv": ParamDef((d_model, d_model), P("data", "model")),
+        "wg": ParamDef((d_model, d_model), P("data", "model")),
+        "wo": ParamDef((d_model, d_model), P("model", "data")),
+        # data-dependent decay LoRA (Finch): w_t = exp(-softplus(...))
+        "w_base": ParamDef((d_model,), P("model"), init="zeros"),
+        "w1": ParamDef((d_model, dl), P("data", None)),
+        "w2": ParamDef((dl, d_model), P(None, "model")),
+        "u_bonus": ParamDef((d_model,), P("model"), init="zeros"),
+    }
+
+
+def rwkv_channel_defs(d_model: int, d_ff: int):
+    return {
+        "mu": ParamDef((2, d_model), P(None, None), init="zeros"),
+        "wk": ParamDef((d_model, d_ff), P("data", "model")),
+        "wv": ParamDef((d_ff, d_model), P("model", "data")),
+        "wr": ParamDef((d_model, d_model), P("data", "model")),
+    }
+
+
+class RWKVCache(NamedTuple):
+    state: jax.Array       # (B, H, hd, hd) wkv matrix state
+    x_time: jax.Array      # (B, D) last input of the time-mix sublayer
+    x_chan: jax.Array      # (B, D) last input of the channel-mix sublayer
+
+
+def init_rwkv_cache(batch: int, d_model: int, spec: RWKVSpec,
+                    dtype=jnp.float32) -> RWKVCache:
+    h = d_model // spec.head_size
+    return RWKVCache(
+        state=jnp.zeros((batch, h, spec.head_size, spec.head_size),
+                        jnp.float32),
+        x_time=jnp.zeros((batch, d_model), dtype),
+        x_chan=jnp.zeros((batch, d_model), dtype))
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]):
+    """x (B,S,D) -> x shifted right by one (prev fills t=0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, 0])
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1), x[:, -1]
+
+
+def _mix(x, x_prev, mu):
+    return x + (x_prev - x) * jax.nn.sigmoid(mu).astype(x.dtype)
+
+
+def _last_valid(x: jax.Array, lengths: Optional[jax.Array]) -> jax.Array:
+    """x (B,S,D) -> the entry at position length-1 (or the final one)."""
+    if lengths is None:
+        return x[:, -1]
+    idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
+    return jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+
+
+def rwkv_time_mix(params, x: jax.Array, spec: RWKVSpec,
+                  cache: Optional[RWKVCache] = None,
+                  lengths: Optional[jax.Array] = None):
+    """x (B,S,D) -> (out, (new_state, last_x)).  ``lengths``: right-padded
+    prefill — padded steps leave the state untouched."""
+    b, s, d = x.shape
+    hs = spec.head_size
+    nh = d // hs
+    xs, _ = _token_shift(x, cache.x_time if cache else None)
+    last_x = _last_valid(x, lengths)
+    mu = params["mu"]
+    r = _mix(x, xs, mu[0]) @ params["wr"]
+    k = _mix(x, xs, mu[1]) @ params["wk"]
+    v = _mix(x, xs, mu[2]) @ params["wv"]
+    xw = _mix(x, xs, mu[3])
+    g = jax.nn.silu(_mix(x, xs, mu[4]) @ params["wg"])
+    # data-dependent decay, in (0, 1)
+    w = jnp.exp(-jax.nn.softplus(
+        (params["w_base"] + (xw @ params["w1"]) @ params["w2"])
+        .astype(jnp.float32)))                                 # (B,S,D)
+    u = params["u_bonus"].astype(jnp.float32)
+
+    def heads(t):
+        return t.reshape(b, s, nh, hs).astype(jnp.float32)
+
+    rh, kh, vh = heads(r), heads(k), heads(v)
+    wh = w.reshape(b, s, nh, hs)
+    uh = u.reshape(nh, hs)
+
+    if lengths is not None:
+        valid = (jnp.arange(s)[None, :] < lengths[:, None])   # (B, S)
+    else:
+        valid = jnp.ones((b, s), bool)
+
+    def step(state, t):
+        r_t, k_t, v_t, w_t, m_t = t                 # (B,H,hs) each
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,hs,hs)
+        y = jnp.einsum("bhi,bhij->bhj", r_t,
+                       state + uh[None, :, :, None] * kv)
+        new_state = w_t[..., :, None] * state + kv
+        state = jnp.where(m_t[:, None, None, None], new_state, state)
+        return state, y
+
+    def recur(state, t):
+        """One chunk; checkpointed so the per-step (B,H,hs,hs) states are
+        recomputed, not saved, on backward (TBs at 32k otherwise)."""
+        r_c, k_c, v_c, w_c, m_c = t
+        return jax.lax.scan(step, state,
+                            (r_c.swapaxes(0, 1), k_c.swapaxes(0, 1),
+                             v_c.swapaxes(0, 1), w_c.swapaxes(0, 1),
+                             m_c.swapaxes(0, 1)))
+
+    s0 = cache.state if cache is not None else jnp.zeros(
+        (b, nh, hs, hs), jnp.float32)
+    chunk = 256
+    if s > chunk and s % chunk == 0:
+        n_chunks = s // chunk
+
+        def rsh(t):
+            return t.reshape((b, n_chunks, chunk) + t.shape[2:]) \
+                    .swapaxes(0, 1)
+
+        sT, ys = jax.lax.scan(jax.checkpoint(recur), s0,
+                              (rsh(rh), rsh(kh), rsh(vh), rsh(wh),
+                               rsh(valid)))
+        y = ys.transpose(2, 0, 1, 3, 4).reshape(b, s, d).astype(x.dtype)
+    else:
+        sT, ys = recur(s0, (rh, kh, vh, wh, valid))
+        y = ys.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    out = (y * g) @ params["wo"]
+    return out, (sT, last_x)
+
+
+def rwkv_channel_mix(params, x: jax.Array,
+                     cache_prev: Optional[jax.Array] = None,
+                     lengths: Optional[jax.Array] = None):
+    xs, _ = _token_shift(x, cache_prev)
+    last_x = _last_valid(x, lengths)
+    mu = params["mu"]
+    k = _mix(x, xs, mu[0]) @ params["wk"]
+    kv = jnp.square(jax.nn.relu(k)) @ params["wv"]
+    r = jax.nn.sigmoid(_mix(x, xs, mu[1]) @ params["wr"])
+    return r * kv, last_x

@@ -1,0 +1,248 @@
+"""Pattern-scanned transformer covering all assigned architectures.
+
+The repeating layer pattern (DESIGN.md §4) is stacked per pattern element
+and executed with one ``lax.scan`` over repetitions — HLO size and compile
+time stay flat in depth (jamba: period-8 pattern x 4; maverick: period-2
+x 24; uniform archs: period-1 x L).  Optional encoder stack for
+encoder-decoder archs (seamless); modality frontends are stubs that supply
+precomputed embeddings (assignment spec).
+
+Three modes share one code path:
+  train    full-sequence forward, no caches;
+  prefill  full-sequence forward that fills paged KV / recurrent state;
+  decode   one token per sequence against the paged pool (Tiara path).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs import ArchConfig, LayerSpec
+from repro.models.blocks import (BlockCache, block_apply, block_defs,
+                                 init_block_cache)
+from repro.models.layers import (apply_norm, embed, embed_defs, norm_defs,
+                                 unembed)
+from repro.models.param import (materialize, shape_tree, spec_tree,
+                                stack_defs)
+
+ENC_SPEC = LayerSpec(kind="attn", mlp="gelu")
+
+
+def _hint(x, cfg: ArchConfig, *tail):
+    """Activation sharding constraint: batch over cfg.dp_spec (launcher-
+    provided), remaining dims per ``tail``.  No-op outside a mesh."""
+    if cfg.dp_spec is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, P(tuple(cfg.dp_spec), *tail))
+
+
+def model_defs(cfg: ArchConfig):
+    defs: Dict[str, Any] = {
+        "embed": embed_defs(cfg.vocab_padded, cfg.d_model,
+                            cfg.tie_embeddings),
+        "final_norm": norm_defs(cfg.norm, cfg.d_model),
+        "blocks": tuple(
+            stack_defs(block_defs(cfg, spec, cross=cfg.enc_dec),
+                       cfg.n_repeat)
+            for spec in cfg.pattern),
+    }
+    if cfg.enc_dec:
+        defs["encoder"] = {
+            "blocks": stack_defs(block_defs(cfg, ENC_SPEC),
+                                 cfg.n_enc_layers),
+            "final_norm": norm_defs(cfg.norm, cfg.d_model),
+        }
+    return defs
+
+
+def init_params(cfg: ArchConfig, key, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    return materialize(model_defs(cfg), key, dtype)
+
+
+def param_specs(cfg: ArchConfig):
+    return spec_tree(model_defs(cfg))
+
+
+def param_shapes(cfg: ArchConfig, dtype=None):
+    return shape_tree(model_defs(cfg), dtype or jnp.dtype(cfg.param_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_pages: int, *,
+                dtype=None, cross_len: int = 0):
+    """One stacked BlockCache per pattern element.  The paged pool gives
+    each (layer, sequence) its own pages: pool = batch * max_pages."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    pool = batch * max_pages
+    caches = []
+    for spec in cfg.pattern:
+        base = init_block_cache(cfg, spec, batch, pool, dtype,
+                                cross_len=cross_len if cfg.enc_dec else 0)
+        stacked = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((cfg.n_repeat,) + a.shape, a.dtype), base)
+        caches.append(stacked)
+    return tuple(caches)
+
+
+def default_block_tables(cfg: ArchConfig, batch: int, max_pages: int):
+    """Identity allocation: sequence b owns pages [b*maxp, (b+1)*maxp)."""
+    return (jnp.arange(batch, dtype=jnp.int32)[:, None] * max_pages
+            + jnp.arange(max_pages, dtype=jnp.int32)[None, :])
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+class ModelOutput(NamedTuple):
+    logits: jax.Array
+    caches: Optional[Tuple]
+    aux_loss: jax.Array
+
+
+def _run_encoder(params, cfg: ArchConfig, enc_embeds, enc_lengths):
+    x = enc_embeds.astype(jnp.dtype(cfg.dtype))
+    s = x.shape[1]
+    ctx = {"causal": False,
+           "positions": jnp.arange(s, dtype=jnp.int32)[None, :],
+           "lengths": enc_lengths}
+
+    def body(carry, bp):
+        h, aux = carry
+        h, _, a = block_apply(bp, h, cfg, ENC_SPEC, mode="train", ctx=ctx)
+        return (h, aux + a), None
+
+    (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                           params["encoder"]["blocks"])
+    return apply_norm(cfg.norm, params["encoder"]["final_norm"], x), aux
+
+
+def apply_model(params, cfg: ArchConfig, batch: Dict[str, Any], *,
+                mode: str = "train") -> ModelOutput:
+    """batch keys: tokens (B,S) int32; optional embeds (B,S,D) added to the
+    token embeddings (modality stub); positions (B,S); positions3 (3,B,S);
+    enc_embeds/enc_lengths (encoder-decoder); caches, block_tables,
+    lengths (prefill/decode)."""
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, dtype)
+    if batch.get("embeds") is not None:
+        x = x + batch["embeds"].astype(dtype)
+    x = _hint(x, cfg, None, None)
+
+    ctx: Dict[str, Any] = {
+        "positions": batch.get("positions"),
+        "positions3": batch.get("positions3"),
+        "causal": True,
+        "block_tables": batch.get("block_tables"),
+        "lengths": batch.get("lengths"),
+    }
+    if cfg.enc_dec:
+        if mode == "decode":
+            ctx["enc_lengths"] = batch.get("enc_lengths")
+        else:
+            enc_out, enc_aux = _run_encoder(params, cfg,
+                                            batch["enc_embeds"],
+                                            batch.get("enc_lengths"))
+            ctx["enc_out"] = enc_out
+            ctx["enc_lengths"] = batch.get("enc_lengths")
+
+    caches = batch.get("caches")
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if caches is None:
+        remat_on = mode == "train" and cfg.remat != "none"
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+
+        def one_layer(bp_j, h, j):
+            h, _, a = block_apply(bp_j, h, cfg, cfg.pattern[j], mode=mode,
+                                  ctx=ctx)
+            return h, a
+
+        if remat_on and cfg.remat_unit == "layer":
+            # per-layer checkpointing: backward recompute peak is ONE
+            # layer, not one whole pattern period (§Perf cell 3)
+            one_layer = jax.checkpoint(one_layer, policy=policy,
+                                       prevent_cse=False,
+                                       static_argnums=(2,))
+
+        def body(carry, bp):
+            h, aux = carry
+            h = _hint(h, cfg, None, None)
+            for j in range(len(cfg.pattern)):
+                h, a = one_layer(bp[j], h, j)
+                aux = aux + a
+            return (h, aux), None
+
+        if remat_on and cfg.remat_unit != "layer":
+            body = jax.checkpoint(body, policy=policy,
+                                  prevent_cse=False)
+        if cfg.scan_layers:
+            (x, aux), _ = lax.scan(body, (x, aux0), params["blocks"])
+        else:
+            aux = aux0
+            for r in range(cfg.n_repeat):
+                bp = jax.tree_util.tree_map(lambda a, r=r: a[r],
+                                            params["blocks"])
+                (x, aux), _ = body((x, aux), bp)
+        new_caches = None
+    else:
+        def body(carry, xs):
+            h, aux = carry
+            bp, bc = xs
+            h = _hint(h, cfg, None, None)
+            ncs = []
+            for j, spec in enumerate(cfg.pattern):
+                h, nc, a = block_apply(bp[j], h, cfg, spec, mode=mode,
+                                       ctx=ctx, cache=bc[j])
+                aux = aux + a
+                ncs.append(nc)
+            return (h, aux), tuple(ncs)
+
+        if cfg.scan_layers:
+            (x, aux), new_caches = lax.scan(body, (x, aux0),
+                                            (params["blocks"], caches))
+        else:
+            aux = aux0
+            per_repeat = []
+            for r in range(cfg.n_repeat):
+                bp = jax.tree_util.tree_map(lambda a, r=r: a[r],
+                                            params["blocks"])
+                bc = jax.tree_util.tree_map(lambda a, r=r: a[r], caches)
+                (x, aux), ncs = body((x, aux), (bp, bc))
+                per_repeat.append(ncs)
+            new_caches = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *per_repeat)
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = unembed(params["embed"], x, cfg.vocab)
+    logits = _hint(logits, cfg, None, "model")   # vocab-sharded loss
+    if cfg.enc_dec and mode != "decode":
+        aux = aux + enc_aux
+    return ModelOutput(logits=logits, caches=new_caches, aux_loss=aux)
+
+
+def train_forward(params, cfg: ArchConfig, batch):
+    return apply_model(params, cfg, batch, mode="train")
+
+
+def prefill(params, cfg: ArchConfig, batch):
+    return apply_model(params, cfg, batch, mode="prefill")
+
+
+def decode_step(params, cfg: ArchConfig, batch):
+    return apply_model(params, cfg, batch, mode="decode")

@@ -1,0 +1,196 @@
+"""Roofline terms from the compiled dry-run artifact.
+
+    compute    = HLO_FLOPs / (chips x 197e12 FLOP/s bf16)
+    memory     = HLO_bytes / (chips x 819e9 B/s HBM)
+    collective = collective_bytes / (chips x 50e9 B/s per ICI link)
+
+``cost_analysis`` provides FLOPs/bytes; collective bytes are NOT in it, so
+we parse the (post-SPMD) HLO text and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) exposes remat/routing
+waste via the MODEL/HLO ratio.
+
+Hardware constants are TPU v5e-class per the assignment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link (~3 links usable per axis hop)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g.  bf16[16,4096,128]{2,1,0}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:\S+\s*=\s*)?"
+    r"\(?([a-z0-9\-\.]+\[[^\)]*)\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.MULTILINE)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims.strip():
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Sum output-shape bytes of collective ops in (post-SPMD) HLO text.
+
+    Counts each op once by its result shape (the payload that crosses the
+    interconnect per participating device, up to the op's algorithmic
+    factor — all-reduce moves ~2x in a ring; we report raw operand bytes
+    and apply algorithm factors in the term computation)."""
+    per_kind: Dict[str, int] = {}
+    total = 0
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        per_kind[kind] = per_kind.get(kind, 0) + nbytes
+        total += nbytes
+    return total, per_kind
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for kind in ("all-gather", "all-reduce", "reduce-scatter",
+                 "all-to-all", "collective-permute"):
+        # count op starts only (async pairs otherwise double-count)
+        n = len(re.findall(rf"\b{kind}(?:-start)?\(", hlo_text))
+        n_done = len(re.findall(rf"\b{kind}-done\(", hlo_text))
+        out[kind] = max(n - n_done, 0) if n_done else n
+    return out
+
+
+# algorithmic on-wire factors per collective (ring algorithms), applied to
+# the result-shape bytes parsed above
+_ALGO_FACTOR = {
+    "all-gather": 1.0,        # result is the gathered (full) buffer
+    "all-reduce": 2.0,        # reduce-scatter + all-gather
+    "reduce-scatter": 1.0,    # input-sized traffic, result is the shard
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+@dataclasses.dataclass
+class Roofline:
+    name: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_per_kind: Dict[str, int]
+    model_flops: Optional[float] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> Optional[float]:
+        if not self.model_flops or not self.hlo_flops:
+            return None
+        return self.model_flops / self.hlo_flops
+
+    def row(self) -> Dict:
+        return {
+            "name": self.name, "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "coll_per_kind": self.coll_per_kind,
+        }
+
+
+def from_compiled(name: str, compiled, chips: int,
+                  model_flops: Optional[float] = None,
+                  hlo_text: Optional[str] = None) -> Roofline:
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):          # some backends return [dict]
+        cost = cost[0] if cost else {}
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    raw, per_kind = collective_bytes(text)
+    weighted = sum(_ALGO_FACTOR[k] * v for k, v in per_kind.items())
+    return Roofline(name=name, chips=chips, hlo_flops=flops,
+                    hlo_bytes=nbytes, coll_bytes=weighted,
+                    coll_per_kind=per_kind, model_flops=model_flops)
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS: 6 * N * D (dense) or 6 * N_active * D (MoE)
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg, shape, n_params_total: int,
+                n_params_active: int) -> float:
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "decode":
+        tokens = shape.global_batch          # one new token per sequence
+        return 2.0 * n_params_active * tokens   # forward only
+    if shape.kind == "prefill":
+        return 2.0 * n_params_active * tokens
+    return 6.0 * n_params_active * tokens
+
+
+def count_active_params(cfg, params_or_shapes) -> Tuple[int, int]:
+    """(total, active) parameter counts; active scales MoE expert blocks
+    by top_k/n_experts (+ shared expert fully)."""
+    import jax
+    total = 0
+    active = 0
+    flat = jax.tree_util.tree_flatten_with_path(params_or_shapes)[0]
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if "ffn" in keys and any(k in ("wi", "wg", "wo") for k in keys) \
+                and "shared" not in keys:
+            # stacked expert tensors (E, ...) on a MoE layer
+            moe_specs = [s.moe for s in cfg.pattern if s.moe is not None]
+            if moe_specs and len(leaf.shape) >= 3:
+                spec = moe_specs[0]
+                n = n * spec.top_k // spec.n_experts
+        active += n
+    return total, active

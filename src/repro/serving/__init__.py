@@ -1,0 +1,3 @@
+from repro.serving.allocator import BlockAllocator, OutOfPages
+from repro.serving.engine import ServingEngine
+from repro.serving.sampler import sample_tokens

@@ -1,0 +1,48 @@
+"""Paged KV block allocator — vLLM-style free list over the page pool.
+
+This block table is exactly the paper's "block-indirection table": the
+engine registers it (and the KV pool) as Tiara memory regions so a remote
+node can resolve logical block -> physical page on the *memory side* in
+one round trip (see serving/tiara_offload.py and the disaggregated_kv
+example)."""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class OutOfPages(RuntimeError):
+    pass
+
+
+class BlockAllocator:
+    def __init__(self, n_pages: int):
+        self.n_pages = int(n_pages)
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._owner: Dict[int, int] = {}     # page -> seq id
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int, owner: int) -> List[int]:
+        if n > len(self._free):
+            raise OutOfPages(f"need {n} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._owner[p] = owner
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if p in self._owner:
+                del self._owner[p]
+                self._free.append(p)
+
+    def owned_by(self, owner: int) -> List[int]:
+        return [p for p, o in self._owner.items() if o == owner]
+
+    def utilization(self) -> float:
+        return 1.0 - len(self._free) / self.n_pages

@@ -1,0 +1,194 @@
+"""Continuous-batching serving engine over the paged KV cache.
+
+Decoder-only attention architectures (the vLLM/PagedAttention scenario the
+paper targets).  Fixed B decode slots; prompts prefill into a free slot's
+pages (bucketed-by-length compilations), then every engine step decodes
+all active slots in one batched call through the paged-attention path.
+
+Recurrent/enc-dec archs are served via the transformer API directly (their
+state is batch-indexed, not paged); DESIGN.md §5 notes the Tiara technique
+has no indirection to collapse there.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.models import transformer as tf
+from repro.serving.allocator import BlockAllocator
+from repro.serving.sampler import sample_tokens
+
+
+@dataclasses.dataclass
+class Sequence:
+    sid: int
+    prompt: List[int]
+    max_new: int
+    slot: Optional[int] = None
+    pages: Optional[List[int]] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
+                 max_seq: int = 512, n_pages: Optional[int] = None,
+                 eos_id: int = 0, temperature: float = 0.0, seed: int = 0):
+        assert not cfg.enc_dec and all(s.kind == "attn"
+                                       for s in cfg.pattern), \
+            "engine serves decoder-only attention archs"
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.pages_per_seq = (max_seq + cfg.page_size - 1) // cfg.page_size
+        pool = n_pages or max_slots * self.pages_per_seq
+        self.allocator = BlockAllocator(pool)
+
+        # device state; one extra *scratch* page absorbs the KV writes of
+        # inactive decode slots (they decode garbage in the batched step —
+        # harmless, but they must never touch a live sequence's pages)
+        self.scratch_page = pool
+        self.caches = tf.init_caches(cfg, max_slots, self.pages_per_seq)
+        self.caches = tuple(
+            jax.tree_util.tree_map(
+                lambda a: (jnp.pad(a, ((0, 0), (0, 1)) + ((0, 0),)
+                                   * (a.ndim - 2))
+                           if a.ndim >= 2 and a.shape[1] == pool else a),
+                c) for c in self.caches)
+        self.block_tables = np.full((max_slots, self.pages_per_seq),
+                                    self.scratch_page, np.int32)
+        self.lengths = np.zeros((max_slots,), np.int32)
+        self.active: List[Optional[Sequence]] = [None] * max_slots
+        self.waiting: List[Sequence] = []
+        self.completed: Dict[int, List[int]] = {}
+        self._next_sid = 0
+        self._rng = jax.random.PRNGKey(seed)
+
+        self._prefill_jit = jax.jit(
+            lambda p, b: tf.apply_model(p, cfg, b, mode="prefill"))
+        self._decode_jit = jax.jit(
+            lambda p, b: tf.apply_model(p, cfg, b, mode="decode"))
+
+    # -- client API -------------------------------------------------------
+
+    def submit(self, prompt: List[int], max_new: int = 32) -> int:
+        seq = Sequence(sid=self._next_sid, prompt=list(prompt),
+                       max_new=max_new)
+        self._next_sid += 1
+        self.waiting.append(seq)
+        return seq.sid
+
+    def finished(self) -> bool:
+        return not self.waiting and all(s is None for s in self.active)
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _admit(self) -> None:
+        for slot in range(self.max_slots):
+            if self.active[slot] is not None or not self.waiting:
+                continue
+            seq = self.waiting.pop(0)
+            need = self.pages_per_seq
+            try:
+                pages = self.allocator.alloc(need, seq.sid)
+            except Exception:
+                self.waiting.insert(0, seq)
+                return
+            seq.slot, seq.pages = slot, pages
+            self.block_tables[slot] = np.asarray(pages, np.int32)
+            self._prefill(seq)
+            self.active[slot] = seq
+
+    def _prefill(self, seq: Sequence) -> None:
+        slot = seq.slot
+        plen = len(seq.prompt)
+        # bucket prompt length to limit compilations
+        bucket = max(self.cfg.page_size,
+                     1 << int(np.ceil(np.log2(max(plen, 1)))))
+        bucket = min(bucket, self.max_seq)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = seq.prompt
+        batch = {
+            "tokens": jnp.asarray(toks),
+            "caches": self._slot_caches(slot),
+            "block_tables": jnp.asarray(self.block_tables[slot:slot + 1]),
+            "lengths": jnp.asarray([plen], np.int32),
+        }
+        out = self._prefill_jit(self.params, batch)
+        self._merge_slot_caches(slot, out.caches)
+        self.lengths[slot] = plen
+        logits = np.asarray(out.logits[0, plen - 1])
+        self._rng, sub = jax.random.split(self._rng)
+        nxt = sample_tokens(logits[None], sub, self.temperature)[0]
+        seq.output.append(int(nxt))
+
+    # Per-slot cache views: pages are global (shared pool), so attention
+    # caches pass through whole; only batch-indexed leaves (none for
+    # attention-only archs) would need slicing.
+    def _slot_caches(self, slot: int):
+        return self.caches
+
+    def _merge_slot_caches(self, slot: int, new_caches) -> None:
+        self.caches = new_caches
+
+    # -- engine step -----------------------------------------------------------
+
+    def step(self) -> Dict[int, List[int]]:
+        """Admit + decode one token for every active sequence."""
+        self._admit()
+        slots = [i for i, s in enumerate(self.active) if s is not None]
+        if not slots:
+            return self.results()
+        tokens = np.zeros((self.max_slots, 1), np.int32)
+        for i, seq in enumerate(self.active):
+            if seq is not None and seq.output:
+                tokens[i, 0] = seq.output[-1]
+        batch = {
+            "tokens": jnp.asarray(tokens),
+            "caches": self.caches,
+            "block_tables": jnp.asarray(self.block_tables),
+            "lengths": jnp.asarray(self.lengths),
+        }
+        out = self._decode_jit(self.params, batch)
+        self.caches = out.caches
+        self._rng, sub = jax.random.split(self._rng)
+        nxt = sample_tokens(np.asarray(out.logits[:, 0]), sub,
+                            self.temperature)
+        for slot in slots:
+            seq = self.active[slot]
+            self.lengths[slot] += 1
+            tok = int(nxt[slot])
+            seq.output.append(tok)
+            if (tok == self.eos_id
+                    or len(seq.output) >= seq.max_new
+                    or self.lengths[slot] >= self.max_seq - 1):
+                seq.done = True
+                self.completed[seq.sid] = list(seq.output)
+                self.allocator.free(seq.pages)
+                self.active[slot] = None
+                self.lengths[slot] = 0
+                self.block_tables[slot] = self.scratch_page
+        return self.results()
+
+    def results(self) -> Dict[int, List[int]]:
+        out = dict(self.completed)
+        for seq in list(self.waiting) + [s for s in self.active if s]:
+            out[seq.sid] = list(seq.output)
+        return out
+
+    def run_to_completion(self, max_steps: int = 10_000
+                          ) -> Dict[int, List[int]]:
+        steps = 0
+        while not self.finished() and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.results()

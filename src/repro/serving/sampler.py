@@ -1,0 +1,22 @@
+"""Token sampling: greedy / temperature / top-k."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sample_tokens(logits, key, temperature: float = 0.0,
+                  top_k: Optional[int] = None) -> np.ndarray:
+    """logits (B, V) -> (B,) int32."""
+    logits = jnp.asarray(logits, jnp.float32)
+    if temperature <= 0.0:
+        return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+    logits = logits / temperature
+    if top_k is not None:
+        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return np.asarray(jax.random.categorical(key, logits), np.int32)

@@ -1,0 +1,5 @@
+from repro.training.optimizer import (AdamWConfig, make_adamw,
+                                      warmup_cosine)
+from repro.training.train_step import (TrainState, lm_loss,
+                                       make_train_step)
+from repro.training.trainer import Trainer, TrainerConfig

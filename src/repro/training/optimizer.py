@@ -1,0 +1,167 @@
+"""Optimizers: AdamW with fp32 state, and 8-bit block-quantized AdamW.
+
+The 8-bit variant keeps both moments as int8 codes with per-block fp32
+absmax scales (block = 256 elements).  On maverick-400B this is what
+brings optimizer state under v5e HBM at 256 chips (see EXPERIMENTS.md
+§Roofline); the quantization error is bounded by the blockwise absmax and
+validated by a convergence test against fp32 Adam.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QBLOCK = 256
+
+
+# ---------------------------------------------------------------------------
+# Blockwise int8 quantization
+# ---------------------------------------------------------------------------
+
+
+class Q8(NamedTuple):
+    codes: jax.Array      # int8, original shape
+    scales: jax.Array     # f32, x.shape[:-1] + (ceil(last/QBLOCK),)
+
+
+def _last_blocks(n: int) -> int:
+    return (n + QBLOCK - 1) // QBLOCK
+
+
+def quantize8(x: jax.Array) -> Q8:
+    """Blockwise int8 along the LAST axis only.  Shape-preserving per
+    leading dim, so a sharded tensor quantizes shard-locally — a global
+    flatten would force GSPMD to all-gather the whole tensor (measured:
+    5.9 TiB/device on maverick-400B before this fix, EXPERIMENTS.md
+    §Perf)."""
+    *lead, n = x.shape
+    nb = _last_blocks(n)
+    pad = nb * QBLOCK - n
+    blocks = jnp.pad(x.astype(jnp.float32),
+                     [(0, 0)] * len(lead) + [(0, pad)])
+    blocks = blocks.reshape(*lead, nb, QBLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=-1) / 127.0, 1e-12)
+    codes = jnp.clip(jnp.round(blocks / scale[..., None]), -127, 127)
+    codes = codes.astype(jnp.int8).reshape(*lead, nb * QBLOCK)
+    codes = jax.lax.slice_in_dim(codes, 0, n, axis=len(lead))
+    return Q8(codes=codes, scales=scale)
+
+
+def dequantize8(q: Q8, shape) -> jax.Array:
+    *lead, n = shape
+    nb = _last_blocks(n)
+    pad = nb * QBLOCK - n
+    flat = jnp.pad(q.codes.astype(jnp.float32),
+                   [(0, 0)] * len(lead) + [(0, pad)])
+    vals = flat.reshape(*lead, nb, QBLOCK) * q.scales[..., None]
+    vals = vals.reshape(*lead, nb * QBLOCK)
+    return jax.lax.slice_in_dim(vals, 0, n, axis=len(lead))
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5
+                         * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    state_bits: int = 32          # 32 or 8
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    mu: any
+    nu: any
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def make_adamw(cfg: AdamWConfig):
+    """Returns (init_fn, update_fn).  update: (grads, state, params) ->
+    (new_params, new_state, metrics)."""
+    q8 = cfg.state_bits == 8
+
+    # The second moment is quantized in the *sqrt domain*: linear int8
+    # flushes small nu to zero inside high-dynamic-range blocks, which
+    # explodes mu/sqrt(nu) (the reason bitsandbytes uses dynamic quant).
+    def init(params) -> AdamWState:
+        def zero(p):
+            z = jnp.zeros(p.shape, jnp.float32)
+            return quantize8(z) if q8 else z
+        return AdamWState(count=jnp.zeros((), jnp.int32),
+                          mu=jax.tree_util.tree_map(zero, params),
+                          nu=jax.tree_util.tree_map(zero, params))
+
+    def update(grads, state: AdamWState, params):
+        gnorm = _global_norm(grads)
+        if cfg.clip_norm is not None:
+            scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(
+                lambda g: (g.astype(jnp.float32) * scale), grads)
+        else:
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+        count = state.count + 1
+        lr = cfg.lr(count)
+        c1 = 1 - cfg.b1 ** count.astype(jnp.float32)
+        c2 = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            if q8:
+                mu = dequantize8(mu, p.shape)
+                nu = jnp.square(dequantize8(nu, p.shape))
+            mu = cfg.b1 * mu + (1 - cfg.b1) * g
+            nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+            step = (mu / c1) / (jnp.sqrt(nu / c2) + cfg.eps)
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+            if q8:
+                mu, nu = quantize8(mu), quantize8(jnp.sqrt(nu))
+            return new_p, mu, nu
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_mu = tdef.flatten_up_to(state.mu)
+        flat_nu = tdef.flatten_up_to(state.nu)
+        out = [upd(p, g, m, n) for p, g, m, n
+               in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_mu = tdef.unflatten([o[1] for o in out])
+        new_nu = tdef.unflatten([o[2] for o in out])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, AdamWState(count, new_mu, new_nu), metrics
+
+    return init, update

@@ -1,0 +1,100 @@
+"""Train-step builder: loss, grad accumulation, remat, optional int8
+gradient compression for the cross-pod all-reduce."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs import ArchConfig
+from repro.models import transformer as tf
+from repro.training.optimizer import AdamWConfig, AdamWState, make_adamw
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt: AdamWState
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array,
+            mask: Optional[jax.Array] = None,
+            z_coef: float = 1e-4):
+    """Next-token cross entropy + z-loss; logits f32 (B, S, V)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    nll = logz - gold
+    zloss = z_coef * jnp.square(logz)
+    per_tok = nll + zloss
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    loss = jnp.sum(per_tok * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"nll": jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)}
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, *,
+                    micro_batches: int = 1,
+                    grad_compressor: Optional[Callable] = None):
+    """Returns (init_state_fn, train_step_fn).
+
+    ``grad_compressor``: optional fn(grads)->grads inserted between accum
+    and the optimizer (e.g. the int8 all-reduce wrapper for the cross-pod
+    hop; see repro.distributed.compression)."""
+    opt_init, opt_update = make_adamw(opt_cfg)
+
+    def init_state(key) -> TrainState:
+        params = tf.init_params(cfg, key)
+        return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                          opt=opt_init(params))
+
+    def loss_fn(params, batch):
+        out = tf.apply_model(params, cfg, batch, mode="train")
+        loss, m = lm_loss(out.logits, batch["labels"],
+                          batch.get("loss_mask"))
+        return loss + out.aux_loss, {**m, "aux": out.aux_loss,
+                                     "loss": loss}
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def one_micro(params, mbatch):
+        (_, metrics), grads = grad_fn(params, mbatch)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch: Dict[str, Any]):
+        params = state.params
+        if micro_batches <= 1:
+            grads, metrics = one_micro(params, batch)
+        else:
+            def reshape(x):
+                return x.reshape((micro_batches,
+                                  x.shape[0] // micro_batches)
+                                 + x.shape[1:])
+            mb = jax.tree_util.tree_map(reshape, batch)
+
+            def body(acc, mbatch):
+                grads, metrics = one_micro(params, mbatch)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                return acc, metrics
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, metrics_stack = lax.scan(body, zeros, mb)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / micro_batches, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics_stack)
+        if grad_compressor is not None:
+            grads = grad_compressor(grads)
+        new_params, new_opt, opt_metrics = opt_update(grads, state.opt,
+                                                      params)
+        metrics = {**metrics, **opt_metrics}
+        return TrainState(step=state.step + 1, params=new_params,
+                          opt=new_opt), metrics
+
+    return init_state, train_step

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run sets its own device count in
+# subprocesses); keep CPU determinism.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

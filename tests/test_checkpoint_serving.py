@@ -1,0 +1,102 @@
+"""Checkpoint manager + serving engine."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import manager as ckpt
+from repro.configs import get_config, reduce_config
+from repro.models import transformer as tf
+from repro.serving import BlockAllocator, OutOfPages, ServingEngine
+
+
+def test_checkpoint_atomic_retention_async(tmp_path):
+    d = str(tmp_path)
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 3), jnp.bfloat16)},
+            "t": (jnp.zeros(2), jnp.asarray(7))}
+    saver = ckpt.AsyncSaver()
+    for step in (10, 20, 30, 40):
+        saver.save(tree, d, step)
+    saver.wait()
+    assert ckpt.latest_step(d) == 40
+    removed = ckpt.retain(d, keep=2)
+    assert len(removed) == 2 and ckpt.latest_step(d) == 40
+    out = ckpt.restore(tree, d)
+    assert np.array_equal(out["a"], tree["a"])
+    assert out["b"]["c"].dtype == jnp.bfloat16
+    assert int(out["t"][1]) == 7
+
+
+def test_checkpoint_restore_with_shardings(tmp_path):
+    """Reshard-on-load: restore applies the target sharding (elastic)."""
+    d = str(tmp_path)
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    ckpt.save(tree, d, 1)
+    sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    out = ckpt.restore(tree, d, shardings=lambda leaf: sh)
+    assert out["w"].sharding == sh
+    assert np.array_equal(out["w"], tree["w"])
+
+
+def test_checkpoint_missing_key_rejected(tmp_path):
+    d = str(tmp_path)
+    ckpt.save({"a": jnp.zeros(2)}, d, 1)
+    with pytest.raises(KeyError):
+        ckpt.restore({"a": jnp.zeros(2), "b": jnp.zeros(2)}, d)
+
+
+def test_block_allocator():
+    a = BlockAllocator(8)
+    p1 = a.alloc(3, owner=1)
+    p2 = a.alloc(5, owner=2)
+    assert a.free_pages == 0 and a.utilization() == 1.0
+    with pytest.raises(OutOfPages):
+        a.alloc(1, owner=3)
+    a.free(p1)
+    assert a.free_pages == 3
+    assert sorted(a.owned_by(2)) == sorted(p2)
+
+
+def test_engine_greedy_matches_full_forward():
+    cfg = reduce_config(get_config("tiny-lm"))
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = [5, 9, 13, 2, 7, 11]
+    eng = ServingEngine(cfg, params, max_slots=2, max_seq=64,
+                        temperature=0.0, eos_id=-1)
+    sid = eng.submit(prompt, max_new=4)
+    out = eng.run_to_completion()[sid]
+    toks = list(prompt)
+    raw = []
+    for _ in range(4):
+        logits = tf.apply_model(
+            params, cfg, {"tokens": jnp.asarray([toks], jnp.int32)},
+            mode="train").logits
+        nxt = int(jnp.argmax(logits[0, -1]))
+        raw.append(nxt)
+        toks.append(nxt)
+    assert out == raw
+
+
+def test_engine_continuous_batching_many_sequences():
+    cfg = reduce_config(get_config("tiny-lm"))
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, max_slots=3, max_seq=64,
+                        temperature=0.0, eos_id=-1)
+    rng = np.random.default_rng(0)
+    sids = [eng.submit(list(rng.integers(1, cfg.vocab, 5 + i)), max_new=5)
+            for i in range(7)]           # more sequences than slots
+    out = eng.run_to_completion()
+    assert set(out) == set(sids)
+    assert all(len(v) == 5 for v in out.values())
+    assert eng.allocator.free_pages == eng.allocator.n_pages
+
+
+def test_engine_rejects_recurrent_archs():
+    cfg = reduce_config(get_config("rwkv6-1.6b"))
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(AssertionError):
+        ServingEngine(cfg, params)

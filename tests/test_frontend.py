@@ -1,0 +1,121 @@
+"""Restricted-Python compiler: correct lowering + subset enforcement."""
+
+import numpy as np
+import pytest
+
+from repro.core import isa, memory, pyvm, vm
+from repro.core.frontend import TiaraCompileError, compile_source
+from repro.core.memory import Grant
+from repro.core.verifier import VerificationError, verify
+from repro.core import operators as ops
+
+
+def test_compiled_walk_matches_handwritten():
+    w = ops.GraphWalk(n_nodes=128, max_depth=32)
+    rt = w.regions()
+    prog = compile_source('''
+def walk(start, depth):
+    cur = start
+    for _ in bounded(depth, 32):
+        cur = load("graph", cur + 1)
+    return load("graph", cur)
+''', regions=rt)
+    vop = verify(prog, grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(1, rt)
+    order = w.populate(mem, rt)
+    for d in (0, 5, 13):
+        r = vm.invoke(vop, rt, mem.copy(), [int(order[0]) * 8, d])
+        assert r.ok and r.ret == w.reference(order, int(order[0]), d)
+
+
+def test_compiled_lock_retries_then_fails():
+    d = ops.DistLock()
+    rt = d.regions()
+    prog = compile_source('''
+def lock_op(latch, state, newval, r1dev, r1off, r2dev, r2off):
+    ok = 1
+    for _ in range(8):
+        ok = cas("lock", latch, 0, 1)
+        if ok == 0:
+            break
+    if ok != 0:
+        return fail(ok)
+    old = load("lock", state)
+    store("lock", state, newval)
+    memcpy("lock", r1off, "lock", state, 1, dst_dev=r1dev, is_async=True)
+    memcpy("lock", r2off, "lock", state, 1, dst_dev=r2dev, is_async=True)
+    wait(0)
+    store("lock", latch, 0)
+    return old
+''', regions=rt)
+    vop = verify(prog, grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(3, rt)
+    memory.write_region(mem, rt, 0, "lock", [1, 42])    # latch held
+    params = [0, 1, 7, 1, 1, 2, 1]
+    r1 = pyvm.run(vop, rt, mem.copy(), params)
+    r2 = vm.invoke(vop, rt, mem.copy(), params)
+    assert r1.status == r2.status == isa.STATUS_FAIL
+    assert r1.steps == r2.steps > 8 * 4     # the retry loop really loops
+
+    mem[0, rt["lock"].base] = 0
+    r = vm.invoke(vop, rt, mem, params)
+    assert r.ok and r.ret == 42
+    assert r.mem[2, rt["lock"].base + 1] == 7
+
+
+def test_consts_fold_and_shift_mask():
+    p = ops.PageTableWalk(fanout=16, n_pages=16)
+    rt = p.regions()
+    prog = compile_source('''
+def ptw(va):
+    l2 = load("pt1", (va >> S1) & MASK)
+    l3 = load("pt2", l2 + ((va >> S2) & MASK))
+    page = load("pt3", l3 + ((va >> S3) & MASK))
+    return page
+''', regions=rt, consts=dict(S1=p.page_shift + 2 * p.bits,
+                             S2=p.page_shift + p.bits,
+                             S3=p.page_shift, MASK=p.fanout - 1))
+    vop = verify(prog, grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(1, rt)
+    vamap = p.populate(mem, rt)
+    va, pp = next(iter(vamap.items()))
+    assert vm.invoke(vop, rt, mem, [va]).ret == pp
+
+
+@pytest.mark.parametrize("src,err", [
+    ("def f(a):\n    while a > 0:\n        a -= 1\n    return a",
+     TiaraCompileError),                         # unbounded loops
+    ("def f(a):\n    for i in range(a):\n        pass\n    return a",
+     TiaraCompileError),                         # dynamic range()
+    ("def f(a):\n    return a / 2", TiaraCompileError),   # float division
+    ("def f(a):\n    b = [1, 2]\n    return a", TiaraCompileError),
+    ("def f(a):\n    return g(a)", TiaraCompileError),    # calls
+])
+def test_subset_enforced(src, err):
+    with pytest.raises(err):
+        compile_source(src)
+
+
+def test_compiled_programs_are_verifier_clean():
+    """Everything the frontend emits must pass registration verification
+    (the SCoP restriction makes this true by construction)."""
+    w = ops.GraphWalk(n_nodes=64)
+    rt = w.regions()
+    prog = compile_source('''
+def f(a, b):
+    acc = 0
+    for i in range(10):
+        if i > 4:
+            acc += load("graph", a + i)
+        else:
+            acc += b
+    store("reply", 0, acc)
+    return acc
+''', regions=rt)
+    vop = verify(prog, grant=Grant.all_of(rt), regions=rt)
+    assert vop.step_bound < 200
+    mem = memory.make_pool(1, rt)
+    w.populate(mem, rt)
+    r1 = pyvm.run(vop, rt, mem.copy(), [8, 3])
+    r2 = vm.invoke(vop, rt, mem.copy(), [8, 3])
+    assert r1.ret == r2.ret and r1.ok

@@ -1,0 +1,154 @@
+"""ISA encoding + static verifier unit tests."""
+
+import numpy as np
+import pytest
+
+from repro.core import isa, memory
+from repro.core.isa import Alu, Instr, Op
+from repro.core.memory import Grant, RegionTable, packed_table
+from repro.core.program import OperatorBuilder, TiaraProgram
+from repro.core.verifier import VerificationError, verify
+from repro.core import operators as ops
+
+
+def rt2():
+    return packed_table([("a", 64), ("b", 64)])
+
+
+def grant_all(rt, tenant="t"):
+    return Grant.all_of(rt, tenant)
+
+
+def test_encode_decode_roundtrip():
+    ins = Instr(Op.MEMCPY, dst=-1, a=1, b=2, c=3, d=0, e=4,
+                flags=isa.FLAG_ASYNC, imm=128, imm2=7)
+    row = ins.encode()
+    back = Instr.decode(row)
+    assert back == ins
+
+
+def test_disassemble_all_ops():
+    rt = rt2()
+    b = OperatorBuilder("all", n_params=2, regions=rt)
+    r = b.reg()
+    b.movi(r, 42)
+    b.add(r, r, 1)
+    b.load(r, "a", r)
+    b.store(r, "b", r)
+    b.memcpy(dst_region="b", dst_off=r, src_region="a", src_off=r,
+             n_words=4, is_async=True)
+    b.cas(r, "a", r, b.param(0), b.param(1))
+    b.wait(0)
+    b.ret(r)
+    prog = b.build()
+    text = prog.disassemble()
+    for frag in ("memcpy async", "cas", "wait", "ret"):
+        assert frag in text
+    verify(prog, grant=grant_all(rt), regions=rt)
+
+
+def test_backward_jump_rejected():
+    code = isa.encode_program([
+        Instr(Op.JUMP, d=int(Alu.ALWAYS), imm2=-1),
+        Instr(Op.RET),
+    ])
+    prog = TiaraProgram("bad", code, 0, (), ())
+    with pytest.raises(VerificationError, match="backward"):
+        verify(prog)
+
+
+def test_jump_into_loop_rejected():
+    code = isa.encode_program([
+        Instr(Op.JUMP, d=int(Alu.ALWAYS), imm2=2),   # -> pc 3 (inside body)
+        Instr(Op.LOOP, imm=3, imm2=2),
+        Instr(Op.NOP),
+        Instr(Op.NOP),
+        Instr(Op.RET),
+    ])
+    prog = TiaraProgram("bad", code, 0, (), ())
+    with pytest.raises(VerificationError, match="enters a loop body"):
+        verify(prog)
+
+
+def test_missing_ret_rejected():
+    code = isa.encode_program([Instr(Op.NOP)])
+    with pytest.raises(VerificationError, match="Ret"):
+        verify(TiaraProgram("bad", code, 0, (), ()))
+
+
+def test_step_bound_enforced():
+    rt = rt2()
+    b = OperatorBuilder("big", n_params=0, regions=rt)
+    with b.loop(1000):
+        with b.loop(1000):
+            b.nop()
+    b.ret()
+    prog = b.build()
+    with pytest.raises(VerificationError, match="step bound"):
+        verify(prog, max_steps=100_000)
+    v = verify(prog, max_steps=10_000_000)
+    assert v.step_bound >= 1_000_000
+
+
+def test_nesting_depth_enforced():
+    rt = rt2()
+    b = OperatorBuilder("deep", n_params=0, regions=rt)
+    ctxs = [b.loop(2).__enter__() for _ in range(9)]
+    b.nop()
+    for c in reversed(ctxs):
+        c.__exit__(None, None, None)
+    b.ret()
+    with pytest.raises(VerificationError, match="nesting depth"):
+        verify(b.build(), max_steps=10_000_000)
+
+
+def test_region_grant_enforced():
+    rt = rt2()
+    b = OperatorBuilder("w", n_params=0, regions=rt)
+    r = b.const(0)
+    b.store(r, "b", r)
+    b.ret()
+    prog = b.build()
+    verify(prog, grant=Grant.of("rw", [0, 1], [1]), regions=rt)
+    with pytest.raises(VerificationError, match="not writable"):
+        verify(prog, grant=Grant.of("ro", [0, 1], []), regions=rt)
+    with pytest.raises(VerificationError, match="not readable"):
+        verify(prog, grant=Grant.of("none", [0], []), regions=rt)
+
+
+def test_readonly_region_enforced():
+    rt = RegionTable(256)
+    rt.register("ro", 64, writable=False)
+    b = OperatorBuilder("w", n_params=0, regions=rt)
+    r = b.const(0)
+    b.store(r, "ro", r)
+    b.ret()
+    with pytest.raises(VerificationError, match="read-only"):
+        verify(b.build(), regions=rt)
+
+
+def test_memcpy_burst_cap():
+    rt = rt2()
+    b = OperatorBuilder("m", n_params=0, regions=rt)
+    r = b.const(0)
+    with pytest.raises(ValueError):
+        b.memcpy(dst_region="b", dst_off=r, src_region="a", src_off=r,
+                 n_words=isa.MAX_MEMCPY_WORDS + 1)
+
+
+def test_instruction_store_capacity():
+    rt = rt2()
+    b = OperatorBuilder("huge", n_params=0, regions=rt)
+    with pytest.raises(RuntimeError, match="1024"):
+        for _ in range(isa.INSTR_STORE_SIZE + 1):
+            b.nop()
+
+
+def test_workload_operators_verify():
+    for name, cls in ops.ALL_WORKLOADS.items():
+        w = cls()
+        rt = w.regions()
+        vop = verify(w.build(rt), grant=Grant.all_of(rt), regions=rt)
+        assert vop.step_bound > 0
+        assert vop.program.n_instr <= 50, \
+            f"{name}: paper says operators are 10-50 instructions"

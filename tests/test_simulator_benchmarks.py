@@ -1,0 +1,115 @@
+"""Cycle simulator + benchmark harness sanity and paper-anchor checks."""
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core import memory, pyvm
+from repro.core import operators as ops
+from repro.core import simulator as sim
+from repro.core.memory import Grant
+from repro.core.verifier import verify
+
+
+def traced(workload, build, params, n_dev=1, setup=None):
+    rt = workload.regions()
+    vop = verify(build(rt), grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(n_dev, rt)
+    if hasattr(workload, "populate"):
+        workload.populate(mem, rt)
+    if setup:
+        setup(mem, rt)
+    res = pyvm.run(vop, rt, mem, params, record_trace=True)
+    assert res.status in (0, 1)
+    return vop, res
+
+
+def test_latency_monotonic_in_depth():
+    w = ops.GraphWalk(n_nodes=256, max_depth=16)
+    lats = []
+    for d in (1, 3, 6, 12):
+        vop, res = traced(w, w.build, [0, d])
+        ts = sim.simulate_task(vop, res.trace)
+        lats.append(ts.latency_us)
+    assert all(a < b for a, b in zip(lats, lats[1:]))
+    # near 1 RTT + d * hop, far below d * RTT
+    assert lats[-1] < cm.rdma_chain_latency_us(12)
+
+
+def test_throughput_bottleneck_is_dma_channel_for_chase():
+    # the paper's walk: loads only (bench_graph uses the same program)
+    from repro.core.frontend import compile_source
+    w = ops.GraphWalk(n_nodes=256, max_depth=16)
+    rt = w.regions()
+    prog = compile_source('''
+def walk(start, depth):
+    cur = start
+    for _ in bounded(depth, 16):
+        cur = load("graph", cur + 1)
+    return cur
+''', regions=rt)
+    vop = verify(prog, grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(1, rt)
+    w.populate(mem, rt)
+    res = pyvm.run(vop, rt, mem, [0, 3], record_trace=True)
+    ts = sim.simulate_task(vop, res.trace)
+    assert sim.bottleneck(ts) in ("dma_channel", "slots")
+    x = sim.saturated_throughput_mops(ts)
+    assert x > cm.rdma_chain_throughput_mops(3)   # the paper's 3.4x claim
+
+
+def test_distlock_two_rtts():
+    d = ops.DistLock()
+
+    def setup(mem, rt):
+        memory.write_region(mem, rt, 0, "lock", [0, 0])
+
+    vop, res = traced(d, d.build, [0, 1, 9, 1, 1, 2, 1], n_dev=3,
+                      setup=setup)
+    ts = sim.simulate_task(vop, res.trace)
+    # one RTT on the wire for replicas + request/reply halves ~= 2 RTTs
+    assert 2 * cm.DEFAULT_HW.rtt_us <= ts.latency_us \
+        <= 2 * cm.DEFAULT_HW.rtt_us + 5.0
+
+
+def test_pipelined_gather_saturates_wire():
+    k = ops.PagedKVFetch(n_blocks_pool=32, block_bytes=32768,
+                         max_req_blocks=64)
+    rt = k.regions()
+    vop = verify(k.build(rt, remote_reply=True), grant=Grant.all_of(rt),
+                 regions=rt)
+    mem = memory.make_pool(2, rt)
+    k.populate(mem, rt)
+    k.make_request(mem, rt, list(np.arange(64) % 32))
+    res = pyvm.run(vop, rt, mem, [64, 1], record_trace=True)
+    ts = sim.simulate_task(vop, res.trace, pipelined=True,
+                           serial_chain=False)
+    gbs = sim.effective_gather_gbs(ts, 64 * 32768)
+    assert gbs > 0.75 * cm.DEFAULT_HW.wire_eff_gbs   # near line rate
+
+
+def test_benchmark_modules_produce_paper_rows():
+    from benchmarks import bench_offload, bench_table1
+    rows = bench_table1.rows()
+    vals = {r.name: r.derived for r in rows}
+    assert vals["table1/graph_d10/tiara"] == 1
+    assert vals["table1/ptw3/tiara"] == 1
+    assert vals["table1/dist_lock/tiara"] == 2
+    assert vals["table1/paged_attention/tiara"] == 1
+    assert vals["table1/moe_gather/tiara"] == 1
+    assert vals["table1/nsa_select/tiara"] == 1
+
+    rows = bench_offload.rows()
+    reg = {r.name: r for r in rows}
+    r = reg["fig2/atomic_read/bf2_regression"]
+    assert abs(r.derived - 0.38) < 0.03    # the paper's 38% regression
+
+
+def test_claim_coverage_ratio():
+    """The full harness keeps >=75% of paper-anchored rows within 30%."""
+    from benchmarks import bench_graph, bench_lock, bench_ptw
+    rows = bench_graph.rows() + bench_ptw.rows() + bench_lock.rows()
+    claims = [r for r in rows if r.paper is not None and r.ratio()]
+    ok = sum(1 for r in claims if 0.7 <= r.ratio() <= 1.3)
+    assert ok / len(claims) >= 0.75, \
+        [(r.name, r.ratio()) for r in claims if not 0.7 <= r.ratio() <= 1.3]

@@ -1,0 +1,153 @@
+"""Hypothesis property tests: the system's core invariants.
+
+1. VM == oracle on randomized (valid) operators — full architectural state.
+2. Termination: executed steps never exceed the verified bound.
+3. Isolation: no reachable execution writes outside the declared writable
+   regions, for any parameters and any memory contents.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isa, memory, pyvm, vm
+from repro.core.isa import Alu
+from repro.core.memory import Grant, packed_table
+from repro.core.program import OperatorBuilder
+from repro.core.verifier import verify
+
+REGIONS = [("r0", 64), ("r1", 32), ("ro", 16)]
+
+
+def build_table():
+    rt = packed_table(REGIONS)
+    return rt
+
+
+@st.composite
+def random_operator(draw):
+    """A random *structurally valid* operator: straight-line ALU/memory
+    instructions, an optional bounded loop with a conditional break, and a
+    final Ret.  Offsets/values are unconstrained int64 — isolation must
+    hold regardless (register-chained loads chase arbitrary data)."""
+    rt = build_table()
+    b = OperatorBuilder("rand", n_params=4, regions=rt)
+    regs = [b.reg() for _ in range(4)]
+
+    def rand_instr(depth):
+        kind = draw(st.sampled_from(
+            ["movi", "alu", "load", "store", "memcpy", "cas"]))
+        r = draw(st.sampled_from(regs))
+        a = draw(st.sampled_from(regs + list(b.params)))
+        region = draw(st.sampled_from(["r0", "r1", "ro"]))
+        wregion = draw(st.sampled_from(["r0", "r1"]))
+        if kind == "movi":
+            b.movi(r, draw(st.integers(-2**40, 2**40)))
+        elif kind == "alu":
+            op = draw(st.sampled_from([Alu.ADD, Alu.SUB, Alu.MUL, Alu.XOR,
+                                       Alu.SHL, Alu.SHR, Alu.MIN]))
+            b.alu(r, a, op, draw(st.sampled_from(
+                regs + [draw(st.integers(-63, 63))])))
+        elif kind == "load":
+            b.load(r, region, a, draw(st.integers(0, 8)))
+        elif kind == "store":
+            b.store(r, wregion, a)
+        elif kind == "memcpy":
+            b.memcpy(dst_region=wregion, dst_off=r,
+                     src_region=region, src_off=a,
+                     n_words=draw(st.integers(1, 16)),
+                     is_async=draw(st.booleans()))
+        elif kind == "cas":
+            b.cas(r, wregion, a, draw(st.sampled_from(regs)),
+                  draw(st.sampled_from(regs)))
+
+    for _ in range(draw(st.integers(1, 4))):
+        rand_instr(0)
+    if draw(st.booleans()):
+        n_iters = draw(st.integers(0, 5))
+        brk = b.mklabel("brk")
+        with b.loop(n_iters):
+            for _ in range(draw(st.integers(1, 3))):
+                rand_instr(1)
+            if draw(st.booleans()):
+                b.jump(brk, regs[0], Alu.EQ, draw(st.integers(-2, 2)))
+            b.nop()
+        b.bind(brk)
+    if draw(st.booleans()):
+        b.wait(0)
+    b.ret(regs[0])
+    params = draw(st.lists(st.integers(-2**50, 2**50),
+                           min_size=4, max_size=4))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return rt, b.build(), params, seed
+
+
+@settings(max_examples=30, deadline=None)
+@given(random_operator())
+def test_vm_matches_oracle_and_terminates(op_spec):
+    rt, prog, params, seed = op_spec
+    grant = Grant.of("t", readable=[0, 1, 2], writable=[0, 1])
+    vop = verify(prog, grant=grant, regions=rt)
+    rng = np.random.default_rng(seed)
+    mem = rng.integers(-2**40, 2**40,
+                       size=(2, rt.pool_words)).astype(np.int64)
+    r_py = pyvm.run(vop, rt, mem.copy(), params)
+    r_jx = vm.invoke(vop, rt, mem.copy(), params)
+
+    # 1. lockstep equivalence
+    assert r_py.ret == r_jx.ret
+    assert r_py.status == r_jx.status
+    assert r_py.steps == r_jx.steps
+    assert np.array_equal(r_py.mem, r_jx.mem)
+    assert np.array_equal(np.asarray(r_py.regs), r_jx.regs)
+
+    # 2. termination within the static bound (fuel never exhausted)
+    assert r_py.status != isa.STATUS_FUEL
+    assert r_py.steps <= vop.step_bound
+
+    # 3. isolation: only writable granted regions may change
+    changed = r_jx.mem != mem
+    allowed = np.zeros(rt.pool_words, bool)
+    for rid in (0, 1):
+        reg = rt[rid]
+        allowed[reg.base:reg.end] = True
+    assert not changed[:, ~allowed].any(), \
+        "write escaped the granted regions"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**63 - 1), st.integers(0, 31), st.integers(1, 30))
+def test_pointer_chase_isolation(start, depth, seed):
+    """Adversarial pointer chase: arbitrary garbage pointers in memory can
+    never leak reads/writes outside the region (offset masking)."""
+    from repro.core import operators as ops
+    w = ops.GraphWalk(n_nodes=16, max_depth=32)
+    rt = w.regions()
+    vop = verify(w.build(rt), grant=Grant.all_of(rt), regions=rt)
+    rng = np.random.default_rng(seed)
+    mem = rng.integers(-2**62, 2**62,
+                       size=(1, rt.pool_words)).astype(np.int64)
+    before = mem.copy()
+    r = vm.invoke(vop, rt, mem, [start, depth])
+    assert r.status in (isa.STATUS_OK,)
+    reply = rt["reply"]
+    changed = r.mem[0] != before[0]
+    outside = np.ones(rt.pool_words, bool)
+    outside[reply.base:reply.end] = False
+    assert not changed[outside].any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(-2**63, 2**63 - 1), min_size=2, max_size=2),
+       st.sampled_from(list(Alu)[:14]))
+def test_alu_semantics_match_int64(vals, op):
+    """Oracle ALU == JAX ALU == numpy int64 semantics."""
+    rt = packed_table([("r0", 16)])
+    b = OperatorBuilder("alu", n_params=2, regions=rt)
+    r = b.reg()
+    b.alu(r, b.param(0), op, b.param(1))
+    b.ret(r)
+    vop = verify(b.build(), grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(1, rt)
+    r1 = pyvm.run(vop, rt, mem.copy(), vals)
+    r2 = vm.invoke(vop, rt, mem.copy(), vals)
+    assert r1.ret == r2.ret
