@@ -1,0 +1,132 @@
+"""Operator throughput: interpreter vs batch-parallel vs trace-compiled.
+
+The paper's Fig. 7 point is that the NIC pipeline keeps many requests in
+flight, so *throughput*, not latency, is the headline.  This benchmark
+drives the software analogue: the 10-hop graph-traversal operator executed
+
+  * one request per XLA launch on the single-request interpreter (the
+    pre-batching engine — every launch pays dispatch + a 13-way switch
+    per instruction),
+  * B requests per launch on the batch-parallel interpreter, and
+  * B requests per launch on the registration-time trace-compiled path
+    (no interpreter at all: straight-line gather chains).
+
+Wall-clock ops/s at B in {1, 64, 1024} are printed as rows and written to
+``BENCH_vm_throughput.json`` for machine consumption.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import compile as tc
+from repro.core import memory, vm
+from repro.core import operators as ops
+from repro.core.memory import Grant
+from repro.core.verifier import verify
+
+from benchmarks._workbench import Row
+
+# anchored to the repo root regardless of the invoking cwd
+JSON_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_vm_throughput.json")
+BATCHES = (1, 64, 1024)
+DEPTH = 10                    # the paper's 10-hop traversal
+MAX_DEPTH = 16
+N_NODES = 4096
+MIN_SECONDS = 0.3
+
+
+def _setup(max_batch: int):
+    w = ops.GraphWalk(n_nodes=N_NODES, max_depth=MAX_DEPTH,
+                      reply_words=max_batch * ops.NODE_WORDS)
+    rt = w.regions()
+    vop = verify(w.build(rt, reply_param=True), grant=Grant.all_of(rt),
+                 regions=rt)
+    mem = memory.make_pool(1, rt)
+    order = w.populate(mem, rt)
+    return w, rt, vop, mem, order
+
+
+def _params(order, batch: int):
+    return [[int(order[i % N_NODES]) * 8, DEPTH, i * ops.NODE_WORDS]
+            for i in range(batch)]
+
+
+def _rate(fn, per_call_ops: int) -> tuple:
+    """(us_per_call, ops_per_s) with warmup + adaptive repeat count."""
+    fn()                                    # warmup: jit compile
+    t0 = time.perf_counter()
+    fn()
+    dt = time.perf_counter() - t0
+    reps = max(1, int(MIN_SECONDS / max(dt, 1e-6)))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    dt = (time.perf_counter() - t0) / reps
+    return dt * 1e6, per_call_ops / dt
+
+
+def measure() -> List[dict]:
+    w, rt, vop, mem, order = _setup(max(BATCHES))
+    out: List[dict] = []
+
+    # single-request interpreter: one launch per request
+    p1 = _params(order, 1)[0]
+
+    def interp_one():
+        vm.invoke(vop, rt, mem, p1)
+
+    us, rate = _rate(interp_one, 1)
+    base = rate
+    out.append(dict(engine="interp", batch=1, us_per_call=us, ops_per_s=rate,
+                    speedup_vs_interp=1.0))
+
+    for b in BATCHES:
+        pb = _params(order, b)
+
+        def batched():
+            vm.invoke_batched(vop, rt, mem, pb)
+
+        us, rate = _rate(batched, b)
+        out.append(dict(engine="batched", batch=b, us_per_call=us,
+                        ops_per_s=rate, speedup_vs_interp=rate / base))
+
+    for b in BATCHES:
+        pb = _params(order, b)
+
+        def compiled():
+            tc.invoke_compiled(vop, rt, mem, pb)
+
+        us, rate = _rate(compiled, b)
+        out.append(dict(engine="compiled", batch=b, us_per_call=us,
+                        ops_per_s=rate, speedup_vs_interp=rate / base))
+    return out
+
+
+def rows() -> List[Row]:
+    data = measure()
+    payload = dict(workload=f"graph_walk depth={DEPTH} n_nodes={N_NODES}",
+                   unit="ops/s", results=data)
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+    out = []
+    for r in data:
+        out.append(Row(
+            name=f"vm_tput/{r['engine']}/B={r['batch']}",
+            us_per_call=r["us_per_call"],
+            derived=r["ops_per_s"] / 1e6, unit="Mops",
+            note=f"x{r['speedup_vs_interp']:.1f} vs 1-req interpreter"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r.csv())
+    print(f"wrote {JSON_PATH}")

@@ -16,7 +16,8 @@ import sys
 import time
 
 from benchmarks import (bench_graph, bench_lock, bench_moe, bench_offload,
-                        bench_paged_attention, bench_ptw, bench_table1)
+                        bench_paged_attention, bench_ptw, bench_table1,
+                        bench_vm_throughput)
 from benchmarks._workbench import fmt_table
 
 MODULES = [
@@ -28,6 +29,8 @@ MODULES = [
     ("fig10", "Figure 10: disaggregated PagedAttention",
      bench_paged_attention),
     ("sec4.5", "Section 4.5: MoE expert gather", bench_moe),
+    ("vm_tput", "Engine throughput: interp vs batched vs compiled",
+     bench_vm_throughput),
 ]
 
 

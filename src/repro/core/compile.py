@@ -1,0 +1,617 @@
+"""Registration-time trace compiler — the interpreter-free fast path.
+
+The facts the static verifier already proves about an operator (jumps are
+forward-only, every loop has a static trip-count cap, nesting is bounded)
+are exactly what a trace compiler needs: the whole program can be lowered
+at registration time to **straight-line predicated dataflow** — a chain of
+``jnp.take``-style gathers and deterministic scatters with no interpreter
+dispatch at all.  This is the software analogue of the paper's point that
+hot remote-memory paths (pointer chase, page-table walk, KV block fetch)
+should run as *superoperators* baked into the fabric, not as general
+interpreted programs.
+
+Lowering rules (B = request batch, every value is an int64 ``(B,)`` lane):
+
+  * loops unroll to their static cap; iteration ``j`` runs under the
+    predicate ``j < min(trip_reg, cap)``;
+  * forward jumps become predicate splits: the fall-through side continues
+    under ``pred & ~take`` and the taken lanes re-join at the target pc
+    (a jump that escapes loop bodies masks the remaining iterations —
+    the Fig. 5 distributed-lock "break");
+  * RET latches ``ret``/``status`` under the live predicate and removes
+    the lane from every later instruction;
+  * LOAD/STORE lower to gathers / deterministic scatters, CAS/CAA to a
+    serialized ``lax.scan`` over the batch (atomics keep pyvm
+    request-order), MEMCPY to a window gather plus a deterministic
+    last-writer-wins scatter in round-robin commit order;
+  * the canonical *gather-chain* loop (``load id; load translation;
+    memcpy row``) — MoE expert gather and paged-KV block fetch — is
+    recognized structurally and fused into one two-level batched gather,
+    optionally routed through the ``kernels/tiara_gather`` Pallas kernel.
+
+Exactness: at batch=1 the compiled operator is bit-identical to the
+``pyvm`` oracle (memory, ret, status, steps, registers).  For batches the
+semantics are the engine's round-robin interleaving; like the batched
+interpreter's vectorized step it assumes no request *reads* a word another
+request *writes at the same trace position* (atomics excepted — they are
+fully serialized).  Contended workloads belong on the batched interpreter,
+which detects conflicts per step and falls back to exact serialization.
+
+The in-flight async counter is not modeled: WAIT only clamps a counter
+that never feeds a value (copies apply functionally at issue; timing is
+the simulator's job), so the compiled path drops it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import isa
+from repro.core.isa import (Alu, Instr, Op, FLAG_ASYNC, FLAG_DEV_REG,
+                            FLAG_DSTDEV_REG, FLAG_IMMB, FLAG_LEN_REG,
+                            FLAG_MREG, FLAG_SRCDEV_REG, FLAG_THR_REG,
+                            DEV_LOCAL, ERR_REG)
+from repro.core.memory import RegionTable
+from repro.core.verifier import LoopInfo, VerifiedOperator
+from repro.core import vm as _vm
+
+_REG_MASK = isa.NUM_REGS - 1
+
+DEFAULT_UNROLL_LIMIT = 4096
+
+
+class CompileError(Exception):
+    pass
+
+
+def why_not_compilable(op: VerifiedOperator,
+                       unroll_limit: int = DEFAULT_UNROLL_LIMIT
+                       ) -> Optional[str]:
+    """None if the operator can be trace-compiled, else a reason string.
+
+    The verifier already guarantees loop-freeness or bounded unrollability;
+    the only extra constraint is that the fully unrolled trace stays small
+    enough to be worth baking into one XLA program.
+    """
+    if op.step_bound > unroll_limit:
+        return (f"worst-case trace of {op.step_bound} instructions exceeds "
+                f"the unroll limit of {unroll_limit}")
+    return None
+
+
+def compilable(op: VerifiedOperator,
+               unroll_limit: int = DEFAULT_UNROLL_LIMIT) -> bool:
+    return why_not_compilable(op, unroll_limit) is None
+
+
+# ---------------------------------------------------------------------------
+# Shared lowering helpers (also used by the distributed layer)
+# ---------------------------------------------------------------------------
+
+def masked_row_gather(pool: jnp.ndarray, idx: jnp.ndarray,
+                      live: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """``out[...] = pool[idx[...]]`` with rows outside ``[0, len(pool))``
+    (or with ``live == False``) replaced by zeros — the memory-side half of
+    the compiled gather chain, shared with ``distributed/tiara_fetch`` and
+    ``distributed/paged_decode``."""
+    n = pool.shape[0]
+    ok = (idx >= 0) & (idx < n)
+    if live is not None:
+        ok = ok & live
+    rows = pool[jnp.clip(idx, 0, n - 1)]
+    shape = ok.shape + (1,) * (rows.ndim - ok.ndim)
+    return jnp.where(ok.reshape(shape), rows, jnp.zeros((), rows.dtype))
+
+
+def det_scatter(mem_flat: jnp.ndarray, idx: jnp.ndarray, val: jnp.ndarray,
+                live: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic scatter: among duplicate targets the **last live lane
+    in flat order wins** — flat order is the engine's round-robin commit
+    order.  Dead lanes are routed out of bounds and dropped."""
+    size = mem_flat.shape[0]
+    f = jnp.where(live, idx, size).reshape(-1)
+    v = val.reshape(-1)
+    m = f.shape[0]
+    # stable grouping: sort by (target, lane); the last element of each
+    # run of equal targets is the winner
+    comp = f * m + jnp.arange(m, dtype=f.dtype)
+    order = jnp.argsort(comp)
+    fs = f[order]
+    last = jnp.concatenate([fs[1:] != fs[:-1],
+                            jnp.ones((1,), dtype=bool)])
+    tgt = jnp.where(last, fs, size)
+    return mem_flat.at[tgt].set(v[order], mode="drop")
+
+
+def _alu_static(aop: int, a, b):
+    """ALU with a *static* opcode — the compiled trace emits only the one
+    operation the instruction names (no 16-way select)."""
+    if aop == Alu.ADD:
+        return a + b
+    if aop == Alu.SUB:
+        return a - b
+    if aop == Alu.MUL:
+        return a * b
+    if aop == Alu.AND:
+        return a & b
+    if aop == Alu.OR:
+        return a | b
+    if aop == Alu.XOR:
+        return a ^ b
+    if aop == Alu.SHL:
+        return a << (b & 63)
+    if aop == Alu.SHR:
+        return lax.shift_right_logical(a, b & 63)
+    if aop == Alu.EQ:
+        return (a == b).astype(jnp.int64)
+    if aop == Alu.NE:
+        return (a != b).astype(jnp.int64)
+    if aop == Alu.LT:
+        return (a < b).astype(jnp.int64)
+    if aop == Alu.GE:
+        return (a >= b).astype(jnp.int64)
+    if aop == Alu.MIN:
+        return jnp.minimum(a, b)
+    if aop == Alu.MAX:
+        return jnp.maximum(a, b)
+    raise CompileError(f"bad ALU op {aop}")
+
+
+# ---------------------------------------------------------------------------
+# Gather-chain superoperator detection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GatherChain:
+    """The canonical indirection loop (paper §4.5/§4.6):
+
+        loop (n, cap):
+            load  id    <- ids_region[i]
+            load  paddr <- table_region[id]
+            memcpy dst_region[dst] <- pool_region[paddr] x W   (async ok)
+            dst += W
+            i   += 1
+    """
+
+    loop_pc: int
+    cap: int
+    ids_rid: int
+    table_rid: int
+    pool_rid: int
+    dst_rid: int
+    row_words: int
+    i_reg: int
+    id_reg: int
+    paddr_reg: int
+    dst_reg: int
+    is_async: bool
+
+
+def match_gather_chain(instrs: List[Instr], loop: LoopInfo
+                       ) -> Optional[GatherChain]:
+    """Structural match of the loop body against the gather-chain shape.
+    Purely static — checked once at compile time."""
+    body = instrs[loop.start:loop.end + 1]
+    if len(body) != 5:
+        return None
+    ld_id, ld_tr, mc, add_dst, add_i = body
+    lp = instrs[loop.pc]
+
+    def plain_local_load(ins):
+        return (ins.op == Op.LOAD and ins.imm == 0 and ins.flags == 0
+                and ins.e == DEV_LOCAL)
+
+    if not (plain_local_load(ld_id) and plain_local_load(ld_tr)):
+        return None
+    if ld_tr.b != ld_id.dst:                     # chained: id -> translation
+        return None
+    if mc.op != Op.MEMCPY or (mc.flags & (FLAG_LEN_REG | FLAG_DSTDEV_REG
+                                          | FLAG_SRCDEV_REG)):
+        return None
+    if mc.dst != DEV_LOCAL or mc.c != DEV_LOCAL:
+        return None
+    if mc.e != ld_tr.dst:                        # src offset = translation
+        return None
+    w = int(mc.imm)
+    if not (0 < w <= isa.MAX_MEMCPY_WORDS):
+        return None
+    for add, reg in ((add_dst, mc.b), (add_i, ld_id.b)):
+        if not (add.op == Op.ALU and add.d == int(Alu.ADD)
+                and (add.flags & FLAG_IMMB) and add.dst == add.a):
+            return None
+    if add_dst.a != mc.b or add_dst.imm != w:
+        return None
+    if add_i.a != ld_id.b or add_i.imm != 1:
+        return None
+    # distinct registers so the fused updates don't alias
+    regs = (ld_id.b, ld_id.dst, ld_tr.dst, mc.b)
+    if len(set(regs)) != 4:
+        return None
+    return GatherChain(
+        loop_pc=loop.pc, cap=int(lp.imm), ids_rid=ld_id.a,
+        table_rid=ld_tr.a, pool_rid=mc.d, dst_rid=mc.a, row_words=w,
+        i_reg=ld_id.b, id_reg=ld_id.dst, paddr_reg=ld_tr.dst,
+        dst_reg=mc.b, is_async=bool(mc.flags & FLAG_ASYNC))
+
+
+def find_gather_chains(op: VerifiedOperator) -> List[GatherChain]:
+    """All gather-chain superoperators in a verified program (diagnostic /
+    registry-level introspection)."""
+    instrs = isa.decode_program(op.code)
+    out = []
+    for l in op.loops:
+        g = match_gather_chain(instrs, l)
+        if g is not None:
+            out.append(g)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The trace emitter
+# ---------------------------------------------------------------------------
+
+class _Tracer:
+    """Emits the predicated straight-line trace of one verified operator.
+
+    Mutable traced state: the 16 register lanes, the flattened shared
+    memory pool, and the halt/ret/status/step accumulators.  Control flow
+    exists only at Python time (the unroll), never in the lowered program.
+    """
+
+    def __init__(self, *, instrs, loops, base, mask, n_dev, pool_words,
+                 batch, homes, failed, mem_flat, regs, impl, superops):
+        self.instrs = instrs
+        self.loops = loops                  # pc -> LoopInfo
+        self.base = base                    # static np arrays
+        self.mask = mask
+        self.n_dev = n_dev
+        self.P = pool_words
+        self.B = batch
+        self.homes = homes                  # (B,) traced
+        self.failed = failed                # (n_dev,) traced
+        self.memf = mem_flat                # (n_dev * P,) traced
+        self.regs = regs                    # list of 16 (B,) traced lanes
+        self.impl = impl
+        self.superops = superops
+        zero = jnp.zeros(batch, jnp.int64)
+        self.halted = jnp.zeros(batch, bool)
+        self.ret = zero
+        self.status = jnp.full(batch, isa.STATUS_FELL_OFF, jnp.int64)
+        self.steps = zero
+
+    # -- small helpers ---------------------------------------------------
+
+    def _full(self, v) -> jnp.ndarray:
+        return jnp.full(self.B, v, jnp.int64)
+
+    def set_reg(self, idx: int, val, p) -> None:
+        idx &= _REG_MASK
+        self.regs[idx] = jnp.where(p, val, self.regs[idx])
+
+    def dev_of(self, field: int, via_reg: bool) -> jnp.ndarray:
+        if via_reg:
+            d = self.regs[field & _REG_MASK]
+            return jnp.where(d == DEV_LOCAL, self.homes,
+                             jnp.mod(d, self.n_dev))
+        if field == DEV_LOCAL:
+            return self.homes
+        return self._full(int(field) % self.n_dev)
+
+    def word_addr(self, ins: Instr) -> jnp.ndarray:
+        """LOAD/STORE/CAS/CAA all address ``region(a)[regs[b] + imm]``."""
+        rid = ins.a
+        off = self.regs[ins.b & _REG_MASK] + ins.imm
+        return int(self.base[rid]) + (off & int(self.mask[rid]))
+
+    # -- per-opcode lowering ----------------------------------------------
+
+    def _movi(self, ins, p):
+        self.set_reg(ins.dst, self._full(ins.imm), p)
+
+    def _alu(self, ins, p):
+        rhs = self._full(ins.imm) if ins.flags & FLAG_IMMB \
+            else self.regs[ins.b & _REG_MASK]
+        self.set_reg(ins.dst, _alu_static(ins.d, self.regs[ins.a & _REG_MASK],
+                                          rhs), p)
+
+    def _load(self, ins, p):
+        dev = self.dev_of(ins.e, bool(ins.flags & FLAG_DEV_REG))
+        val = self.memf[dev * self.P + self.word_addr(ins)]
+        self.set_reg(ins.dst, val, p)
+
+    def _store(self, ins, p):
+        dev = self.dev_of(ins.e, bool(ins.flags & FLAG_DEV_REG))
+        idx = dev * self.P + self.word_addr(ins)
+        self.memf = det_scatter(self.memf, idx,
+                                self.regs[ins.dst & _REG_MASK], p)
+
+    def _atomic(self, ins, p, is_cas: bool):
+        dev = self.dev_of(ins.e, bool(ins.flags & FLAG_DEV_REG))
+        idx = dev * self.P + self.word_addr(ins)
+        cmpv = self.regs[ins.c & _REG_MASK]
+        arg = self.regs[ins.d & _REG_MASK]
+        size = self.memf.shape[0]
+
+        def body(memf, x):
+            i_b, cmp_b, arg_b, p_b = x
+            old = memf[jnp.clip(i_b, 0, size - 1)]
+            hit = (old == cmp_b) & p_b
+            new = jnp.where(hit, arg_b if is_cas else old + arg_b, old)
+            memf = memf.at[jnp.where(p_b, i_b, size)].set(new, mode="drop")
+            return memf, old
+
+        # atomics are serialized over the batch: pyvm request ordering
+        self.memf, old = lax.scan(body, self.memf, (idx, cmpv, arg, p))
+        self.set_reg(ins.dst, old, p)
+
+    def _memcpy(self, ins, p):
+        ddev = self.dev_of(ins.dst, bool(ins.flags & FLAG_DSTDEV_REG))
+        sdev = self.dev_of(ins.c, bool(ins.flags & FLAG_SRCDEV_REG))
+        drid, srid = ins.a, ins.d
+        cap = min(int(ins.imm), isa.MAX_MEMCPY_WORDS)
+        if ins.flags & FLAG_LEN_REG:
+            ln = jnp.clip(self.regs[ins.imm2 & _REG_MASK], 0, cap)
+        else:
+            ln = self._full(cap)
+        ln = jnp.minimum(ln, min(int(self.mask[drid]) + 1,
+                                 int(self.mask[srid]) + 1))
+        fail = self.failed[ddev] | self.failed[sdev]
+        err = self.regs[ERR_REG]
+        self.regs[ERR_REG] = jnp.where(p & fail, err | 1, err)
+        ln = jnp.where(fail | ~p, 0, ln)
+        iw = jnp.arange(cap, dtype=jnp.int64)[None, :]
+        soff = self.regs[ins.e & _REG_MASK][:, None]
+        doff = self.regs[ins.b & _REG_MASK][:, None]
+        src = sdev[:, None] * self.P + int(self.base[srid]) + \
+            ((soff + iw) & int(self.mask[srid]))
+        dst = ddev[:, None] * self.P + int(self.base[drid]) + \
+            ((doff + iw) & int(self.mask[drid]))
+        vals = self.memf[src]
+        live = iw < ln[:, None]
+        self.memf = det_scatter(self.memf, dst, vals, live)
+
+    # -- the gather-chain superoperator ------------------------------------
+
+    def _fused_gather_chain(self, g: GatherChain, m, p) -> None:
+        """One two-level batched gather for the whole loop: ids -> table ->
+        pool rows -> destination window.  Commit order is (iteration,
+        request) — identical to the lockstep engine."""
+        B, P = self.B, self.P
+        cap, W = g.cap, g.row_words
+        jj = jnp.arange(cap, dtype=jnp.int64)[None, :]          # (1, cap)
+        i0 = self.regs[g.i_reg][:, None]
+        dst0 = self.regs[g.dst_reg][:, None]
+        home = self.homes[:, None]
+        valid = (jj < m[:, None]) & p[:, None]                  # (B, cap)
+
+        ids_addr = int(self.base[g.ids_rid]) + \
+            ((i0 + jj) & int(self.mask[g.ids_rid]))
+        ids = self.memf[home * P + ids_addr]                    # (B, cap)
+        tbl_addr = int(self.base[g.table_rid]) + \
+            (ids & int(self.mask[g.table_rid]))
+        paddr = self.memf[home * P + tbl_addr]                  # (B, cap)
+
+        fail = self.failed[self.homes]                          # local copy
+        err = self.regs[ERR_REG]
+        self.regs[ERR_REG] = jnp.where(p & fail & (m > 0), err | 1, err)
+        live = valid & ~fail[:, None]
+
+        pool_base = int(self.base[g.pool_rid])
+        pool_mask = int(self.mask[g.pool_rid])
+        iw = jnp.arange(W, dtype=jnp.int64)
+        if self.impl in ("kernel", "kernel_interpret") and self.n_dev == 1 \
+                and (pool_mask + 1) % W == 0:
+            # Route the row gather through the Pallas double-indirection
+            # kernel: rows must be W-aligned in the pool region (true for
+            # every translation table the workloads build).
+            from repro.kernels.tiara_gather.kernel import tiara_gather_kernel
+            pool_view = lax.dynamic_slice(
+                self.memf, (pool_base,),
+                (pool_mask + 1,)).reshape(-1, W)
+            rows = tiara_gather_kernel(
+                pool_view,
+                (paddr.reshape(-1) // W).astype(jnp.int32),
+                jnp.arange(B * cap, dtype=jnp.int32),
+                interpret=(self.impl == "kernel_interpret"),
+            ).reshape(B, cap, W).astype(jnp.int64)
+        else:
+            src = home[:, :, None] * P + pool_base + \
+                ((paddr[:, :, None] + iw) & pool_mask)          # (B, cap, W)
+            rows = self.memf[src]
+
+        dst_addr = home[:, :, None] * P + int(self.base[g.dst_rid]) + \
+            ((dst0[:, :, None] + jj[:, :, None] * W + iw)
+             & int(self.mask[g.dst_rid]))
+        # commit in (iteration, request, word) order = round-robin order
+        wmask = jnp.broadcast_to(live[:, :, None], dst_addr.shape)
+        self.memf = det_scatter(self.memf,
+                                jnp.transpose(dst_addr, (1, 0, 2)),
+                                jnp.transpose(rows, (1, 0, 2)),
+                                jnp.transpose(wmask, (1, 0, 2)))
+
+        # architectural register effects of the skipped iterations
+        last = jnp.clip(m - 1, 0, cap - 1)[:, None]
+        ran = p & (m > 0)
+        self.set_reg(g.i_reg, self.regs[g.i_reg] + m, p)
+        self.set_reg(g.dst_reg, self.regs[g.dst_reg] + m * W, p)
+        self.set_reg(g.id_reg,
+                     jnp.take_along_axis(ids, last, axis=1)[:, 0], ran)
+        self.set_reg(g.paddr_reg,
+                     jnp.take_along_axis(paddr, last, axis=1)[:, 0], ran)
+        self.steps = self.steps + jnp.where(p, m * 5, 0)
+
+    # -- segment emission ---------------------------------------------------
+
+    def emit_segment(self, lo: int, hi: int, pred) -> Dict[int, jnp.ndarray]:
+        """Emit instructions [lo, hi) under ``pred``; returns the escape
+        predicates {target_pc: lanes} for jumps leaving the segment."""
+        escapes: Dict[int, jnp.ndarray] = {}
+        resume: Dict[int, jnp.ndarray] = {}
+        pc = lo
+        while pc < hi:
+            if pc in resume:
+                pred = pred | resume.pop(pc)
+            ins = self.instrs[pc]
+            p = pred & ~self.halted
+
+            if ins.op == Op.LOOP:
+                l = self.loops[pc]
+                body_hi = l.end + 1
+                self.steps = self.steps + p      # LOOP itself runs once
+                cap = int(ins.imm)
+                if ins.flags & FLAG_MREG:
+                    m = jnp.clip(self.regs[ins.b & _REG_MASK], 0, cap)
+                else:
+                    m = self._full(cap)
+                g = match_gather_chain(self.instrs, l) if self.superops \
+                    else None
+                if g is not None:
+                    self._fused_gather_chain(g, m, p)
+                    pc = body_hi
+                    continue
+                broken = jnp.zeros(self.B, bool)
+                for it in range(cap):
+                    it_pred = pred & (it < m) & ~broken
+                    esc = self.emit_segment(l.start, body_hi, it_pred)
+                    for tgt, ep in esc.items():
+                        broken = broken | ep
+                        pred = pred & ~ep
+                        if tgt < hi:
+                            resume[tgt] = resume.get(
+                                tgt, jnp.zeros(self.B, bool)) | ep
+                        else:
+                            escapes[tgt] = escapes.get(
+                                tgt, jnp.zeros(self.B, bool)) | ep
+                pc = body_hi
+                continue
+
+            if ins.op == Op.JUMP:
+                self.steps = self.steps + p
+                if ins.d == int(Alu.ALWAYS):
+                    take = p
+                else:
+                    lhs = self.regs[ins.a & _REG_MASK]
+                    rhs = self._full(ins.imm) if ins.flags & FLAG_IMMB \
+                        else self.regs[ins.b & _REG_MASK]
+                    take = p & (_alu_static(ins.d, lhs, rhs) != 0)
+                tgt = pc + 1 + ins.imm2
+                pred = pred & ~take
+                if tgt < hi:
+                    resume[tgt] = resume.get(
+                        tgt, jnp.zeros(self.B, bool)) | take
+                else:
+                    escapes[tgt] = escapes.get(
+                        tgt, jnp.zeros(self.B, bool)) | take
+                pc += 1
+                continue
+
+            self.steps = self.steps + p
+            if ins.op in (Op.NOP, Op.WAIT):
+                pass                     # WAIT has no functional effect
+            elif ins.op == Op.MOVI:
+                self._movi(ins, p)
+            elif ins.op == Op.ALU:
+                self._alu(ins, p)
+            elif ins.op == Op.LOAD:
+                self._load(ins, p)
+            elif ins.op == Op.STORE:
+                self._store(ins, p)
+            elif ins.op == Op.MEMCPY:
+                self._memcpy(ins, p)
+            elif ins.op == Op.CAS:
+                self._atomic(ins, p, True)
+            elif ins.op == Op.CAA:
+                self._atomic(ins, p, False)
+            elif ins.op == Op.RET:
+                self.ret = jnp.where(p, self.regs[ins.a & _REG_MASK],
+                                     self.ret)
+                self.status = jnp.where(p, self._full(ins.imm), self.status)
+                self.halted = self.halted | p
+            else:
+                raise CompileError(f"pc {pc}: unsupported opcode {ins.op}")
+            pc += 1
+        return escapes
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def build_compiled(op: VerifiedOperator, regions: RegionTable,
+                   n_devices: int, batch: int, *, impl: str = "xla",
+                   superops: bool = True,
+                   unroll_limit: int = DEFAULT_UNROLL_LIMIT):
+    """Trace-compile a verified operator; returns a jit-compiled
+    ``f(mem, params, homes, failed) -> vm.VMResult`` with batched fields
+    (the same signature as :func:`vm.build_batched_vm`).
+
+    ``impl``: "xla" lowers the gather-chain superoperator to plain jnp
+    gathers; "kernel" / "kernel_interpret" route row gathers through the
+    ``tiara_gather`` Pallas kernel (rows must be row-aligned in the pool,
+    which all stock translation tables are).
+    """
+    reason = why_not_compilable(op, unroll_limit)
+    if reason is not None:
+        raise CompileError(reason)
+    instrs = isa.decode_program(op.code)
+    loops = {l.pc: l for l in op.loops}
+    base, mask, _ = regions.as_arrays()
+    n_instr = len(instrs)
+    n_dev = int(n_devices)
+    B = int(batch)
+
+    def run(mem, params, homes, failed):
+        mem = jnp.asarray(mem, jnp.int64)
+        pool_words = mem.shape[1]
+        homes = jnp.asarray(homes, jnp.int64).reshape(B)
+        failed = jnp.asarray(failed, jnp.bool_)
+        params = jnp.asarray(params, jnp.int64).reshape(B, -1)
+        regs = [params[:, i] if i < params.shape[1]
+                else jnp.zeros(B, jnp.int64)
+                for i in range(isa.NUM_REGS)]
+        tracer = _Tracer(
+            instrs=instrs, loops=loops, base=base, mask=mask, n_dev=n_dev,
+            pool_words=int(pool_words), batch=B, homes=homes, failed=failed,
+            mem_flat=mem.reshape(-1), regs=regs, impl=impl,
+            superops=superops)
+        esc = tracer.emit_segment(0, n_instr, jnp.ones(B, bool))
+        assert not esc, "verifier admitted a jump past the program end"
+        return _vm.VMResult(
+            mem=tracer.memf.reshape(n_dev, pool_words),
+            ret=tracer.ret, status=tracer.status, steps=tracer.steps,
+            regs=jnp.stack(tracer.regs, axis=1))
+
+    return jax.jit(run)
+
+
+_COMPILED_CACHE: Dict = {}
+
+
+def _cached_compiled(op: VerifiedOperator, regions: RegionTable, n_dev: int,
+                     batch: int, impl: str, superops: bool):
+    key = _vm.engine_key(op, regions, n_dev, batch, impl, superops)
+    fn = _COMPILED_CACHE.get(key)
+    if fn is None:
+        fn = build_compiled(op, regions, n_dev, batch, impl=impl,
+                            superops=superops)
+        _COMPILED_CACHE[key] = fn
+    return fn
+
+
+def invoke_compiled(op: VerifiedOperator, regions: RegionTable,
+                    mem: np.ndarray, params: Sequence[Sequence[int]],
+                    *, homes: Union[int, Sequence[int]] = 0,
+                    failed: Optional[Set[int]] = None, impl: str = "xla",
+                    superops: bool = True) -> "_vm.BatchedInvokeResult":
+    """Numpy-in/numpy-out batched execution on the compiled fast path
+    (same contract as :func:`vm.invoke_batched`)."""
+    p, h = _vm._marshal_batch(params, homes)
+    fn = _cached_compiled(op, regions, int(mem.shape[0]), p.shape[0],
+                          impl, superops)
+    return _vm.run_batched_fn(fn, mem, p, h, failed)

@@ -56,22 +56,27 @@ def _chunks(total_words: int) -> List[int]:
 class GraphWalk:
     n_nodes: int = 4096
     max_depth: int = 64
+    reply_words: int = 64      # widen for batched serving (one slot/request)
 
     def regions(self) -> RegionTable:
         return memory.packed_table([("graph", self.n_nodes * NODE_WORDS),
-                                    ("reply", 64)])
+                                    ("reply", self.reply_words)])
 
-    def build(self, rt: RegionTable) -> TiaraProgram:
-        """params: r0 = start node offset (words), r1 = depth."""
-        b = OperatorBuilder("graph_walk", n_params=2, regions=rt)
+    def build(self, rt: RegionTable, *,
+              reply_param: bool = False) -> TiaraProgram:
+        """params: r0 = start node offset (words), r1 = depth; with
+        ``reply_param``, r2 = reply word offset — batched requests write
+        disjoint reply slots instead of all landing on slot 0."""
+        b = OperatorBuilder("graph_walk", n_params=3 if reply_param else 2,
+                            regions=rt)
         cur = b.mov(b.reg(), b.param(0))
         nxt = b.reg()
         with b.loop((b.param(1), self.max_depth)):
             b.load(nxt, "graph", cur, 1)       # register-chained load
             b.mov(cur, nxt)
         key = b.load(b.reg(), "graph", cur, 0)
-        zero = b.const(0)
-        b.memcpy(dst_region="reply", dst_off=zero,
+        dst = b.param(2) if reply_param else b.const(0)
+        b.memcpy(dst_region="reply", dst_off=dst,
                  src_region="graph", src_off=cur, n_words=NODE_WORDS)
         b.ret(key)
         return b.build()
@@ -111,6 +116,7 @@ class PageTableWalk:
 
     fanout: int = 64
     n_pages: int = 256
+    reply_pages: int = 1       # widen for batched serving (one page/request)
 
     def __post_init__(self):
         self.page_shift = int(np.log2(PAGE_WORDS))
@@ -122,7 +128,7 @@ class PageTableWalk:
             ("pt2", self.fanout * self.fanout),
             ("pt3", max(self.fanout ** 3 // 64, self.fanout ** 2)),
             ("data", self.n_pages * PAGE_WORDS),
-            ("reply", PAGE_WORDS),
+            ("reply", PAGE_WORDS * self.reply_pages),
         ])
 
     def build_translate_only(self, rt: RegionTable) -> TiaraProgram:
@@ -142,9 +148,13 @@ class PageTableWalk:
         b.ret(ppage)
         return b.build()
 
-    def build(self, rt: RegionTable) -> TiaraProgram:
-        """params: r0 = virtual address (words). Returns physical page base."""
-        b = OperatorBuilder("ptw3", n_params=1, regions=rt)
+    def build(self, rt: RegionTable, *,
+              reply_param: bool = False) -> TiaraProgram:
+        """params: r0 = virtual address (words). Returns physical page base.
+        With ``reply_param``, r1 = reply word offset so batched requests
+        stream their pages into disjoint reply slots."""
+        b = OperatorBuilder("ptw3", n_params=2 if reply_param else 1,
+                            regions=rt)
         va = b.param(0)
         s1 = self.page_shift + 2 * self.bits
         s2 = self.page_shift + self.bits
@@ -155,8 +165,8 @@ class PageTableWalk:
         e2 = b.load(b.reg(), "pt2", b.add(b.reg(), l2, i2))   # loaded value
         i3 = b.band(b.reg(), b.shr(i2, va, self.page_shift), m)
         ppage = b.load(b.reg(), "pt3", b.add(l2, e2, i3))     # is the next
-        zero = b.movi(i2, 0)                                  # address
-        b.memcpy(dst_region="reply", dst_off=zero,
+        dst = b.param(1) if reply_param else b.movi(i2, 0)    # address
+        b.memcpy(dst_region="reply", dst_off=dst,
                  src_region="data", src_off=ppage, n_words=PAGE_WORDS)
         b.ret(ppage)
         return b.build()

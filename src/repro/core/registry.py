@@ -4,7 +4,14 @@ Models one Tiara NIC: a region table over the host pool, per-tenant grants,
 and the 256-entry ``op_id -> start_pc`` dispatch table (paper §3).
 ``register()`` is the eBPF-load moment: compile output goes through the
 static verifier against the *tenant's* grant; only then does the operator
-get a slot.  ``invoke()`` is the data path — O(1) dispatch, no checks.
+get a slot.  Registration is also the trace-compile moment: the slot
+records whether the operator's CFG admits the interpreter-free fast path
+(``core/compile``), so the data path can dispatch with no further checks.
+
+``invoke()`` is the single-request data path — O(1) dispatch, no checks.
+``invoke_batched()`` is the line-rate path: B requests share one XLA
+launch, dispatched to the trace-compiled superoperator when the slot has
+one and to the batch-parallel interpreter otherwise.
 
 The instruction stores are per-MP BRAMs of 1024 entries; we model one
 shared store and enforce the aggregate capacity.
@@ -13,10 +20,11 @@ shared store and enforce the aggregate capacity.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Set
+from typing import Dict, Optional, Sequence, Set, Union
 
 import numpy as np
 
+from repro.core import compile as tcompile
 from repro.core import isa, vm
 from repro.core.memory import Grant, RegionTable
 from repro.core.program import TiaraProgram
@@ -29,10 +37,50 @@ class RegistrationError(Exception):
 
 @dataclasses.dataclass
 class Slot:
+    """One dispatch-table entry with its three entry points:
+
+    ``interp``   single-request lax.while_loop interpreter (always there);
+    ``batched``  batch-parallel interpreter, B requests per XLA launch;
+    ``compiled`` trace-compiled straight-line fast path (when the CFG
+                 admits one — ``compilable`` / ``compile_reason``).
+    """
+
     op_id: int
     tenant: str
     verified: VerifiedOperator
     start_pc: int
+    regions: RegionTable
+    compile_reason: Optional[str] = None
+    n_gather_chains: int = 0
+
+    @property
+    def compilable(self) -> bool:
+        return self.compile_reason is None
+
+    def interp(self, mem: np.ndarray, params: Sequence[int] = (), *,
+               home: int = 0,
+               failed: Optional[Set[int]] = None) -> vm.InvokeResult:
+        return vm.invoke(self.verified, self.regions, mem, params,
+                         home=home, failed=failed)
+
+    def batched(self, mem: np.ndarray, params: Sequence[Sequence[int]], *,
+                homes: Union[int, Sequence[int]] = 0,
+                failed: Optional[Set[int]] = None
+                ) -> vm.BatchedInvokeResult:
+        return vm.invoke_batched(self.verified, self.regions, mem, params,
+                                 homes=homes, failed=failed)
+
+    def compiled(self, mem: np.ndarray, params: Sequence[Sequence[int]], *,
+                 homes: Union[int, Sequence[int]] = 0,
+                 failed: Optional[Set[int]] = None,
+                 impl: str = "xla") -> vm.BatchedInvokeResult:
+        if not self.compilable:
+            raise ValueError(
+                f"op {self.op_id} has no compiled entry point: "
+                f"{self.compile_reason}")
+        return tcompile.invoke_compiled(self.verified, self.regions, mem,
+                                        params, homes=homes, failed=failed,
+                                        impl=impl)
 
 
 class OperatorRegistry:
@@ -72,9 +120,11 @@ class OperatorRegistry:
                 f"instruction store full: {self._store_used} + "
                 f"{program.n_instr} > {isa.INSTR_STORE_SIZE}")
         op_id = len(self._slots)
-        self._slots[op_id] = Slot(op_id=op_id, tenant=tenant,
-                                  verified=verified,
-                                  start_pc=self._store_used)
+        self._slots[op_id] = Slot(
+            op_id=op_id, tenant=tenant, verified=verified,
+            start_pc=self._store_used, regions=self.regions,
+            compile_reason=tcompile.why_not_compilable(verified),
+            n_gather_chains=len(tcompile.find_gather_chains(verified)))
         self._store_used += program.n_instr
         self._by_name[f"{tenant}/{program.name}"] = op_id
         return op_id
@@ -103,18 +153,51 @@ class OperatorRegistry:
 
     def invoke(self, op_id: int, mem: np.ndarray,
                params: Sequence[int] = (), *, home: int = 0,
-               failed: Optional[Set[int]] = None) -> vm.InvokeResult:
+               failed: Optional[Set[int]] = None,
+               mode: str = "interp") -> vm.InvokeResult:
+        """Single-request dispatch.  ``mode``: "interp" (default — the
+        classic MP datapath), "compiled" (trace-compiled fast path), or
+        "auto" (compiled when the slot has one, interpreter fallback)."""
         slot = self._slots[op_id]
-        return vm.invoke(slot.verified, self.regions, mem, params,
-                         home=home, failed=failed)
+        if mode == "auto":
+            mode = "compiled" if slot.compilable else "interp"
+        if mode == "interp":
+            return slot.interp(mem, params, home=home, failed=failed)
+        if mode == "compiled":
+            r = slot.compiled(mem, [list(params)], homes=home, failed=failed)
+            return vm.InvokeResult(mem=r.mem, ret=int(r.ret[0]),
+                                   status=int(r.status[0]),
+                                   steps=int(r.steps[0]), regs=r.regs[0])
+        raise ValueError(f"unknown mode {mode!r}")
+
+    def invoke_batched(self, op_id: int, mem: np.ndarray,
+                       params: Sequence[Sequence[int]], *,
+                       homes: Union[int, Sequence[int]] = 0,
+                       failed: Optional[Set[int]] = None,
+                       mode: str = "auto") -> vm.BatchedInvokeResult:
+        """Line-rate dispatch: B requests, one XLA launch.  ``mode``:
+        "auto" (compiled fast path when available, batched interpreter
+        fallback), "batched" (force the interpreter), or "compiled"."""
+        slot = self._slots[op_id]
+        if mode == "auto":
+            mode = "compiled" if slot.compilable else "batched"
+        if mode == "batched":
+            return slot.batched(mem, params, homes=homes, failed=failed)
+        if mode == "compiled":
+            return slot.compiled(mem, params, homes=homes, failed=failed)
+        raise ValueError(f"unknown mode {mode!r}")
 
     def dump(self) -> str:
         lines = []
         for op_id, slot in sorted(self._slots.items()):
             p = slot.verified.program
+            fast = "compiled" if slot.compilable else "interp-only"
+            chains = f" gather-chains={slot.n_gather_chains}" \
+                if slot.n_gather_chains else ""
             lines.append(
                 f"op {op_id:3d}  tenant={slot.tenant:<12s} "
                 f"{p.name:<20s} {p.n_instr:3d} instrs  "
                 f"bound={slot.verified.step_bound:<8d} "
-                f"regions r={p.regions_read} w={p.regions_written}")
+                f"regions r={p.regions_read} w={p.regions_written} "
+                f"[{fast}{chains}]")
         return "\n".join(lines)

@@ -1,11 +1,35 @@
-"""JAX execution engine for verified Tiara operators.
+"""JAX execution engines for verified Tiara operators.
 
-One memory processor (MP) is modeled as a ``lax.while_loop`` whose carry is
-the architectural state of the paper's Fig. 4 datapath — pc, the 16x64 b
-register file, the depth-8 loop stack, the in-flight async counter — plus
-the memory pool itself.  Each step decodes ``code[pc]`` (the program is a
-compile-time constant: the "BRAM instruction store") and dispatches through
-``lax.switch``.
+The paper's NIC pipeline keeps many requests in flight at line rate; the
+software analogue is a *batch-parallel* execution engine.  One memory
+processor (MP) frontend is modeled as a single ``lax.while_loop`` whose
+carry is the architectural state of the paper's Fig. 4 datapath — pc, the
+16x64 b register file, the depth-8 loop stack, the in-flight async counter
+— for **B independent requests at once**, stepping against one shared
+memory pool.  One XLA launch is amortized over the whole batch instead of
+paying interpreter dispatch per request.
+
+Execution semantics of a batch (deterministic round-robin interleaving):
+each macro-step, every live request executes its current instruction in
+request-index order, and request *i* observes all memory effects of
+requests ``j < i`` within the same macro-step.  When the requests' memory
+footprints are disjoint this is bit-identical to running them one after
+another on the ``pyvm`` oracle; under contention (e.g. CAS on a shared
+latch) the ordering stays deterministic — the lowest-indexed request wins.
+
+Two step implementations share that semantics:
+
+  * a fully vectorized step (active-mask semantics, every opcode computed
+    for every lane and combined with masks, scatters routed through
+    out-of-bounds drop lanes) used whenever a cheap per-step conflict
+    check proves no request's write window can touch another's read or
+    write window, and
+  * an exact serialized step — a ``lax.scan`` over the batch of the
+    scalar ``lax.switch`` interpreter — used for contended steps so
+    atomics (STORE/CAS/CAA) keep pyvm ordering.
+
+``build_vm`` (the single-request entry point every existing caller uses)
+is the ``batch=1`` specialization of the same engine.
 
 The *verified step bound* is the loop fuel: registration-time verification
 proves the VM can never hit it, and the property tests assert exactly that.
@@ -20,8 +44,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from functools import partial
-from typing import Dict, NamedTuple, Optional, Sequence, Set, Tuple
+from typing import Dict, NamedTuple, Optional, Sequence, Set, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -50,19 +73,22 @@ def x64():
         jax.config.update("jax_enable_x64", old)
 
 
-class VMState(NamedTuple):
-    pc: jnp.ndarray          # i64 scalar
-    regs: jnp.ndarray        # i64[16]
-    lstack: jnp.ndarray      # i64[8, 3]  (start, end, remaining)
-    lsp: jnp.ndarray         # i64 scalar
-    inflight: jnp.ndarray    # i64 scalar
-    mem: jnp.ndarray         # i64[n_dev, pool_words]
-    halted: jnp.ndarray      # bool
-    ret: jnp.ndarray         # i64
-    status: jnp.ndarray      # i64
-    steps: jnp.ndarray       # i64
-    ctrl: jnp.ndarray        # i64: 0 = advance (loop-iterate check), 1 = taken jump (pop)
-    pc_new: jnp.ndarray      # i64
+class ReqState(NamedTuple):
+    """Per-request architectural state.  In the batched engine every leaf
+    carries a leading batch dimension; the shared memory pool is threaded
+    separately so B requests step against one pool."""
+
+    pc: jnp.ndarray          # i64 [B]
+    regs: jnp.ndarray        # i64 [B, 16]
+    lstack: jnp.ndarray      # i64 [B, 8, 3]  (start, end, remaining)
+    lsp: jnp.ndarray         # i64 [B]
+    inflight: jnp.ndarray    # i64 [B]
+    halted: jnp.ndarray      # bool [B]
+    ret: jnp.ndarray         # i64 [B]
+    status: jnp.ndarray      # i64 [B]
+    steps: jnp.ndarray       # i64 [B]
+    ctrl: jnp.ndarray        # i64 [B]: 0 = advance (loop-iterate), 1 = taken jump
+    pc_new: jnp.ndarray      # i64 [B]
 
 
 class VMResult(NamedTuple):
@@ -77,93 +103,116 @@ def _i64(x) -> jnp.ndarray:
     return jnp.asarray(x, dtype=jnp.int64)
 
 
-def build_vm(op: VerifiedOperator, regions: RegionTable, n_devices: int):
-    """Returns a jit-compiled ``f(mem, params, home, failed) -> VMResult``.
+def _alu_table(a, b):
+    """All 16 ALU results for operands ``a``/``b`` (any common shape),
+    indexed by ``Alu`` opcode — the single definition both the scalar and
+    the vectorized evaluator select from."""
+    sh = b & 63
+    return [
+        a + b, a - b, a * b, a & b, a | b, a ^ b,
+        a << sh, lax.shift_right_logical(a, sh),
+        (a == b).astype(jnp.int64), (a != b).astype(jnp.int64),
+        (a < b).astype(jnp.int64), (a >= b).astype(jnp.int64),
+        jnp.minimum(a, b), jnp.maximum(a, b), a, a,
+    ]
 
-    ``mem``: int64[n_devices, pool_words]; ``params``: int64[<=8];
-    ``home``: the executing host's device id; ``failed``: bool[n_devices]
-    marking unreachable hosts (async Memcpy to them sets the error flag).
-    Call under ``vm.x64()`` (or use :func:`invoke`).
+
+def build_batched_vm(op: VerifiedOperator, regions: RegionTable,
+                     n_devices: int, batch: int):
+    """Returns jit-compiled ``f(mem, params, homes, failed) -> VMResult``.
+
+    ``mem``: int64[n_devices, pool_words] shared by the whole batch;
+    ``params``: int64[batch, <=8]; ``homes``: int64[batch] per-request
+    executing-host ids; ``failed``: bool[n_devices].  Result fields
+    ``ret/status/steps`` are [batch] and ``regs`` is [batch, 16].
+    Call under ``vm.x64()`` (or use :func:`invoke` / :func:`invoke_batched`).
     """
     code_np = np.asarray(op.code, dtype=np.int64)
     n_instr = int(code_np.shape[0])
     fuel = int(op.step_bound)
     base_np, mask_np, _ = regions.as_arrays()
+    n_regions = int(base_np.shape[0])
     # Static memcpy window: the largest cap used by this program.
     memcpy_caps = [int(r[isa.F_IMM]) for r in code_np
                    if int(r[isa.F_OP]) == int(Op.MEMCPY)]
     max_window = int(min(max(memcpy_caps, default=1), isa.MAX_MEMCPY_WORDS))
     n_dev = int(n_devices)
+    B = int(batch)
+    depth = isa.LOOP_STACK_DEPTH
 
-    def run(mem, params, home, failed):
+    def run(mem, params, homes, failed):
         code = jnp.asarray(code_np)
         base_c = jnp.asarray(base_np)
         mask_c = jnp.asarray(mask_np)
-        home = _i64(home)
         mem = jnp.asarray(mem, jnp.int64)
+        homes = jnp.asarray(homes, jnp.int64).reshape(B)
         failed = jnp.asarray(failed, jnp.bool_)
+        pool_words = mem.shape[1]
 
-        regs0 = jnp.zeros(isa.NUM_REGS, jnp.int64)
-        params = jnp.asarray(params, jnp.int64).reshape(-1)
-        regs0 = lax.dynamic_update_slice(regs0, params, (0,)) \
-            if params.shape[0] else regs0
+        regs0 = jnp.zeros((B, isa.NUM_REGS), jnp.int64)
+        params = jnp.asarray(params, jnp.int64).reshape(B, -1)
+        if params.shape[1]:
+            regs0 = lax.dynamic_update_slice(regs0, params, (0, 0))
 
-        def dev_of(s: VMState, field, via_reg):
-            dreg = s.regs[field & _REG_MASK]
+        # ==============================================================
+        # Scalar (one-request) step — the lax.switch interpreter.  Used
+        # directly at batch=1 and as the serialized fallback under
+        # contention; its semantics are the reference for the vector step.
+        # ==============================================================
+
+        def dev_of1(regs, home, field, via_reg):
+            dreg = regs[field & _REG_MASK]
             d = jnp.where(via_reg, dreg, field)
             return jnp.where(d == DEV_LOCAL, home, jnp.mod(d, n_dev))
 
-        def phys(rid, off):
+        def phys1(rid, off):
             return base_c[rid] + (off & mask_c[rid])
 
-        def alu_eval(aop, a, b):
-            sh = b & 63
-            vals = [
-                a + b, a - b, a * b, a & b, a | b, a ^ b,
-                a << sh, lax.shift_right_logical(a, sh),
-                (a == b).astype(jnp.int64), (a != b).astype(jnp.int64),
-                (a < b).astype(jnp.int64), (a >= b).astype(jnp.int64),
-                jnp.minimum(a, b), jnp.maximum(a, b), a, a,
-            ]
-            return jnp.stack(vals)[jnp.clip(aop, 0, 15)]
+        def alu_eval1(aop, a, b):
+            return jnp.stack(_alu_table(a, b))[jnp.clip(aop, 0, 15)]
 
-        def advance(s: VMState, **kw) -> VMState:
+        def advance(s: ReqState, **kw) -> ReqState:
             return s._replace(ctrl=_i64(0), pc_new=s.pc + 1, **kw)
 
-        # --- one branch per opcode ------------------------------------
-        def br_nop(s, row):
-            return advance(s)
+        # --- one branch per opcode; (s, mem, row, home) -> (s, mem) ----
+        def br_nop(s, mem, row, home):
+            return advance(s), mem
 
-        def br_movi(s, row):
+        def br_movi(s, mem, row, home):
             return advance(s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK]
-                           .set(row[isa.F_IMM]))
+                           .set(row[isa.F_IMM])), mem
 
-        def br_alu(s, row):
+        def br_alu(s, mem, row, home):
             rhs = jnp.where(row[isa.F_FLAGS] & FLAG_IMMB, row[isa.F_IMM],
                             s.regs[row[isa.F_B] & _REG_MASK])
-            val = alu_eval(row[isa.F_D], s.regs[row[isa.F_A] & _REG_MASK], rhs)
-            return advance(s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK].set(val))
+            val = alu_eval1(row[isa.F_D], s.regs[row[isa.F_A] & _REG_MASK],
+                            rhs)
+            return advance(s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK]
+                           .set(val)), mem
 
-        def br_load(s, row):
-            dev = dev_of(s, row[isa.F_E],
-                         (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0)
-            addr = phys(row[isa.F_A],
-                        s.regs[row[isa.F_B] & _REG_MASK] + row[isa.F_IMM])
-            val = s.mem[dev, addr]
-            return advance(s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK].set(val))
+        def br_load(s, mem, row, home):
+            dev = dev_of1(s.regs, home, row[isa.F_E],
+                          (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0)
+            addr = phys1(row[isa.F_A],
+                         s.regs[row[isa.F_B] & _REG_MASK] + row[isa.F_IMM])
+            val = mem[dev, addr]
+            return advance(s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK]
+                           .set(val)), mem
 
-        def br_store(s, row):
-            dev = dev_of(s, row[isa.F_E],
-                         (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0)
-            addr = phys(row[isa.F_A],
-                        s.regs[row[isa.F_B] & _REG_MASK] + row[isa.F_IMM])
+        def br_store(s, mem, row, home):
+            dev = dev_of1(s.regs, home, row[isa.F_E],
+                          (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0)
+            addr = phys1(row[isa.F_A],
+                         s.regs[row[isa.F_B] & _REG_MASK] + row[isa.F_IMM])
             val = s.regs[row[isa.F_DST] & _REG_MASK]
-            return advance(s, mem=s.mem.at[dev, addr].set(val))
+            return advance(s), mem.at[dev, addr].set(val)
 
-        def br_memcpy(s, row):
+        def br_memcpy(s, mem, row, home):
             flags = row[isa.F_FLAGS]
-            ddev = dev_of(s, row[isa.F_DST], (flags & FLAG_DSTDEV_REG) != 0)
-            sdev = dev_of(s, row[isa.F_C], (flags & FLAG_SRCDEV_REG) != 0)
+            ddev = dev_of1(s.regs, home, row[isa.F_DST],
+                           (flags & FLAG_DSTDEV_REG) != 0)
+            sdev = dev_of1(s.regs, home, row[isa.F_C],
+                           (flags & FLAG_SRCDEV_REG) != 0)
             drid, srid = row[isa.F_A], row[isa.F_D]
             cap = row[isa.F_IMM]
             lnreg = s.regs[row[isa.F_IMM2] & _REG_MASK]
@@ -178,41 +227,41 @@ def build_vm(op: VerifiedOperator, regions: RegionTable, n_devices: int):
             doff = s.regs[row[isa.F_B] & _REG_MASK]
             sphys = base_c[srid] + ((soff + i) & mask_c[srid])
             dphys = base_c[drid] + ((doff + i) & mask_c[drid])
-            svals = s.mem[sdev, sphys]
+            svals = mem[sdev, sphys]
             live = i < ln
             # Masked lanes all write the lane-0 value to the lane-0 slot so
             # duplicate scatter indices always carry identical values.
-            val0 = jnp.where(ln > 0, svals[0], s.mem[ddev, dphys[0]])
+            val0 = jnp.where(ln > 0, svals[0], mem[ddev, dphys[0]])
             w_idx = jnp.where(live, dphys, dphys[0])
             w_val = jnp.where(live, svals, val0)
-            mem = s.mem.at[ddev, w_idx].set(w_val)
+            mem2 = mem.at[ddev, w_idx].set(w_val)
             err = jnp.where(fail, s.regs[ERR_REG] | 1, s.regs[ERR_REG])
             regs = s.regs.at[ERR_REG].set(err)
             inflight = jnp.where(
                 flags & FLAG_ASYNC,
                 jnp.minimum(s.inflight + 1, isa.MAX_INFLIGHT), s.inflight)
-            return advance(s, mem=mem, regs=regs, inflight=inflight)
+            return advance(s, regs=regs, inflight=inflight), mem2
 
-        def _br_casa(s, row, is_cas):
-            dev = dev_of(s, row[isa.F_E],
-                         (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0)
-            addr = phys(row[isa.F_A],
-                        s.regs[row[isa.F_B] & _REG_MASK] + row[isa.F_IMM])
-            old = s.mem[dev, addr]
+        def _br_casa(s, mem, row, home, is_cas):
+            dev = dev_of1(s.regs, home, row[isa.F_E],
+                          (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0)
+            addr = phys1(row[isa.F_A],
+                         s.regs[row[isa.F_B] & _REG_MASK] + row[isa.F_IMM])
+            old = mem[dev, addr]
             hit = old == s.regs[row[isa.F_C] & _REG_MASK]
             swp = s.regs[row[isa.F_D] & _REG_MASK]
             new = jnp.where(hit, swp if is_cas else old + swp, old)
             return advance(
-                s, mem=s.mem.at[dev, addr].set(new),
-                regs=s.regs.at[row[isa.F_DST] & _REG_MASK].set(old))
+                s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK].set(old)), \
+                mem.at[dev, addr].set(new)
 
-        def br_cas(s, row):
-            return _br_casa(s, row, True)
+        def br_cas(s, mem, row, home):
+            return _br_casa(s, mem, row, home, True)
 
-        def br_caa(s, row):
-            return _br_casa(s, row, False)
+        def br_caa(s, mem, row, home):
+            return _br_casa(s, mem, row, home, False)
 
-        def br_jump(s, row):
+        def br_jump(s, mem, row, home):
             cond = row[isa.F_D]
             lhs = s.regs[row[isa.F_A] & _REG_MASK]
             rhs = jnp.where(row[isa.F_FLAGS] & FLAG_IMMB, row[isa.F_IMM],
@@ -225,39 +274,42 @@ def build_vm(op: VerifiedOperator, regions: RegionTable, n_devices: int):
                                               lhs >= rhs))))
             return s._replace(
                 ctrl=jnp.where(take, _i64(1), _i64(0)),
-                pc_new=jnp.where(take, s.pc + 1 + row[isa.F_IMM2], s.pc + 1))
+                pc_new=jnp.where(take, s.pc + 1 + row[isa.F_IMM2],
+                                 s.pc + 1)), mem
 
-        def br_loop(s, row):
+        def br_loop(s, mem, row, home):
             cap = row[isa.F_IMM]
             m = jnp.where(row[isa.F_FLAGS] & FLAG_MREG,
                           jnp.clip(s.regs[row[isa.F_B] & _REG_MASK], 0, cap),
                           cap)
             skip = m <= 0
             frame = jnp.stack([s.pc + 1, s.pc + row[isa.F_IMM2], m])
-            sp = jnp.clip(s.lsp, 0, isa.LOOP_STACK_DEPTH - 1)
+            sp = jnp.clip(s.lsp, 0, depth - 1)
             pushed = s.lstack.at[sp].set(frame)
             return s._replace(
                 lstack=jnp.where(skip, s.lstack, pushed),
                 lsp=jnp.where(skip, s.lsp, s.lsp + 1),
                 ctrl=_i64(0),
-                pc_new=jnp.where(skip, s.pc + 1 + row[isa.F_IMM2], s.pc + 1))
+                pc_new=jnp.where(skip, s.pc + 1 + row[isa.F_IMM2],
+                                 s.pc + 1)), mem
 
-        def br_wait(s, row):
+        def br_wait(s, mem, row, home):
             thr = jnp.where(row[isa.F_FLAGS] & FLAG_THR_REG,
-                            s.regs[row[isa.F_A] & _REG_MASK], row[isa.F_IMM])
+                            s.regs[row[isa.F_A] & _REG_MASK],
+                            row[isa.F_IMM])
             return advance(s, inflight=jnp.minimum(
-                s.inflight, jnp.maximum(thr, 0)))
+                s.inflight, jnp.maximum(thr, 0))), mem
 
-        def br_ret(s, row):
+        def br_ret(s, mem, row, home):
             return advance(s, halted=jnp.asarray(True),
                            ret=s.regs[row[isa.F_A] & _REG_MASK],
-                           status=row[isa.F_IMM])
+                           status=row[isa.F_IMM]), mem
 
         branches = [br_nop, br_movi, br_alu, br_load, br_store, br_memcpy,
                     br_cas, br_caa, br_jump, br_loop, br_wait, br_ret]
 
-        # --- post-step loop bookkeeping --------------------------------
-        def loop_fixup(s: VMState) -> VMState:
+        # --- post-step loop bookkeeping (scalar) ------------------------
+        def loop_fixup1(s: ReqState) -> ReqState:
             # taken jump: pop every frame whose body the jump escaped
             def pop_cond(t):
                 lsp, = t
@@ -297,36 +349,447 @@ def build_vm(op: VerifiedOperator, regions: RegionTable, n_devices: int):
                 lsp=jnp.where(is_jump, pop_lsp, it_lsp),
                 lstack=jnp.where(is_jump, s.lstack, it_stack))
 
-        def step(s: VMState) -> VMState:
-            row = code[jnp.clip(s.pc, 0, n_instr - 1)]
-            opc = jnp.clip(row[isa.F_OP], 0, len(branches) - 1).astype(jnp.int32)
-            s2 = lax.switch(opc, branches, s, row)
-            s2 = s2._replace(steps=s2.steps + 1)
-            return lax.cond(s2.halted, lambda t: t, loop_fixup, s2)
+        def step_one(s: ReqState, mem, row, home, act):
+            """Execute one instruction of one request (if active)."""
+            def do(args):
+                s, mem = args
+                opc = jnp.clip(row[isa.F_OP], 0,
+                               len(branches) - 1).astype(jnp.int32)
+                s2, mem2 = lax.switch(opc, branches, s, mem, row, home)
+                s2 = s2._replace(steps=s2.steps + 1)
+                s2 = lax.cond(s2.halted, lambda t: t, loop_fixup1, s2)
+                return s2, mem2
 
-        def cond(s: VMState):
+            return lax.cond(act, do, lambda a: a, (s, mem))
+
+        def serial_step(s: ReqState, mem, rows, active):
+            """The contention-exact macro-step: requests 0..B-1 each execute
+            one instruction in index order against the shared pool."""
+            def body(mem, x):
+                s1, row, home, act = x
+                s2, mem2 = step_one(s1, mem, row, home, act)
+                return mem2, s2
+
+            mem2, s2 = lax.scan(body, mem, (s, rows, homes, active))
+            return s2, mem2
+
+        # ==============================================================
+        # Vectorized macro-step (used when the step is conflict-free).
+        # Every opcode path is computed for every lane and combined with
+        # masks; scatters route dead lanes to out-of-bounds drop targets.
+        # ==============================================================
+
+        lane16 = jnp.arange(isa.NUM_REGS, dtype=jnp.int64)[None, :]
+        lane8 = jnp.arange(depth, dtype=jnp.int64)[None, :]
+
+        def rd(regs, idx):
+            """Vector register-file read: regs[b, idx[b] & 15]."""
+            return jnp.take_along_axis(
+                regs, (idx & _REG_MASK)[:, None], axis=1)[:, 0]
+
+        def dev_of_v(regs, field, via_reg):
+            d = jnp.where(via_reg, rd(regs, field), field)
+            return jnp.where(d == DEV_LOCAL, homes, jnp.mod(d, n_dev))
+
+        def _decode(s, rows):
+            """Shared per-lane decode of memory operands (word ops and
+            memcpy windows) used by both the vector step and the conflict
+            check."""
+            flags = rows[:, isa.F_FLAGS]
+            # word ops (LOAD/STORE/CAS/CAA) share the same addressing form
+            w_rid = jnp.clip(rows[:, isa.F_A], 0, n_regions - 1)
+            w_dev = dev_of_v(s.regs, rows[:, isa.F_E],
+                             (flags & FLAG_DEV_REG) != 0)
+            w_off = rd(s.regs, rows[:, isa.F_B]) + rows[:, isa.F_IMM]
+            w_addr = base_c[w_rid] + (w_off & mask_c[w_rid])
+            # memcpy operands
+            m_drid = jnp.clip(rows[:, isa.F_A], 0, n_regions - 1)
+            m_srid = jnp.clip(rows[:, isa.F_D], 0, n_regions - 1)
+            m_ddev = dev_of_v(s.regs, rows[:, isa.F_DST],
+                              (flags & FLAG_DSTDEV_REG) != 0)
+            m_sdev = dev_of_v(s.regs, rows[:, isa.F_C],
+                              (flags & FLAG_SRCDEV_REG) != 0)
+            cap = rows[:, isa.F_IMM]
+            lnreg = rd(s.regs, rows[:, isa.F_IMM2])
+            ln = jnp.where((flags & FLAG_LEN_REG) != 0,
+                           jnp.clip(lnreg, 0, cap), cap)
+            ln = jnp.minimum(jnp.minimum(ln, mask_c[m_drid] + 1),
+                             mask_c[m_srid] + 1)
+            m_fail = failed[m_ddev] | failed[m_sdev]
+            ln = jnp.where(m_fail, 0, ln)
+            m_soff = rd(s.regs, rows[:, isa.F_E])
+            m_doff = rd(s.regs, rows[:, isa.F_B])
+            return dict(flags=flags, w_rid=w_rid, w_dev=w_dev, w_addr=w_addr,
+                        m_drid=m_drid, m_srid=m_srid, m_ddev=m_ddev,
+                        m_sdev=m_sdev, ln=ln, m_fail=m_fail, m_soff=m_soff,
+                        m_doff=m_doff)
+
+        def detect_conflict(s, rows, active):
+            """True iff some request's write window may overlap another
+            request's read or write window this macro-step.
+
+            Word ops contribute exact one-word intervals; memcpy its exact
+            window when it does not wrap the region mask, else the whole
+            region.  An atomic's read is the same word as its write, so it
+            contributes one write interval only.  Conflict existence is a
+            sweep line over the 2B sorted interval starts with exclusive
+            running maxima of the ends — O(B log B), not O(B^2).  The only
+            false positive is a memcpy whose *own* source and destination
+            windows overlap (memmove within one request), which merely
+            takes the exact serialized path.  Never unsound."""
+            d = _decode(s, rows)
+            opv = rows[:, isa.F_OP]
+            is_load = active & (opv == int(Op.LOAD))
+            is_store = active & (opv == int(Op.STORE))
+            is_atom = active & ((opv == int(Op.CAS)) | (opv == int(Op.CAA)))
+            is_mcpy = active & (opv == int(Op.MEMCPY))
+            P = pool_words
+            wf = d["w_dev"] * P + d["w_addr"]
+            # memcpy source span
+            s_size = mask_c[d["m_srid"]] + 1
+            s_start = d["m_soff"] & mask_c[d["m_srid"]]
+            s_wrap = (s_start + d["ln"]) > s_size
+            src_lo = d["m_sdev"] * P + base_c[d["m_srid"]] + \
+                jnp.where(s_wrap, 0, s_start)
+            src_hi = src_lo + jnp.where(s_wrap, s_size, d["ln"])
+            # memcpy destination span
+            d_size = mask_c[d["m_drid"]] + 1
+            d_start = d["m_doff"] & mask_c[d["m_drid"]]
+            d_wrap = (d_start + d["ln"]) > d_size
+            dst_lo = d["m_ddev"] * P + base_c[d["m_drid"]] + \
+                jnp.where(d_wrap, 0, d_start)
+            dst_hi = dst_lo + jnp.where(d_wrap, d_size, d["ln"])
+
+            big = jnp.int64(1) << 62
+            empty_lo, empty_hi = big, -big
+            r_lo = jnp.where(is_load, wf,
+                             jnp.where(is_mcpy, src_lo, empty_lo))
+            r_hi = jnp.where(is_load, wf + 1,
+                             jnp.where(is_mcpy, src_hi, empty_hi))
+            w_lo = jnp.where(is_store | is_atom, wf,
+                             jnp.where(is_mcpy, dst_lo, empty_lo))
+            w_hi = jnp.where(is_store | is_atom, wf + 1,
+                             jnp.where(is_mcpy, dst_hi, empty_hi))
+            # zero-length memcpy windows must be empty, not points
+            r_hi = jnp.where(r_hi <= r_lo, empty_hi, r_hi)
+            w_hi = jnp.where(w_hi <= w_lo, empty_hi, w_hi)
+
+            lo = jnp.concatenate([r_lo, w_lo])
+            hi = jnp.concatenate([r_hi, w_hi])
+            isw = jnp.concatenate([jnp.zeros(B, bool), jnp.ones(B, bool)])
+            order = jnp.argsort(lo)
+            lo_s, hi_s, w_s = lo[order], hi[order], isw[order]
+            hi_w = jnp.where(w_s, hi_s, empty_hi)
+            neg1 = jnp.full(1, empty_hi)
+            excl_all = jnp.concatenate([neg1, lax.cummax(hi_s)[:-1]])
+            excl_w = jnp.concatenate([neg1, lax.cummax(hi_w)[:-1]])
+            return jnp.any(excl_w > lo_s) | \
+                jnp.any(w_s & (excl_all > lo_s))
+
+        def alu_eval_v(aop, a, b):
+            stacked = jnp.stack(_alu_table(a, b))      # (16, B)
+            return jnp.take_along_axis(
+                stacked, jnp.clip(aop, 0, 15)[None, :], axis=0)[0]
+
+        def vector_step(s: ReqState, mem, rows, active):
+            d = _decode(s, rows)
+            opv = rows[:, isa.F_OP]
+            flags = d["flags"]
+            imm = rows[:, isa.F_IMM]
+            imm2 = rows[:, isa.F_IMM2]
+
+            def is_op(o):
+                return active & (opv == int(o))
+
+            is_movi, is_alu = is_op(Op.MOVI), is_op(Op.ALU)
+            is_load, is_store = is_op(Op.LOAD), is_op(Op.STORE)
+            is_mcpy = is_op(Op.MEMCPY)
+            is_cas, is_caa = is_op(Op.CAS), is_op(Op.CAA)
+            is_jump, is_loop = is_op(Op.JUMP), is_op(Op.LOOP)
+            is_wait, is_ret = is_op(Op.WAIT), is_op(Op.RET)
+            is_atom = is_cas | is_caa
+
+            # --- ALU / MOVI --------------------------------------------
+            alu_rhs = jnp.where((flags & FLAG_IMMB) != 0, imm,
+                                rd(s.regs, rows[:, isa.F_B]))
+            alu_val = alu_eval_v(rows[:, isa.F_D],
+                                 rd(s.regs, rows[:, isa.F_A]), alu_rhs)
+
+            # --- LOAD / CAS / CAA reads (step-start memory: the conflict
+            # check guarantees no same-step writer touches these words) ---
+            g_dev = jnp.clip(d["w_dev"], 0, n_dev - 1)
+            g_addr = jnp.clip(d["w_addr"], 0, pool_words - 1)
+            w_old = mem[g_dev, g_addr]
+            hit = w_old == rd(s.regs, rows[:, isa.F_C])
+            swp = rd(s.regs, rows[:, isa.F_D])
+            atom_new = jnp.where(
+                hit, jnp.where(is_cas, swp, w_old + swp), w_old)
+
+            # --- register write channel (one per opcode at most) --------
+            err_old = s.regs[:, ERR_REG]
+            err_new = jnp.where(d["m_fail"], err_old | 1, err_old)
+            reg_w_mask = is_movi | is_alu | is_load | is_atom | is_mcpy
+            reg_w_idx = jnp.where(
+                is_mcpy, ERR_REG, rows[:, isa.F_DST] & _REG_MASK)
+            reg_w_val = jnp.where(
+                is_movi, imm,
+                jnp.where(is_alu, alu_val,
+                          jnp.where(is_load, w_old,
+                                    jnp.where(is_atom, w_old, err_new))))
+            upd = (lane16 == reg_w_idx[:, None]) & reg_w_mask[:, None]
+            regs = jnp.where(upd, reg_w_val[:, None], s.regs)
+
+            # --- single-word scatter (STORE / CAS / CAA) -----------------
+            sw_mask = is_store | is_atom
+            sw_val = jnp.where(is_store, rd(s.regs, rows[:, isa.F_DST]),
+                               atom_new)
+            mem = mem.at[jnp.where(sw_mask, d["w_dev"], n_dev),
+                         jnp.where(sw_mask, d["w_addr"], pool_words)
+                         ].set(sw_val, mode="drop")
+
+            # --- memcpy window gather + scatter --------------------------
+            iw = jnp.arange(max_window, dtype=jnp.int64)[None, :]
+            sphys = base_c[d["m_srid"]][:, None] + \
+                ((d["m_soff"][:, None] + iw) & mask_c[d["m_srid"]][:, None])
+            dphys = base_c[d["m_drid"]][:, None] + \
+                ((d["m_doff"][:, None] + iw) & mask_c[d["m_drid"]][:, None])
+            live = is_mcpy[:, None] & (iw < d["ln"][:, None])
+            sdev_g = jnp.clip(d["m_sdev"], 0, n_dev - 1)[:, None]
+            svals = mem[sdev_g, jnp.clip(sphys, 0, pool_words - 1)]
+            mem = mem.at[jnp.where(live, d["m_ddev"][:, None], n_dev),
+                         jnp.where(live, dphys, pool_words)
+                         ].set(svals, mode="drop")
+
+            # --- inflight ------------------------------------------------
+            inflight = jnp.where(
+                is_mcpy & ((flags & FLAG_ASYNC) != 0),
+                jnp.minimum(s.inflight + 1, isa.MAX_INFLIGHT), s.inflight)
+            thr = jnp.where((flags & FLAG_THR_REG) != 0,
+                            rd(s.regs, rows[:, isa.F_A]), imm)
+            inflight = jnp.where(
+                is_wait, jnp.minimum(inflight, jnp.maximum(thr, 0)),
+                inflight)
+
+            # --- RET -----------------------------------------------------
+            halted = s.halted | is_ret
+            ret = jnp.where(is_ret, rd(s.regs, rows[:, isa.F_A]), s.ret)
+            status = jnp.where(is_ret, imm, s.status)
+
+            # --- control flow -------------------------------------------
+            jcond = rows[:, isa.F_D]
+            jlhs = rd(s.regs, rows[:, isa.F_A])
+            jrhs = jnp.where((flags & FLAG_IMMB) != 0, imm,
+                             rd(s.regs, rows[:, isa.F_B]))
+            take = jnp.where(
+                jcond == int(Alu.ALWAYS), True,
+                jnp.where(jcond == int(Alu.EQ), jlhs == jrhs,
+                          jnp.where(jcond == int(Alu.NE), jlhs != jrhs,
+                                    jnp.where(jcond == int(Alu.LT),
+                                              jlhs < jrhs, jlhs >= jrhs))))
+            # LOOP push
+            cap = imm
+            m = jnp.where((flags & FLAG_MREG) != 0,
+                          jnp.clip(rd(s.regs, rows[:, isa.F_B]), 0, cap),
+                          cap)
+            skip = m <= 0
+            push = is_loop & ~skip
+            frame = jnp.stack([s.pc + 1, s.pc + imm2, m], axis=-1)  # (B, 3)
+            sp = jnp.clip(s.lsp, 0, depth - 1)
+            push_lane = (lane8 == sp[:, None]) & push[:, None]      # (B, 8)
+            lstack = jnp.where(push_lane[:, :, None], frame[:, None, :],
+                               s.lstack)
+            lsp = jnp.where(push, s.lsp + 1, s.lsp)
+
+            pc_new = jnp.where(
+                is_jump & take, s.pc + 1 + imm2,
+                jnp.where(is_loop & skip, s.pc + 1 + imm2, s.pc + 1))
+            ctrl = jnp.where(is_jump & take, _i64(1), _i64(0))
+
+            # --- loop fixup, vectorized over the batch -------------------
+            def top(field, stk, lsp_v):
+                idx = jnp.clip(lsp_v - 1, 0, depth - 1)
+                return jnp.take_along_axis(
+                    stk[:, :, field], idx[:, None], axis=1)[:, 0]
+
+            # taken jump: pop every frame whose body the jump escaped
+            pop_lsp = lsp
+            for _ in range(depth):
+                cond = (pop_lsp > 0) & (top(1, lstack, pop_lsp) < pc_new)
+                pop_lsp = jnp.where(cond, pop_lsp - 1, pop_lsp)
+
+            # normal advance: iterate / pop frames whose body just ended
+            it_stack, it_lsp, it_pcn = lstack, lsp, pc_new
+            done = jnp.zeros(B, bool)
+            for _ in range(depth):
+                idx = jnp.clip(it_lsp - 1, 0, depth - 1)
+                t_end = top(1, it_stack, it_lsp)
+                cond = (~done) & (it_lsp > 0) & (it_pcn == t_end + 1)
+                rem = top(2, it_stack, it_lsp) - 1
+                cont = rem > 0
+                set_m = cond & cont
+                upd2 = (lane8 == idx[:, None]) & set_m[:, None]
+                it_stack = jnp.where(
+                    upd2[:, :, None]
+                    & (jnp.arange(3) == 2)[None, None, :],
+                    rem[:, None, None], it_stack)
+                it_pcn = jnp.where(set_m, top(0, it_stack, it_lsp), it_pcn)
+                it_lsp = jnp.where(cond & ~cont, it_lsp - 1, it_lsp)
+                done = done | set_m
+
+            is_jtaken = ctrl == 1
+            fix = active & ~is_ret
+            pc = jnp.where(fix, jnp.where(is_jtaken, pc_new, it_pcn), s.pc)
+            lsp_f = jnp.where(fix, jnp.where(is_jtaken, pop_lsp, it_lsp),
+                              jnp.where(active, lsp, s.lsp))
+            lstack_f = jnp.where(
+                fix[:, None, None],
+                jnp.where(is_jtaken[:, None, None], lstack, it_stack),
+                jnp.where(active[:, None, None], lstack, s.lstack))
+
+            # --- merge, masking out inactive lanes -----------------------
+            regs = jnp.where(active[:, None], regs, s.regs)
+            s2 = ReqState(
+                pc=pc, regs=regs, lstack=lstack_f, lsp=lsp_f,
+                inflight=jnp.where(active, inflight, s.inflight),
+                halted=jnp.where(active, halted, s.halted),
+                ret=jnp.where(active, ret, s.ret),
+                status=jnp.where(active, status, s.status),
+                steps=s.steps + active.astype(jnp.int64),
+                ctrl=jnp.where(active, ctrl, s.ctrl),
+                pc_new=jnp.where(active, pc_new, s.pc_new))
+            return s2, mem
+
+        # ==============================================================
+        # Driver
+        # ==============================================================
+
+        def live_mask(s: ReqState):
             return (~s.halted) & (s.pc < n_instr) & (s.steps < fuel)
 
-        init = VMState(
-            pc=_i64(0), regs=regs0,
-            lstack=jnp.zeros((isa.LOOP_STACK_DEPTH, 3), jnp.int64),
-            lsp=_i64(0), inflight=_i64(0), mem=mem,
-            halted=jnp.asarray(False), ret=_i64(0),
-            status=_i64(isa.STATUS_FELL_OFF), steps=_i64(0),
-            ctrl=_i64(0), pc_new=_i64(0))
+        def step(carry):
+            s, mem = carry
+            active = live_mask(s)
+            rows = code[jnp.clip(s.pc, 0, n_instr - 1)]
+            if B == 1:
+                # single request: the scalar switch interpreter, no
+                # conflict machinery — the classic Tiara MP datapath
+                s2, mem2 = serial_step(s, mem, rows, active)
+            else:
+                s2, mem2 = lax.cond(
+                    detect_conflict(s, rows, active),
+                    serial_step, vector_step, s, mem, rows, active)
+            return s2, mem2
 
-        final = lax.while_loop(cond, step, init)
+        def cond(carry):
+            s, _ = carry
+            return jnp.any(live_mask(s))
+
+        init = ReqState(
+            pc=jnp.zeros(B, jnp.int64), regs=regs0,
+            lstack=jnp.zeros((B, depth, 3), jnp.int64),
+            lsp=jnp.zeros(B, jnp.int64),
+            inflight=jnp.zeros(B, jnp.int64), halted=jnp.zeros(B, bool),
+            ret=jnp.zeros(B, jnp.int64),
+            status=jnp.full(B, isa.STATUS_FELL_OFF, jnp.int64),
+            steps=jnp.zeros(B, jnp.int64),
+            ctrl=jnp.zeros(B, jnp.int64), pc_new=jnp.zeros(B, jnp.int64))
+
+        final, mem_f = lax.while_loop(cond, step, (init, mem))
         status = jnp.where(
             final.halted, final.status,
             jnp.where(final.steps >= fuel, _i64(isa.STATUS_FUEL),
                       _i64(isa.STATUS_FELL_OFF)))
-        return VMResult(mem=final.mem, ret=final.ret, status=status,
+        return VMResult(mem=mem_f, ret=final.ret, status=status,
                         steps=final.steps, regs=final.regs)
 
-    return jax.jit(run, static_argnames=())
+    return jax.jit(run)
 
 
+def build_vm(op: VerifiedOperator, regions: RegionTable, n_devices: int):
+    """Single-request entry point: ``f(mem, params, home, failed)`` —
+    the ``batch=1`` specialization of :func:`build_batched_vm` with scalar
+    result fields, kept for every existing caller."""
+    batched = build_batched_vm(op, regions, n_devices, batch=1)
+
+    def run(mem, params, home, failed):
+        params = jnp.asarray(params, jnp.int64).reshape(1, -1)
+        homes = jnp.asarray(home, jnp.int64).reshape(1)
+        out = batched(mem, params, homes, failed)
+        return VMResult(mem=out.mem, ret=out.ret[0], status=out.status[0],
+                        steps=out.steps[0], regs=out.regs[0])
+
+    return run
+
+
+def engine_key(op: VerifiedOperator, regions: RegionTable, n_dev: int,
+               batch: int, *extra) -> Tuple:
+    """Content-addressed cache key for a built engine (object ids recycle
+    after GC — never key on id).  Shared with the compiled-path cache."""
+    base, mask, _ = regions.as_arrays()
+    return (op.code.tobytes(), base.tobytes(), mask.tobytes(),
+            op.step_bound, n_dev, batch) + extra
+
+
+# Engines are cached per (operator, regions, n_devices, batch): a serving
+# loop should pad request waves to a few fixed batch sizes (e.g. powers of
+# two) so the cache stays small — every new B is a fresh XLA compile.
 _VM_CACHE: Dict[Tuple, object] = {}
+
+
+def _cached_engine(op: VerifiedOperator, regions: RegionTable, n_dev: int,
+                   batch: int):
+    key = engine_key(op, regions, n_dev, batch)
+    fn = _VM_CACHE.get(key)
+    if fn is None:
+        fn = build_batched_vm(op, regions, n_dev, batch)
+        _VM_CACHE[key] = fn
+    return fn
+
+
+def run_batched_fn(fn, mem: np.ndarray, p: np.ndarray, h: np.ndarray,
+                   failed: Optional[Set[int]]) -> "BatchedInvokeResult":
+    """Execute a built batched engine: numpy in, numpy out, x64 handled.
+    Shared by the interpreter and compiled wrappers."""
+    n_dev = int(mem.shape[0])
+    with x64():
+        out = fn(jnp.asarray(mem, jnp.int64), jnp.asarray(p),
+                 jnp.asarray(h), jnp.asarray(_failed_mask(n_dev, failed)))
+        out = jax.tree_util.tree_map(np.asarray, out)
+    return BatchedInvokeResult(mem=out.mem, ret=out.ret, status=out.status,
+                               steps=out.steps, regs=out.regs)
+
+
+def _wrap_param(v) -> np.int64:
+    return np.int64(np.uint64(v & (2**64 - 1)).astype(np.uint64)
+                    .view(np.int64)) \
+        if v > 2**63 - 1 or v < -2**63 else np.int64(v)
+
+
+def _failed_mask(n_dev: int, failed: Optional[Set[int]]) -> np.ndarray:
+    m = np.zeros(n_dev, dtype=bool)
+    for f in (failed or ()):
+        m[f] = True
+    return m
+
+
+def _marshal_batch(params: Sequence[Sequence[int]],
+                   homes: Union[int, Sequence[int]]
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Validate and pack a request batch: params -> i64[B, width],
+    homes -> i64[B].  Shared by the interpreter and compiled wrappers."""
+    batch = len(params)
+    if batch == 0:
+        raise ValueError("empty request batch")
+    width = max(max((len(row) for row in params), default=0), 1)
+    p = np.zeros((batch, width), dtype=np.int64)
+    for b, row in enumerate(params):
+        for i, v in enumerate(row):
+            p[b, i] = _wrap_param(v)
+    h = np.full(batch, homes, dtype=np.int64) if np.isscalar(homes) \
+        else np.asarray(list(homes), dtype=np.int64)
+    if h.shape != (batch,):
+        raise ValueError(f"homes shape {h.shape} != ({batch},)")
+    return p, h
 
 
 def invoke(op: VerifiedOperator, regions: RegionTable, mem: np.ndarray,
@@ -334,27 +797,33 @@ def invoke(op: VerifiedOperator, regions: RegionTable, mem: np.ndarray,
            failed: Optional[Set[int]] = None) -> "InvokeResult":
     """Convenience entry point: numpy in, numpy out, x64 handled."""
     n_dev = int(mem.shape[0])
-    base, mask, _ = regions.as_arrays()
-    # content-keyed cache (object ids recycle after GC — never key on id)
-    key = (op.code.tobytes(), base.tobytes(), mask.tobytes(),
-           op.step_bound, n_dev)
     with x64():
-        fn = _VM_CACHE.get(key)
-        if fn is None:
-            fn = build_vm(op, regions, n_dev)
-            _VM_CACHE[key] = fn
-        p = np.zeros(max(len(params), 1), dtype=np.int64)
+        fn = _cached_engine(op, regions, n_dev, batch=1)
+        p = np.zeros((1, max(len(params), 1)), dtype=np.int64)
         for i, v in enumerate(params):
-            p[i] = np.int64(np.uint64(v & (2**64 - 1)).astype(np.uint64).view(np.int64)) \
-                if v > 2**63 - 1 or v < -2**63 else np.int64(v)
-        failed_mask = np.zeros(n_dev, dtype=bool)
-        for f in (failed or ()):
-            failed_mask[f] = True
+            p[0, i] = _wrap_param(v)
         out = fn(jnp.asarray(mem, jnp.int64), jnp.asarray(p),
-                 np.int64(home), jnp.asarray(failed_mask))
+                 jnp.asarray([home], jnp.int64),
+                 jnp.asarray(_failed_mask(n_dev, failed)))
         out = jax.tree_util.tree_map(np.asarray, out)
-    return InvokeResult(mem=out.mem, ret=int(out.ret), status=int(out.status),
-                        steps=int(out.steps), regs=out.regs)
+    return InvokeResult(mem=out.mem, ret=int(out.ret[0]),
+                        status=int(out.status[0]), steps=int(out.steps[0]),
+                        regs=out.regs[0])
+
+
+def invoke_batched(op: VerifiedOperator, regions: RegionTable,
+                   mem: np.ndarray, params: Sequence[Sequence[int]],
+                   *, homes: Union[int, Sequence[int]] = 0,
+                   failed: Optional[Set[int]] = None
+                   ) -> "BatchedInvokeResult":
+    """Run a batch of requests against one shared pool: numpy in/out.
+
+    ``params`` is a [B][k] nested sequence (one row per request); ``homes``
+    is a scalar (all requests from the same host) or a [B] sequence.
+    """
+    p, h = _marshal_batch(params, homes)
+    fn = _cached_engine(op, regions, int(mem.shape[0]), p.shape[0])
+    return run_batched_fn(fn, mem, p, h, failed)
 
 
 @dataclasses.dataclass
@@ -367,4 +836,17 @@ class InvokeResult:
 
     @property
     def ok(self) -> bool:
+        return self.status == isa.STATUS_OK
+
+
+@dataclasses.dataclass
+class BatchedInvokeResult:
+    mem: np.ndarray
+    ret: np.ndarray       # i64 [B]
+    status: np.ndarray    # i64 [B]
+    steps: np.ndarray     # i64 [B]
+    regs: np.ndarray      # i64 [B, 16]
+
+    @property
+    def ok(self) -> np.ndarray:
         return self.status == isa.STATUS_OK

@@ -29,6 +29,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compile import masked_row_gather
+
 NEG = -1e30
 
 
@@ -44,9 +46,9 @@ def _partial_paged_attention(q, k_pages, v_pages, bt_local, lengths, *,
 
     loff = bt_local - base_page
     mine = (loff >= 0) & (loff < pp_local)
-    safe = jnp.clip(loff, 0, pp_local - 1)
-    k = k_pages[safe]                        # (B, maxp, page, KVH, D)
-    v = v_pages[safe]
+    # the compiled gather-chain superoperator: block table -> local pages
+    k = masked_row_gather(k_pages, loff)     # (B, maxp, page, KVH, D)
+    v = masked_row_gather(v_pages, loff)
     s = jnp.einsum("bhgd,bmphd->bhgmp", q.astype(jnp.float32) * scale,
                    k.astype(jnp.float32))
     pos = (jnp.arange(maxp)[:, None] * page
@@ -80,8 +82,8 @@ def _partial_paged_attention_sliced(q, k_pages, v_pages, bt, lengths, *,
     cols = lax.dynamic_slice_in_dim(btrow, col0, pp_local, 0)
     loff = cols - base_page
     mine = (loff >= 0) & (loff < pp_local)
-    k = k_pages[jnp.clip(loff, 0, pp_local - 1)]   # (pp, page, KVH, D)
-    v = v_pages[jnp.clip(loff, 0, pp_local - 1)]
+    k = masked_row_gather(k_pages, loff)           # (pp, page, KVH, D)
+    v = masked_row_gather(v_pages, loff)
     qrow = lax.dynamic_index_in_dim(q, seq_local, 0, keepdims=False)
     length = lax.dynamic_index_in_dim(lengths, seq_local, 0,
                                       keepdims=False)

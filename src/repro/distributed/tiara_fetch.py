@@ -39,6 +39,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compile import masked_row_gather
+
 
 def _owner_route(ids, owner, n_shards: int, quota: int):
     """Bucket ids by owner shard with a fixed per-destination quota.
@@ -71,13 +73,13 @@ def make_tiara_fetch(mesh: Mesh, axis: str, n_logical: int, n_rows: int,
         # --- round trip 1 of 1: ship requests to owners ----------------
         reqs = lax.all_to_all(routed, axis, 0, 0, tiled=True)
         reqs = reqs.reshape(n_shards, quota)
-        # --- memory-side resolution: register-chained loads -------------
+        # --- memory-side resolution: the compiled gather-chain
+        # superoperator (register-chained loads of core/compile) ----------
         live = reqs >= 0
         loff = jnp.where(live, reqs - my * t_shard, 0)
-        phys = table_l[jnp.clip(loff, 0, t_shard - 1)]       # chained load 1
+        phys = masked_row_gather(table_l, loff, live)        # chained load 1
         poff = jnp.where(live, phys - my * r_shard, 0)
-        rows = pool_l[jnp.clip(poff, 0, r_shard - 1)]        # chained load 2
-        rows = jnp.where(live[..., None], rows, 0)
+        rows = masked_row_gather(pool_l, poff, live)         # chained load 2
         # --- reply travels back with the second half of the round trip --
         back = lax.all_to_all(rows, axis, 0, 0, tiled=True)
         back = back.reshape(n_shards * quota, -1)

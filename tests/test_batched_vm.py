@@ -1,0 +1,363 @@
+"""Batch-parallel engine and trace-compiled fast path vs the pyvm oracle.
+
+Parity contract (see ``core/vm.py`` docstring): batched execution is the
+deterministic round-robin interleaving of its requests.  When request
+footprints are disjoint that is bit-identical to running them one after
+another on ``pyvm``; under contention the ordering stays deterministic
+(lowest request index wins a contended atomic).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import compile as tc
+from repro.core import isa, memory, pyvm, vm
+from repro.core.isa import Alu
+from repro.core.memory import Grant
+from repro.core import operators as ops
+from repro.core.program import OperatorBuilder
+from repro.core.registry import OperatorRegistry
+from repro.core.verifier import verify
+
+
+def sequential_oracle(vop, rt, mem, params, homes=None, failed=None):
+    """Run the batch one request at a time on pyvm (shared memory)."""
+    seq = mem.copy()
+    rets, stats, steps = [], [], []
+    for i, p in enumerate(params):
+        home = homes[i] if homes is not None else 0
+        r = pyvm.run(vop, rt, seq, p, home=home, failed=failed or set())
+        rets.append(r.ret)
+        stats.append(r.status)
+        steps.append(r.steps)
+    return seq, np.array(rets), np.array(stats), np.array(steps)
+
+
+def assert_batch_matches(res, seq_mem, rets, stats, steps):
+    assert np.array_equal(res.ret, rets), (res.ret, rets)
+    assert np.array_equal(res.status, stats)
+    assert np.array_equal(res.steps, steps)
+    assert np.array_equal(res.mem, seq_mem)
+
+
+# ---------------------------------------------------------------------------
+# Batched interpreter vs sequential pyvm (disjoint requests)
+# ---------------------------------------------------------------------------
+
+def test_batched_graph_walk_parity():
+    w = ops.GraphWalk(n_nodes=128, max_depth=16, reply_words=16 * 8)
+    rt = w.regions()
+    vop = verify(w.build(rt, reply_param=True), grant=Grant.all_of(rt),
+                 regions=rt)
+    mem = memory.make_pool(1, rt)
+    order = w.populate(mem, rt)
+    B = 12
+    params = [[int(order[i]) * 8, (3 * i) % 16, i * ops.NODE_WORDS]
+              for i in range(B)]
+    res = vm.invoke_batched(vop, rt, mem, params)
+    assert_batch_matches(res, *sequential_oracle(vop, rt, mem, params))
+    for i in range(B):
+        assert res.ret[i] == w.reference(order, int(order[i]),
+                                         (3 * i) % 16)
+
+
+def test_batched_ptw_parity():
+    p = ops.PageTableWalk(fanout=16, n_pages=32, reply_pages=8)
+    rt = p.regions()
+    vop = verify(p.build(rt, reply_param=True), grant=Grant.all_of(rt),
+                 regions=rt)
+    mem = memory.make_pool(1, rt)
+    vamap = p.populate(mem, rt)
+    items = list(vamap.items())[:8]
+    params = [[va, i * ops.PAGE_WORDS] for i, (va, _) in enumerate(items)]
+    res = vm.invoke_batched(vop, rt, mem, params)
+    assert_batch_matches(res, *sequential_oracle(vop, rt, mem, params))
+    for i, (_, ppage) in enumerate(items):
+        assert res.ret[i] == ppage
+
+
+def test_batched_per_request_homes():
+    """Requests executing from different hosts write their own pools."""
+    w = ops.GraphWalk(n_nodes=64, max_depth=8)
+    rt = w.regions()
+    vop = verify(w.build(rt), grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(3, rt)
+    orders = [w.populate(mem, rt, device=d, seed=d) for d in range(3)]
+    homes = [0, 1, 2]
+    params = [[int(orders[d][0]) * 8, 5] for d in range(3)]
+    res = vm.invoke_batched(vop, rt, mem, params, homes=homes)
+    assert_batch_matches(res, *sequential_oracle(vop, rt, mem, params,
+                                                 homes=homes))
+    for d in range(3):
+        assert res.ret[d] == w.reference(orders[d], int(orders[d][0]), 5)
+
+
+@pytest.mark.parametrize("wl,params", [
+    ("kv", None), ("moe", None), ("nsa", None)])
+def test_batched_identical_requests_all_ops(wl, params):
+    """Every seed operator: B identical requests == one pyvm run (their
+    effects are idempotent), exercising the conflict-serialized path."""
+    if wl == "kv":
+        k = ops.PagedKVFetch(n_blocks_pool=16, block_bytes=4096,
+                             max_req_blocks=4)
+        rt = k.regions()
+        vop = verify(k.build(rt), grant=Grant.all_of(rt), regions=rt)
+        mem = memory.make_pool(1, rt)
+        k.populate(mem, rt)
+        k.make_request(mem, rt, [3, 9, 1])
+        p = [3]
+    elif wl == "moe":
+        m = ops.MoEExpertGather(n_experts=32, max_k=8)
+        rt = m.regions()
+        vop = verify(m.build(rt), grant=Grant.all_of(rt), regions=rt)
+        mem = memory.make_pool(1, rt)
+        m.populate(mem, rt)
+        memory.write_region(mem, rt, 0, "expert_ids",
+                            np.asarray([7, 0, 31, 12], dtype=np.int64))
+        p = [4]
+    else:
+        s = ops.NSASelect(n_scores=16, block_words=64)
+        rt = s.regions()
+        vop = verify(s.build(rt), grant=Grant.all_of(rt), regions=rt)
+        mem = memory.make_pool(1, rt)
+        s.populate(mem, rt)
+        p = [16, 40]
+    B = 5
+    res = vm.invoke_batched(vop, rt, mem, [list(p)] * B)
+    one = pyvm.run(vop, rt, mem.copy(), p)
+    assert np.all(res.ret == one.ret)
+    assert np.all(res.status == one.status)
+    assert np.all(res.steps == one.steps)
+    assert np.array_equal(res.mem, one.mem)
+
+
+# ---------------------------------------------------------------------------
+# Contention: deterministic winner ordering
+# ---------------------------------------------------------------------------
+
+def _cas_race_op(rt):
+    """Each request CASes latch 0 -> its token and returns the old value."""
+    b = OperatorBuilder("cas_race", n_params=1, regions=rt)
+    zero = b.const(0)
+    old = b.reg()
+    b.cas(old, "lock", zero, cmp=zero, swap=b.param(0))
+    b.ret(old)
+    return b.build()
+
+
+def test_contended_cas_deterministic_winner():
+    rt = memory.packed_table([("lock", 64)])
+    vop = verify(_cas_race_op(rt), grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(1, rt)
+    B = 8
+    params = [[100 + i] for i in range(B)]
+    res = vm.invoke_batched(vop, rt, mem, params)
+    # all B requests hit the CAS in the same macro-step: round-robin order
+    # serializes them, so request 0 wins and everyone else observes its
+    # token — deterministically
+    assert res.ret[0] == 0
+    assert np.all(res.ret[1:] == 100)
+    assert res.mem[0, rt["lock"].base] == 100
+    res2 = vm.invoke_batched(vop, rt, mem, params)
+    assert np.array_equal(res.mem, res2.mem)
+    assert np.array_equal(res.ret, res2.ret)
+
+
+def test_contended_dist_lock_deterministic():
+    d = ops.DistLock(max_retries=8)
+    rt = d.regions()
+    vop = verify(d.build(rt), grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(3, rt)
+    memory.write_region(mem, rt, 0, "lock", [0, 42])
+    B = 4
+    params = [[0, 1, 1000 + i, 1, 1, 2, 1] for i in range(B)]
+    res = vm.invoke_batched(vop, rt, mem, params)
+    res2 = vm.invoke_batched(vop, rt, mem, params)
+    assert np.array_equal(res.ret, res2.ret)
+    assert np.array_equal(res.mem, res2.mem)
+    winners = [i for i in range(B) if res.status[i] == isa.STATUS_OK]
+    assert winners, "someone must acquire the lock"
+    assert winners[0] == 0, "request 0 reaches the CAS first and must win"
+    assert res.ret[0] == 42                      # saw the initial state
+    # the lock state holds the last winner's value, replicated to 1 and 2
+    final = res.mem[0, rt["lock"].base + 1]
+    assert final == 1000 + winners[-1]
+    assert res.mem[1, rt["lock"].base + 1] == final
+    assert res.mem[2, rt["lock"].base + 1] == final
+    # latch released by the last holder
+    assert res.mem[0, rt["lock"].base] == 0
+
+
+# ---------------------------------------------------------------------------
+# Trace-compiled fast path vs interpreter — every compilable seed operator
+# ---------------------------------------------------------------------------
+
+def _compiled_check(name, vop, rt, mem, params, home=0, failed=None):
+    r1 = pyvm.run(vop, rt, mem.copy(), params, home=home,
+                  failed=failed or set())
+    rc = tc.invoke_compiled(vop, rt, mem.copy(), [list(params)], homes=home,
+                            failed=failed)
+    assert rc.ret[0] == r1.ret, name
+    assert rc.status[0] == r1.status, name
+    assert rc.steps[0] == r1.steps, name
+    assert np.array_equal(rc.regs[0], np.array(r1.regs)), name
+    assert np.array_equal(rc.mem, r1.mem), name
+
+
+def test_compiled_equals_pyvm_graph_walk():
+    w = ops.GraphWalk(n_nodes=128, max_depth=32)
+    rt = w.regions()
+    vop = verify(w.build(rt), grant=Grant.all_of(rt), regions=rt)
+    assert tc.compilable(vop)
+    mem = memory.make_pool(1, rt)
+    order = w.populate(mem, rt)
+    for depth in (0, 1, 7, 31):
+        _compiled_check("graph", vop, rt, mem, [int(order[5]) * 8, depth])
+
+
+def test_compiled_equals_pyvm_ptw3():
+    p = ops.PageTableWalk(fanout=16, n_pages=32)
+    rt = p.regions()
+    vop = verify(p.build(rt), grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(1, rt)
+    vamap = p.populate(mem, rt)
+    for va, _ in list(vamap.items())[:3]:
+        _compiled_check("ptw3", vop, rt, mem, [va])
+
+
+def test_compiled_equals_pyvm_dist_lock():
+    d = ops.DistLock()
+    rt = d.regions()
+    vop = verify(d.build(rt), grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(3, rt)
+    memory.write_region(mem, rt, 0, "lock", [0, 42])
+    params = [0, 1, 777, 1, 1, 2, 1]
+    _compiled_check("lock free", vop, rt, mem, params)
+    held = mem.copy()
+    held[0, rt["lock"].base] = 1
+    _compiled_check("lock held", vop, rt, held, params)
+    _compiled_check("lock failed-replica", vop, rt, mem, params, failed={2})
+
+
+@pytest.mark.parametrize("block_bytes", [4096, 65536])
+def test_compiled_equals_pyvm_kv_fetch(block_bytes):
+    k = ops.PagedKVFetch(n_blocks_pool=16, block_bytes=block_bytes,
+                         max_req_blocks=4)
+    rt = k.regions()
+    vop = verify(k.build(rt), grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(1, rt)
+    k.populate(mem, rt)
+    k.make_request(mem, rt, [3, 9, 1])
+    _compiled_check("kv", vop, rt, mem, [3])
+
+
+def test_compiled_equals_pyvm_moe_and_superop():
+    m = ops.MoEExpertGather(n_experts=32, max_k=8)
+    rt = m.regions()
+    vop = verify(m.build(rt), grant=Grant.all_of(rt), regions=rt)
+    assert len(tc.find_gather_chains(vop)) == 1    # the fused superop
+    mem = memory.make_pool(1, rt)
+    m.populate(mem, rt)
+    memory.write_region(mem, rt, 0, "expert_ids",
+                        np.asarray([7, 0, 31, 12], dtype=np.int64))
+    _compiled_check("moe", vop, rt, mem, [4])
+    # with the fused superoperator disabled the generic unroll must agree
+    r1 = pyvm.run(vop, rt, mem.copy(), [4])
+    rg = tc.invoke_compiled(vop, rt, mem.copy(), [[4]], superops=False)
+    assert rg.ret[0] == r1.ret and np.array_equal(rg.mem, r1.mem)
+
+
+def test_compiled_equals_pyvm_nsa():
+    s = ops.NSASelect(n_scores=16, block_words=64)
+    rt = s.regions()
+    vop = verify(s.build(rt), grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(1, rt)
+    s.populate(mem, rt)
+    for thr in (0, 40, 101):
+        _compiled_check("nsa", vop, rt, mem, [16, thr])
+
+
+def test_compiled_batched_matches_batched_interpreter():
+    w = ops.GraphWalk(n_nodes=128, max_depth=16, reply_words=16 * 8)
+    rt = w.regions()
+    vop = verify(w.build(rt, reply_param=True), grant=Grant.all_of(rt),
+                 regions=rt)
+    mem = memory.make_pool(1, rt)
+    order = w.populate(mem, rt)
+    B = 16
+    params = [[int(order[i]) * 8, i % 16, i * ops.NODE_WORDS]
+              for i in range(B)]
+    ri = vm.invoke_batched(vop, rt, mem, params)
+    rc = tc.invoke_compiled(vop, rt, mem.copy(), params)
+    assert np.array_equal(ri.ret, rc.ret)
+    assert np.array_equal(ri.status, rc.status)
+    assert np.array_equal(ri.steps, rc.steps)
+    assert np.array_equal(ri.mem, rc.mem)
+
+
+def test_compiled_gather_kernel_route_matches():
+    """The tiara_gather Pallas route (interpret mode) == the XLA lowering."""
+    m = ops.MoEExpertGather(n_experts=32, max_k=8)
+    rt = m.regions()
+    vop = verify(m.build(rt), grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(1, rt)
+    m.populate(mem, rt)
+    memory.write_region(mem, rt, 0, "expert_ids",
+                        np.asarray([5, 2, 9], dtype=np.int64))
+    rx = tc.invoke_compiled(vop, rt, mem.copy(), [[3]], impl="xla")
+    rk = tc.invoke_compiled(vop, rt, mem.copy(), [[3]],
+                            impl="kernel_interpret")
+    assert np.array_equal(rx.mem, rk.mem)
+    assert np.array_equal(rx.ret, rk.ret)
+
+
+# ---------------------------------------------------------------------------
+# Registry dispatch
+# ---------------------------------------------------------------------------
+
+def test_registry_slot_entry_points():
+    w = ops.GraphWalk(n_nodes=64, max_depth=8, reply_words=8 * 8)
+    rt = w.regions()
+    reg = OperatorRegistry(rt)
+    reg.add_tenant(Grant.all_of(rt, "alice"))
+    op_id = reg.register("alice", w.build(rt, reply_param=True))
+    slot = reg[op_id]
+    assert slot.compilable and slot.compile_reason is None
+    mem = memory.make_pool(1, rt)
+    order = w.populate(mem, rt)
+    params = [[int(order[i]) * 8, 3, i * ops.NODE_WORDS] for i in range(4)]
+    r_int = reg.invoke_batched(op_id, mem, params, mode="batched")
+    r_cmp = reg.invoke_batched(op_id, mem, params, mode="compiled")
+    r_auto = reg.invoke_batched(op_id, mem, params, mode="auto")
+    for r in (r_cmp, r_auto):
+        assert np.array_equal(r_int.ret, r.ret)
+        assert np.array_equal(r_int.mem, r.mem)
+    # single-request modes agree too
+    r1 = reg.invoke(op_id, mem, params[0], mode="interp")
+    r2 = reg.invoke(op_id, mem, params[0], mode="compiled")
+    assert (r1.ret, r1.status, r1.steps) == (r2.ret, r2.status, r2.steps)
+    assert np.array_equal(r1.mem, r2.mem)
+    assert "compiled" in reg.dump()
+
+
+def test_registry_interp_fallback_for_uncompilable():
+    """An operator over the unroll budget keeps the interpreter path."""
+    rt = memory.packed_table([("data", 1024)])
+    b = OperatorBuilder("big_loop", n_params=1, regions=rt)
+    i = b.const(0)
+    v = b.reg()
+    with b.loop(8000):                    # step bound >> unroll limit
+        b.load(v, "data", i)
+        b.add(i, i, 1)
+    b.ret(v)
+    reg = OperatorRegistry(rt, max_steps=1 << 20)
+    reg.add_tenant(Grant.all_of(rt, "t"))
+    op_id = reg.register("t", b.build())
+    slot = reg[op_id]
+    assert not slot.compilable and "unroll" in slot.compile_reason
+    mem = memory.make_pool(1, rt)
+    mem[0, :1024] = np.arange(1024)
+    res = reg.invoke_batched(op_id, mem, [[0], [0]], mode="auto")
+    assert np.all(res.status == isa.STATUS_OK)
+    with pytest.raises(Exception):
+        slot.compiled(mem, [[0]])
