@@ -8,6 +8,7 @@ auditable from the CSV alone.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional, Sequence, Set
 
 import numpy as np
@@ -37,6 +38,23 @@ class Row:
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.4g},{self.derived:.4g}"
+
+
+def rate(fn, per_call_ops: int, min_seconds: float = 0.3) -> tuple:
+    """(us_per_call, ops_per_s) for ``fn`` with a warmup call (jit
+    compile) and an adaptive repeat count targeting ``min_seconds`` of
+    steady-state measurement — the one timing protocol every wall-clock
+    benchmark shares."""
+    fn()                                    # warmup: jit compile
+    t0 = time.perf_counter()
+    fn()
+    dt = time.perf_counter() - t0
+    reps = max(1, int(min_seconds / max(dt, 1e-6)))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    dt = (time.perf_counter() - t0) / reps
+    return dt * 1e6, per_call_ops / dt
 
 
 def run_traced(workload, build_fn, params: Sequence[int], *,

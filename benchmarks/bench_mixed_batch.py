@@ -1,0 +1,187 @@
+"""Multi-tenant mixed-op batching: one launch for an interleaved serving mix.
+
+The paper's NIC multiplexes *many tenants'* pre-registered operators
+through the 256-entry dispatch table at line rate.  The software analogue:
+a serving wave that interleaves GraphWalk, PageTableWalk, PagedAttention
+KV fetch and MoE expert gather requests (round-robin by tenant — the worst
+case for launch batching, every adjacent pair differs in op_id).  Engines
+compared at each batch size:
+
+  * ``serial``     the no-mixed-batching baseline: one ``invoke_batched``
+                   launch per contiguous same-op run in arrival order.  A
+                   fully interleaved wave degenerates to one XLA launch
+                   per request — this is what "one operator per launch"
+                   costs a realistic mix.
+  * ``mixed``      one lockstep launch over the merged instruction store;
+                   each request enters at its op's ``start_pc`` from the
+                   dispatch table.
+  * ``segmented``  stable-sort by op_id + one compiled straight-line
+                   launch per segment, outputs scattered back to arrival
+                   order.
+  * ``auto``       whatever the analytical cost model picks.
+
+Every engine's results are checked bit-identical against the per-request
+``pyvm`` oracle before timing (``parity_ok`` in the JSON).  Wall-clock
+ops/s and the speedup over ``serial`` are written to
+``BENCH_mixed_batch.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+import numpy as np
+
+from repro.core import memory, pyvm
+from repro.core import operators as ops
+from repro.core.memory import Grant, merge_tables
+from repro.core.registry import OperatorRegistry
+
+from benchmarks._workbench import Row, rate as _rate
+
+JSON_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_mixed_batch.json")
+BATCHES = (64, 256, 1024)
+QUICK_BATCHES = (16, 64)
+GRAPH_DEPTH = 10
+MIN_SECONDS = 0.25
+ENGINES = ("serial", "mixed", "segmented", "auto")
+
+
+def _setup(max_batch: int):
+    """One registry, four tenants, one shared pool.  Every workload gets
+    per-request disjoint reply slots (``reply_param``) — the serving
+    configuration, and what lets the whole wave run conflict-free."""
+    n_slots = max(max_batch // 4 + 1, 64)
+    gw = ops.GraphWalk(n_nodes=1024, max_depth=16,
+                       reply_words=n_slots * ops.NODE_WORDS)
+    ptw = ops.PageTableWalk(fanout=16, n_pages=32, reply_pages=n_slots)
+    kv = ops.PagedKVFetch(n_blocks_pool=64, block_bytes=2048,
+                          max_req_blocks=4, reply_slots=n_slots)
+    moe = ops.MoEExpertGather(n_experts=64, max_k=4, slab_words=256,
+                              reply_slots=n_slots)
+    combined, views = merge_tables([
+        ("gw", gw.regions()), ("ptw", ptw.regions()),
+        ("kv", kv.regions()), ("moe", moe.regions())])
+    reg = OperatorRegistry(combined)
+    for tenant in views:
+        reg.add_tenant(Grant.all_of(views[tenant], tenant))
+    op_ids = {
+        "gw": reg.register("gw", gw.build(views["gw"], reply_param=True)),
+        "ptw": reg.register("ptw",
+                            ptw.build(views["ptw"], reply_param=True)),
+        "kv": reg.register("kv", kv.build(views["kv"],
+                                          reply_param=True)),
+        "moe": reg.register("moe", moe.build(views["moe"],
+                                             reply_param=True)),
+    }
+    mem = memory.make_pool(1, combined)
+    order = gw.populate(mem, views["gw"])
+    vamap = ptw.populate(mem, views["ptw"])
+    kv.populate(mem, views["kv"])
+    kv.make_request(mem, views["kv"], [3, 9, 1])
+    moe.populate(mem, views["moe"])
+    memory.write_region(mem, views["moe"], 0, "expert_ids",
+                        np.asarray([7, 0, 31, 12], dtype=np.int64))
+    vas = sorted(vamap.keys())
+    return reg, mem, op_ids, order, vas
+
+
+def _mix(op_ids: dict, order, vas, batch: int):
+    """Round-robin 4-tenant interleaving: the worst case for per-op
+    launch batching (every adjacent pair differs in op_id)."""
+    tenants = ("gw", "ptw", "kv", "moe")
+    ids, params = [], []
+    slot = {t: 0 for t in tenants}
+    for i in range(batch):
+        t = tenants[i % 4]
+        ids.append(op_ids[t])
+        j = slot[t]
+        slot[t] += 1
+        if t == "gw":
+            params.append([int(order[i % len(order)]) * 8,
+                           GRAPH_DEPTH, j * ops.NODE_WORDS])
+        elif t == "ptw":
+            params.append([int(vas[i % len(vas)]), j * ops.PAGE_WORDS])
+        elif t == "kv":
+            # varied block counts, disjoint reply slots per request
+            params.append([1 + i % 3, j * 4 * 256])
+        else:
+            params.append([1 + i % 4, j * 4 * 256])
+    return ids, params
+
+
+def _oracle(reg, mem, ids, params):
+    vops = reg.store_ops()
+    seq = mem.copy()
+    rets, stats, steps = [], [], []
+    for op_id, p in zip(ids, params):
+        r = pyvm.run(vops[op_id], reg.regions, seq, p)
+        rets.append(r.ret)
+        stats.append(r.status)
+        steps.append(r.steps)
+    return seq, np.array(rets), np.array(stats), np.array(steps)
+
+
+def _parity(res, oracle) -> bool:
+    seq, rets, stats, steps = oracle
+    return (np.array_equal(res.mem, seq) and np.array_equal(res.ret, rets)
+            and np.array_equal(res.status, stats)
+            and np.array_equal(res.steps, steps))
+
+
+def measure(quick: bool = False) -> List[dict]:
+    batches = QUICK_BATCHES if quick else BATCHES
+    min_seconds = 0.05 if quick else MIN_SECONDS
+    reg, mem, op_ids, order, vas = _setup(max(batches))
+    out: List[dict] = []
+    for b in batches:
+        ids, params = _mix(op_ids, order, vas, b)
+        oracle = _oracle(reg, mem, ids, params)
+        rates = {}
+        for engine in ENGINES:
+            res = reg.invoke_mixed(ids, mem, params, mode=engine)
+            parity = _parity(res, oracle)
+
+            def call(engine=engine):
+                reg.invoke_mixed(ids, mem, params, mode=engine)
+
+            us, rate = _rate(call, b, min_seconds)
+            rates[engine] = rate
+            out.append(dict(engine=engine, batch=b, us_per_call=us,
+                            ops_per_s=rate, parity_ok=bool(parity)))
+        for r in out:
+            if r["batch"] == b:
+                r["speedup_vs_serial"] = r["ops_per_s"] / rates["serial"]
+    return out
+
+
+def rows(quick: bool = False) -> List[Row]:
+    data = measure(quick=quick)
+    payload = dict(
+        workload="4-tenant interleaved mix: graph_walk + ptw3 + "
+                 "paged_kv_fetch + moe_expert_gather (round-robin)",
+        unit="ops/s",
+        acceptance="mixed-op engine at max batch >= 5x serial ops/s, "
+                   "all engines bit-identical to the pyvm oracle",
+        results=data)
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+    out = []
+    for r in data:
+        flag = "" if r["parity_ok"] else "  PARITY-MISMATCH"
+        out.append(Row(
+            name=f"mixed_batch/{r['engine']}/B={r['batch']}",
+            us_per_call=r["us_per_call"],
+            derived=r["ops_per_s"] / 1e6, unit="Mops",
+            note=f"x{r['speedup_vs_serial']:.1f} vs serial{flag}"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r.csv())
+    print(f"wrote {JSON_PATH}")

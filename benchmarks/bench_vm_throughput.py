@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 from typing import List
 
 import numpy as np
@@ -30,13 +29,14 @@ from repro.core import operators as ops
 from repro.core.memory import Grant
 from repro.core.verifier import verify
 
-from benchmarks._workbench import Row
+from benchmarks._workbench import Row, rate as _wb_rate
 
 # anchored to the repo root regardless of the invoking cwd
 JSON_PATH = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "BENCH_vm_throughput.json")
 BATCHES = (1, 64, 1024)
+QUICK_BATCHES = (1, 32)
 DEPTH = 10                    # the paper's 10-hop traversal
 MAX_DEPTH = 16
 N_NODES = 4096
@@ -60,21 +60,12 @@ def _params(order, batch: int):
 
 
 def _rate(fn, per_call_ops: int) -> tuple:
-    """(us_per_call, ops_per_s) with warmup + adaptive repeat count."""
-    fn()                                    # warmup: jit compile
-    t0 = time.perf_counter()
-    fn()
-    dt = time.perf_counter() - t0
-    reps = max(1, int(MIN_SECONDS / max(dt, 1e-6)))
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        fn()
-    dt = (time.perf_counter() - t0) / reps
-    return dt * 1e6, per_call_ops / dt
+    return _wb_rate(fn, per_call_ops, MIN_SECONDS)
 
 
-def measure() -> List[dict]:
-    w, rt, vop, mem, order = _setup(max(BATCHES))
+def measure(quick: bool = False) -> List[dict]:
+    batches = QUICK_BATCHES if quick else BATCHES
+    w, rt, vop, mem, order = _setup(max(batches))
     out: List[dict] = []
 
     # single-request interpreter: one launch per request
@@ -88,7 +79,7 @@ def measure() -> List[dict]:
     out.append(dict(engine="interp", batch=1, us_per_call=us, ops_per_s=rate,
                     speedup_vs_interp=1.0))
 
-    for b in BATCHES:
+    for b in batches:
         pb = _params(order, b)
 
         def batched():
@@ -98,7 +89,7 @@ def measure() -> List[dict]:
         out.append(dict(engine="batched", batch=b, us_per_call=us,
                         ops_per_s=rate, speedup_vs_interp=rate / base))
 
-    for b in BATCHES:
+    for b in batches:
         pb = _params(order, b)
 
         def compiled():
@@ -110,8 +101,8 @@ def measure() -> List[dict]:
     return out
 
 
-def rows() -> List[Row]:
-    data = measure()
+def rows(quick: bool = False) -> List[Row]:
+    data = measure(quick=quick)
     payload = dict(workload=f"graph_walk depth={DEPTH} n_nodes={N_NODES}",
                    unit="ops/s", results=data)
     with open(JSON_PATH, "w") as f:

@@ -11,13 +11,14 @@ Run:  PYTHONPATH=src python -m benchmarks.run [--only fig10] [--json out]
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import sys
 import time
 
-from benchmarks import (bench_graph, bench_lock, bench_moe, bench_offload,
-                        bench_paged_attention, bench_ptw, bench_table1,
-                        bench_vm_throughput)
+from benchmarks import (bench_graph, bench_lock, bench_mixed_batch,
+                        bench_moe, bench_offload, bench_paged_attention,
+                        bench_ptw, bench_table1, bench_vm_throughput)
 from benchmarks._workbench import fmt_table
 
 MODULES = [
@@ -31,6 +32,8 @@ MODULES = [
     ("sec4.5", "Section 4.5: MoE expert gather", bench_moe),
     ("vm_tput", "Engine throughput: interp vs batched vs compiled",
      bench_vm_throughput),
+    ("mixed", "Multi-tenant mixed-op batching vs per-op launches",
+     bench_mixed_batch),
 ]
 
 
@@ -39,6 +42,9 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="substring filter on module key")
     ap.add_argument("--json", default=None, help="dump rows as JSON")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke configuration: small batches, few "
+                         "reps, for modules that support it")
     args = ap.parse_args()
 
     all_rows = []
@@ -46,8 +52,11 @@ def main() -> None:
     for key, title, mod in MODULES:
         if args.only and args.only not in key:
             continue
+        kwargs = {}
+        if args.quick and "quick" in inspect.signature(mod.rows).parameters:
+            kwargs["quick"] = True
         t0 = time.time()
-        rows = mod.rows()
+        rows = mod.rows(**kwargs)
         dt = time.time() - t0
         all_rows.extend(rows)
         tables.append(fmt_table(rows, f"{title}  [{dt:.1f}s]"))

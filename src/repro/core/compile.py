@@ -45,7 +45,7 @@ the simulator's job), so the compiled path drops it.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Set, Union
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -161,6 +161,75 @@ def _alu_static(aop: int, a, b):
     if aop == Alu.MAX:
         return jnp.maximum(a, b)
     raise CompileError(f"bad ALU op {aop}")
+
+
+# ---------------------------------------------------------------------------
+# Mixed-batch planner
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One same-op_id run of the stable-sorted batch: requests at sorted
+    positions ``[start, end)`` all dispatch to ``op_id``."""
+
+    op_id: int
+    start: int
+    end: int
+
+    @property
+    def size(self) -> int:
+        return self.end - self.start
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedPlan:
+    """The compiled path's plan for a mixed-op batch.
+
+    A straight-line compiled trace executes one program, so a mixed batch
+    is *segmented*: requests are stable-sorted by op_id (preserving
+    arrival order within an op — the ordering atomics serialize by), each
+    contiguous segment runs through its own compiled trace against the
+    shared pool, and per-request outputs scatter back to arrival order
+    through ``inverse``.  Planning is pure bookkeeping — O(B log B) once
+    per wave — and is exactly the batching a NIC dispatcher would do when
+    filling per-MP task queues from a mixed arrival stream.
+    """
+
+    op_ids: np.ndarray            # i64 [B] arrival-order op ids
+    order: np.ndarray             # i64 [B]: sorted position -> arrival idx
+    inverse: np.ndarray           # i64 [B]: arrival idx -> sorted position
+    segments: Tuple[Segment, ...]
+
+    @property
+    def batch(self) -> int:
+        return int(self.op_ids.shape[0])
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
+
+    def segment_indices(self, seg: Segment) -> np.ndarray:
+        """Arrival indices of the requests in ``seg`` (arrival order)."""
+        return self.order[seg.start:seg.end]
+
+
+def plan_mixed_batch(op_ids) -> MixedPlan:
+    """Stable-sort a batch's op_ids and segment it into same-op runs."""
+    ids = np.asarray(list(op_ids), dtype=np.int64)
+    if ids.ndim != 1 or ids.size == 0:
+        raise ValueError("op_ids must be a non-empty 1-D sequence")
+    order = np.argsort(ids, kind="stable").astype(np.int64)
+    inverse = np.empty_like(order)
+    inverse[order] = np.arange(ids.size, dtype=np.int64)
+    sorted_ids = ids[order]
+    starts = np.flatnonzero(
+        np.concatenate([[True], sorted_ids[1:] != sorted_ids[:-1]]))
+    bounds = list(starts) + [ids.size]
+    segments = tuple(Segment(op_id=int(sorted_ids[s]), start=int(s),
+                             end=int(e))
+                     for s, e in zip(bounds[:-1], bounds[1:]))
+    return MixedPlan(op_ids=ids, order=order, inverse=inverse,
+                     segments=segments)
 
 
 # ---------------------------------------------------------------------------
@@ -591,6 +660,15 @@ def build_compiled(op: VerifiedOperator, regions: RegionTable,
 
 
 _COMPILED_CACHE: Dict = {}
+
+
+def compiled_cached(op: VerifiedOperator, regions: RegionTable,
+                    n_dev: int, batch: int, impl: str = "xla",
+                    superops: bool = True) -> bool:
+    """True iff the compiled trace for this (op, batch) is already
+    built (see :func:`vm.engine_cached`)."""
+    return _vm.engine_key(op, regions, n_dev, batch, impl,
+                          superops) in _COMPILED_CACHE
 
 
 def _cached_compiled(op: VerifiedOperator, regions: RegionTable, n_dev: int,

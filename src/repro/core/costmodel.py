@@ -14,6 +14,9 @@ with the anchor).  Benchmarks print derived vs. paper-claimed side by side.
 from __future__ import annotations
 
 import dataclasses
+from typing import Dict, Optional, Sequence
+
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -230,3 +233,244 @@ BF2_HOST_ACCESS_US = 1.7      # BlueField-2 internal RDMA hop [paper §2.2]
 BF3_DPA_HOST_ACCESS_US = 0.85  # BF-3 DPA datasheet [paper §2.2]
 TIARA_HOST_ACCESS_US = 0.75    # PCIe DMA [paper]
 BF2_CABLE_RTT_US = 1.9         # back-to-back DAC cable [paper §2.2]
+
+
+# =============================================================================
+# Adaptive dispatch: the software-engine cost model
+# =============================================================================
+#
+# The registry's ``mode="auto"`` has to pick an execution engine per call:
+# the scalar interpreter (one launch per request), the batch-parallel
+# lockstep interpreter (one launch per wave, exact under contention), the
+# trace-compiled straight-line path (fastest, needs a compilable CFG and
+# a conflict-free wave), or — for mixed-op waves — the one-launch mixed
+# engine vs. stable-sort-and-segment through the compiled traces.  The
+# analytical model below predicts wall-clock per call from batch size,
+# trace length, op-mix composition, and a contention-rate hint, using
+# per-engine launch/step constants calibrated against the measured
+# ``BENCH_vm_throughput.json`` sweep (10-hop GraphWalk at B=1/64/1024 on
+# the CPU backend; [calib] marks each anchor).  Absolute numbers are
+# host-dependent — what the decision needs is the *relative* shape:
+# launches amortize over B, the vectorized macro-step cost is affine in
+# B, and the compiled trace's per-lane cost is ~20x smaller than the
+# interpreter's.  ``EngineCost.measured()`` rescales the launch constant
+# to the running host.
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineCost:
+    """Per-engine launch/step cost constants (microseconds).
+
+    [calib] anchors: the BENCH_vm_throughput.json sweep measured at PR 1
+    (graph_walk depth=10, step bound ~38, B in {1, 64, 1024}): interp
+    B=1 ~2.5 ms/call, batched B=64/1024 ~18/~130 ms, compiled B=1/1024
+    ~1.2/~7 ms, fit to the affine forms below.  Individual runs drift
+    ±20% — the constants carry the *relative shape* (launches amortize
+    over B; compiled per-lane cost ~20x below the interpreter's), which
+    is all the argmin decisions consume.
+    """
+
+    launch_us: float = 1000.0      # one XLA dispatch from Python [calib]
+    interp_step_us: float = 40.0   # scalar switch interpreter, per step [calib]
+    vstep_us: float = 280.0        # vectorized macro-step, base [calib]
+    vlane_us: float = 3.2          # vectorized macro-step, per lane [calib]
+    cstep_us: float = 3.0          # compiled trace, per position [calib]
+    clane_us: float = 0.15         # compiled trace, per position-lane [calib]
+    serial_lane_us: float = 12.0   # contended macro-step scan, per lane
+    # Building an engine at a new (program, batch) shape is a full XLA
+    # compile — seconds, not microseconds [calib: jit of one engine ~2 s
+    # on the dev host].  A serving loop reuses each built shape across
+    # many waves, so the model charges the amortized share per call.
+    compile_us: float = 2_000_000.0
+    compile_amortization: int = 100  # expected same-shape waves per build
+
+    def _miss(self, cached: bool) -> float:
+        return 0.0 if cached else self.compile_us / max(
+            self.compile_amortization, 1)
+
+    # -- per-engine per-call predictions ---------------------------------
+
+    def batched_us(self, batch: int, steps: int,
+                   contention_rate: float = 0.0, *,
+                   cached: bool = True) -> float:
+        """One lockstep launch; contended macro-steps pay the serialized
+        scan instead of the vectorized step."""
+        if batch <= 1:
+            # B=1 skips the conflict machinery: the scalar datapath
+            return self._miss(cached) + self.launch_us \
+                + steps * self.interp_step_us
+        contended = min(max(contention_rate, 0.0), 1.0) * steps
+        clean = steps - contended
+        return (self._miss(cached) + self.launch_us
+                + clean * (self.vstep_us + batch * self.vlane_us)
+                + contended * (self.vstep_us
+                               + batch * self.serial_lane_us))
+
+    def compiled_us(self, batch: int, trace_len: int, *,
+                    cached: bool = True) -> float:
+        """One straight-line launch over the unrolled trace."""
+        return self._miss(cached) + self.launch_us \
+            + trace_len * (self.cstep_us + batch * self.clane_us)
+
+    @classmethod
+    def measured(cls, reps: int = 20) -> "EngineCost":
+        """Measure this host's actual XLA dispatch overhead and replace
+        only ``launch_us`` with it.  The launch-vs-step tradeoff is what
+        the dispatch decisions hinge on (a slow-dispatch host should
+        batch harder and segment less), so only that constant adapts;
+        the step constants keep their calibrated values."""
+        import time
+
+        import jax
+        import jax.numpy as jnp
+
+        f = jax.jit(lambda x: x + 1)
+        x = jnp.zeros(())
+        f(x).block_until_ready()               # warm the cache
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            f(x).block_until_ready()
+        launch = (time.perf_counter() - t0) / reps * 1e6
+        return dataclasses.replace(cls(), launch_us=max(launch, 1.0))
+
+
+def _entropy_bits(counts) -> float:
+    p = np.asarray(counts, dtype=float)
+    p = p / p.sum()
+    return float(-(p * np.log2(p)).sum())
+
+
+def op_mix_entropy(op_ids) -> float:
+    """Shannon entropy (bits) of a wave's op_id mix: 0 for a single-op
+    wave, log2(k) for k ops uniformly interleaved."""
+    _, counts = np.unique(np.asarray(list(op_ids)), return_counts=True)
+    return _entropy_bits(counts)
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentStats:
+    """What the cost model needs to know about one planned segment."""
+
+    size: int
+    step_bound: int
+    compilable: bool
+    batched_cached: bool = True    # lockstep engine built at this size?
+    compiled_cached: bool = True   # compiled trace built at this size?
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchDecision:
+    """An auditable mode choice: the pick plus every candidate's
+    predicted per-call cost."""
+
+    mode: str
+    costs: Dict[str, float]
+    entropy_bits: float = 0.0
+    contention_rate: float = 0.0
+
+    def __post_init__(self):
+        if self.mode not in self.costs:
+            raise ValueError(
+                f"decision mode {self.mode!r} has no cost entry "
+                f"(candidates: {sorted(self.costs)})")
+
+
+class DispatchCostModel:
+    """Analytical engine picker for the registry's ``mode="auto"``.
+
+    Decisions are pure functions of (batch size, per-op trace lengths,
+    op-mix composition, contention-rate hint) — deterministic and cheap
+    enough to run per call.  A non-zero ``contention_rate`` excludes the
+    compiled path: the straight-line trace assumes no request reads a
+    word another request writes at the same trace position, while the
+    batched interpreter detects conflicts per step and serializes
+    exactly, so contended waves must stay on it.
+    """
+
+    def __init__(self, cost: Optional[EngineCost] = None):
+        self.cost = cost or EngineCost()
+
+    # -- single-op waves --------------------------------------------------
+
+    def choose_batched(self, *, batch: int, step_bound: int,
+                       compilable: bool,
+                       contention_rate: float = 0.0,
+                       batched_cached: bool = True,
+                       compiled_cached: bool = True) -> DispatchDecision:
+        """Pick the engine for a single-op wave: "batched" (the lockstep
+        interpreter; at B=1 this *is* the classic scalar MP datapath) or
+        "compiled" (the straight-line trace).  ``*_cached`` flags charge
+        the amortized XLA-compile cost for engines not yet built at this
+        batch size."""
+        costs = {"batched": self.cost.batched_us(batch, step_bound,
+                                                 contention_rate,
+                                                 cached=batched_cached)}
+        if compilable and contention_rate <= 0.0:
+            costs["compiled"] = self.cost.compiled_us(
+                batch, step_bound, cached=compiled_cached)
+        mode = min(costs, key=costs.get)
+        return DispatchDecision(mode=mode, costs=costs,
+                                contention_rate=contention_rate)
+
+    # -- mixed-op waves ---------------------------------------------------
+
+    def segmented_us(self, segments: Sequence[SegmentStats],
+                     contention_rate: float = 0.0) -> float:
+        """Stable-sort-and-segment: each same-op segment pays its own
+        launch (and possibly its own engine compile) on its best
+        engine."""
+        total = 0.0
+        for s in segments:
+            best = self.cost.batched_us(s.size, s.step_bound,
+                                        contention_rate,
+                                        cached=s.batched_cached)
+            if s.compilable and contention_rate <= 0.0:
+                best = min(best,
+                           self.cost.compiled_us(
+                               s.size, s.step_bound,
+                               cached=s.compiled_cached))
+            total += best
+        return total
+
+    def mixed_us(self, segments: Sequence[SegmentStats],
+                 contention_rate: float = 0.0, *,
+                 cached: bool = True) -> float:
+        """One mixed lockstep launch: the whole wave advances together,
+        so the macro-step count is the *largest* step bound in the mix."""
+        batch = sum(s.size for s in segments)
+        steps = max(s.step_bound for s in segments)
+        return self.cost.batched_us(batch, steps, contention_rate,
+                                    cached=cached)
+
+    def choose_mixed(self, *, segments: Sequence[SegmentStats],
+                     contention_rate: float = 0.0,
+                     mixed_cached: bool = True) -> DispatchDecision:
+        """Pick the engine for a mixed-op wave: "mixed" (one lockstep
+        launch over the merged instruction store) vs "segmented"
+        (stable-sort, one compiled/batched launch per same-op segment).
+
+        The op-mix entropy enters through the plan shape: a
+        low-entropy wave has a few big segments (launches amortize —
+        segmentation wins when traces compile), a high-entropy wave
+        shatters into many small segments whose per-segment launches
+        dominate (the one-launch mixed engine wins).
+
+        A contended wave (``contention_rate > 0``) is pinned to "mixed":
+        segmentation reorders requests across ops (all of segment A
+        before any of segment B), which only matches the reference
+        round-robin interleaving when cross-segment footprints are
+        disjoint — exactly what the contention hint denies.  This
+        mirrors :meth:`choose_batched` excluding the compiled trace.
+        """
+        if not segments:
+            raise ValueError("mixed wave needs at least one segment")
+        entropy = _entropy_bits([s.size for s in segments])
+        costs = {"mixed": self.mixed_us(segments, contention_rate,
+                                        cached=mixed_cached)}
+        if contention_rate <= 0.0:
+            costs["segmented"] = self.segmented_us(segments,
+                                                   contention_rate)
+        mode = min(costs, key=costs.get)
+        return DispatchDecision(mode=mode, costs=costs,
+                                entropy_bits=entropy,
+                                contention_rate=contention_rate)

@@ -153,6 +153,89 @@ class Grant:
         return Grant.of(tenant, rids, wids)
 
 
+class RegionView:
+    """A tenant-namespaced view of a shared :class:`RegionTable`.
+
+    In a multi-tenant deployment every tenant's regions live in the *one*
+    host pool behind the NIC, but each tenant programs against its own
+    region names.  A view resolves name ``n`` to ``prefix + n`` in the
+    backing table, so a stock workload builder (which hardcodes names like
+    ``"reply"``) can target its slice of a combined table unmodified.
+    Region ids stay global — programs built through a view carry the
+    combined table's rids, which is exactly what the verifier checks a
+    tenant grant against.  Iteration yields only the tenant's regions, so
+    ``Grant.all_of(view)`` is the tenant's capability, not the pool's.
+    """
+
+    def __init__(self, table: RegionTable, prefix: str = ""):
+        self._table = table
+        self.prefix = prefix
+
+    @property
+    def table(self) -> RegionTable:
+        return self._table
+
+    @property
+    def pool_words(self) -> int:
+        return self._table.pool_words
+
+    def rid(self, name: str) -> int:
+        return self._table.rid(self.prefix + name)
+
+    def __getitem__(self, key) -> Region:
+        if isinstance(key, str):
+            return self._table[self.prefix + key]
+        return self._table[key]
+
+    def __iter__(self):
+        return (r for r in self._table if r.name.startswith(self.prefix))
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self)
+
+    def names(self) -> List[str]:
+        return [r.name for r in self]
+
+    def as_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The *backing table's* arrays: rids in programs built through a
+        view are global, so engines must see the full table."""
+        return self._table.as_arrays()
+
+
+def merge_tables(named: Sequence[Tuple[str, RegionTable]], *,
+                 sep: str = "/") -> Tuple[RegionTable, Dict[str, RegionView]]:
+    """Pack several per-tenant region layouts into one shared pool.
+
+    ``named`` is ``[(tenant, table), ...]``; each tenant's regions are
+    re-registered as ``tenant/sep/name`` in one combined table (packed, in
+    order).  Returns the combined table plus per-tenant views — the setup
+    a multi-tenant registry wants: register operators built against the
+    views, grant each tenant ``Grant.all_of(view)``, and run every
+    tenant's requests against one ``make_pool(n, combined)``.
+
+    Tenant names must be unique and must not contain ``sep``: the view
+    prefix is the isolation boundary, so a name like ``"a/b"`` next to
+    tenant ``"a"`` would leak ``a/b``'s regions into ``a``'s grant.
+    """
+    seen = set()
+    for tenant, _ in named:
+        if sep in tenant:
+            raise ValueError(
+                f"tenant name {tenant!r} must not contain {sep!r} "
+                f"(it would collide with another tenant's namespace)")
+        if tenant in seen:
+            raise ValueError(f"duplicate tenant name {tenant!r}")
+        seen.add(tenant)
+    specs: List[Tuple[str, int]] = []
+    for tenant, table in named:
+        for r in table:
+            specs.append((f"{tenant}{sep}{r.name}", r.size))
+    combined = packed_table(specs)
+    views = {tenant: RegionView(combined, f"{tenant}{sep}")
+             for tenant, _ in named}
+    return combined, views
+
+
 def next_pow2(x: int) -> int:
     return 1 << max(int(x) - 1, 0).bit_length()
 

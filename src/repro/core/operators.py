@@ -269,6 +269,7 @@ class PagedKVFetch:
     n_blocks_pool: int = 512
     block_bytes: int = 8192
     max_req_blocks: int = 64
+    reply_slots: int = 1       # widen for batched serving (slot/request)
 
     @property
     def block_words(self) -> int:
@@ -279,22 +280,28 @@ class PagedKVFetch:
             ("req", max(self.max_req_blocks, 64)),
             ("blocktable", max(self.n_blocks_pool, 64)),
             ("kvpool", self.n_blocks_pool * self.block_words),
-            ("reply", self.max_req_blocks * self.block_words),
+            ("reply",
+             self.max_req_blocks * self.block_words * self.reply_slots),
         ])
 
-    def build(self, rt: RegionTable, *, remote_reply: bool = False) -> TiaraProgram:
+    def build(self, rt: RegionTable, *, remote_reply: bool = False,
+              reply_param: bool = False) -> TiaraProgram:
         """params: r0 = n_blocks (dynamic, capped); with ``remote_reply``,
         r1 = the requester's device id and every KV block streams straight
         to the caller's reply region (an RDMA write per block) — no local
-        staging copy, the deployment configuration of paper §4.6."""
-        b = OperatorBuilder("paged_kv_fetch", n_params=2 if remote_reply else 1,
+        staging copy, the deployment configuration of paper §4.6.  With
+        ``reply_param``, the next param is the reply word offset so
+        batched requests stream into disjoint reply slots."""
+        n_params = 1 + int(remote_reply) + int(reply_param)
+        b = OperatorBuilder("paged_kv_fetch", n_params=n_params,
                             regions=rt)
         n = b.param(0)
         client = b.param(1) if remote_reply else None
         i = b.const(0)
         bid = b.reg()
         paddr = b.reg()
-        dst = b.const(0)
+        dst = b.mov(b.reg(), b.param(n_params - 1)) if reply_param \
+            else b.const(0)
         with b.loop((n, self.max_req_blocks)):
             b.load(bid, "req", i)                      # logical block id
             b.load(paddr, "blocktable", bid)           # chained: id -> phys
@@ -355,36 +362,44 @@ class MoEExpertGather:
 
     n_experts: int = 256
     max_k: int = 64
+    slab_words: int = MOE_SLAB_WORDS   # 8 KB slabs by default
+    reply_slots: int = 1       # widen for batched serving (slot/request)
 
     def regions(self) -> RegionTable:
         return memory.packed_table([
             ("expert_ids", max(self.max_k, 64)),
             ("expert_table", max(self.n_experts, 64)),
-            ("weights", self.n_experts * MOE_SLAB_WORDS),
-            ("reply", self.max_k * MOE_SLAB_WORDS),
+            ("weights", self.n_experts * self.slab_words),
+            ("reply", self.max_k * self.slab_words * self.reply_slots),
         ])
 
-    def build(self, rt: RegionTable, *, remote_reply: bool = False) -> TiaraProgram:
+    def build(self, rt: RegionTable, *, remote_reply: bool = False,
+              reply_param: bool = False) -> TiaraProgram:
         """params: r0 = k (dynamic, capped); with ``remote_reply``, r1 = the
-        requester's device and slabs stream straight to the caller."""
+        requester's device and slabs stream straight to the caller.  With
+        ``reply_param``, the next param is the reply word offset (disjoint
+        slots for batched serving)."""
+        n_params = 1 + int(remote_reply) + int(reply_param)
         b = OperatorBuilder("moe_expert_gather",
-                            n_params=2 if remote_reply else 1, regions=rt)
+                            n_params=n_params, regions=rt)
         k = b.param(0)
         client = b.param(1) if remote_reply else None
         i = b.const(0)
-        eid, paddr, dst = b.reg(), b.reg(), b.const(0)
+        eid, paddr = b.reg(), b.reg()
+        dst = b.mov(b.reg(), b.param(n_params - 1)) if reply_param \
+            else b.const(0)
         with b.loop((k, self.max_k)):
             b.load(eid, "expert_ids", i)
             b.load(paddr, "expert_table", eid)          # paged translation
             if remote_reply:
                 b.memcpy(dst_region="reply", dst_off=dst, dst_dev=client,
                          src_region="weights", src_off=paddr,
-                         n_words=MOE_SLAB_WORDS, is_async=True)
+                         n_words=self.slab_words, is_async=True)
             else:
                 b.memcpy(dst_region="reply", dst_off=dst,
                          src_region="weights", src_off=paddr,
-                         n_words=MOE_SLAB_WORDS, is_async=True)
-            b.add(dst, dst, MOE_SLAB_WORDS)
+                         n_words=self.slab_words, is_async=True)
+            b.add(dst, dst, self.slab_words)
             b.add(i, i, 1)
         b.wait(0)
         b.ret(k)
@@ -393,10 +408,10 @@ class MoEExpertGather:
     def populate(self, mem: np.ndarray, rt: RegionTable, *, device: int = 0,
                  seed: int = 0) -> np.ndarray:
         rng = np.random.default_rng(seed)
-        table = rng.permutation(self.n_experts) * MOE_SLAB_WORDS
+        table = rng.permutation(self.n_experts) * self.slab_words
         memory.write_region(mem, rt, device, "expert_table",
                             table.astype(np.int64))
-        w = rng.integers(0, 1 << 40, size=self.n_experts * MOE_SLAB_WORDS)
+        w = rng.integers(0, 1 << 40, size=self.n_experts * self.slab_words)
         memory.write_region(mem, rt, device, "weights", w.astype(np.int64))
         return table.astype(np.int64)
 

@@ -10,8 +10,16 @@ records whether the operator's CFG admits the interpreter-free fast path
 
 ``invoke()`` is the single-request data path — O(1) dispatch, no checks.
 ``invoke_batched()`` is the line-rate path: B requests share one XLA
-launch, dispatched to the trace-compiled superoperator when the slot has
-one and to the batch-parallel interpreter otherwise.
+launch.  ``invoke_mixed()`` is the *multi-tenant* line-rate path: a wave
+whose requests carry per-request op_ids runs either through the mixed
+lockstep engine (one launch over the merged instruction store, each
+request entering at its slot's ``start_pc`` — the hardware dispatch
+table in software) or stable-sorted into same-op segments through the
+compiled traces, with per-request outputs scattered back to arrival
+order.  All ``mode="auto"`` choices go through the analytical
+:class:`~repro.core.costmodel.DispatchCostModel` — engine choice is a
+function of batch size, trace length, op-mix entropy, and the caller's
+contention-rate hint, not a hardcoded preference.
 
 The instruction stores are per-MP BRAMs of 1024 entries; we model one
 shared store and enforce the aggregate capacity.
@@ -20,15 +28,21 @@ shared store and enforce the aggregate capacity.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Set, Union
+from typing import Dict, List, Optional, Sequence, Set, Union
 
 import numpy as np
 
 from repro.core import compile as tcompile
 from repro.core import isa, vm
+from repro.core.costmodel import (DispatchCostModel, DispatchDecision,
+                                  SegmentStats)
 from repro.core.memory import Grant, RegionTable
 from repro.core.program import TiaraProgram
 from repro.core.verifier import VerifiedOperator, verify
+
+_SINGLE_MODES = ("auto", "interp", "compiled")
+_BATCHED_MODES = ("auto", "batched", "compiled")
+_MIXED_MODES = ("auto", "mixed", "segmented", "serial")
 
 
 class RegistrationError(Exception):
@@ -85,10 +99,13 @@ class Slot:
 
 class OperatorRegistry:
     def __init__(self, regions: RegionTable, *, n_devices: int = 1,
-                 max_steps: Optional[int] = None):
+                 max_steps: Optional[int] = None,
+                 cost_model: Optional[DispatchCostModel] = None):
         self.regions = regions
         self.n_devices = int(n_devices)
         self.max_steps = max_steps
+        self.cost_model = cost_model or DispatchCostModel()
+        self.last_decision: Optional[DispatchDecision] = None
         self._grants: Dict[str, Grant] = {}
         self._slots: Dict[int, Slot] = {}
         self._by_name: Dict[str, int] = {}
@@ -108,6 +125,11 @@ class OperatorRegistry:
 
     def register(self, tenant: str, program: TiaraProgram) -> int:
         grant = self.grant_of(tenant)
+        key = f"{tenant}/{program.name}"
+        if key in self._by_name:
+            raise RegistrationError(
+                f"operator {key!r} already registered as op "
+                f"{self._by_name[key]}")
         kwargs = {}
         if self.max_steps is not None:
             kwargs["max_steps"] = self.max_steps
@@ -151,41 +173,208 @@ class OperatorRegistry:
 
     # -- invocation (data path) -------------------------------------------
 
+    @staticmethod
+    def _check_mode(mode: str, allowed: Sequence[str]) -> None:
+        if mode not in allowed:
+            raise ValueError(
+                f"unknown mode {mode!r}; expected one of {list(allowed)}")
+
     def invoke(self, op_id: int, mem: np.ndarray,
                params: Sequence[int] = (), *, home: int = 0,
                failed: Optional[Set[int]] = None,
                mode: str = "interp") -> vm.InvokeResult:
         """Single-request dispatch.  ``mode``: "interp" (default — the
         classic MP datapath), "compiled" (trace-compiled fast path), or
-        "auto" (compiled when the slot has one, interpreter fallback)."""
+        "auto" (cost-model pick between the two)."""
+        self._check_mode(mode, _SINGLE_MODES)
         slot = self._slots[op_id]
         if mode == "auto":
-            mode = "compiled" if slot.compilable else "interp"
+            n_dev = int(mem.shape[0])
+            decision = self.cost_model.choose_batched(
+                batch=1, step_bound=slot.verified.step_bound,
+                compilable=slot.compilable,
+                batched_cached=vm.engine_cached(
+                    slot.verified, self.regions, n_dev, 1),
+                compiled_cached=tcompile.compiled_cached(
+                    slot.verified, self.regions, n_dev, 1))
+            self.last_decision = decision
+            # at B=1 the batched lockstep engine *is* the scalar datapath
+            mode = "compiled" if decision.mode == "compiled" else "interp"
         if mode == "interp":
             return slot.interp(mem, params, home=home, failed=failed)
-        if mode == "compiled":
-            r = slot.compiled(mem, [list(params)], homes=home, failed=failed)
-            return vm.InvokeResult(mem=r.mem, ret=int(r.ret[0]),
-                                   status=int(r.status[0]),
-                                   steps=int(r.steps[0]), regs=r.regs[0])
-        raise ValueError(f"unknown mode {mode!r}")
+        r = slot.compiled(mem, [list(params)], homes=home, failed=failed)
+        return vm.InvokeResult(mem=r.mem, ret=int(r.ret[0]),
+                               status=int(r.status[0]),
+                               steps=int(r.steps[0]), regs=r.regs[0])
 
     def invoke_batched(self, op_id: int, mem: np.ndarray,
                        params: Sequence[Sequence[int]], *,
                        homes: Union[int, Sequence[int]] = 0,
                        failed: Optional[Set[int]] = None,
-                       mode: str = "auto") -> vm.BatchedInvokeResult:
+                       mode: str = "auto",
+                       contention_rate: float = 0.0
+                       ) -> vm.BatchedInvokeResult:
         """Line-rate dispatch: B requests, one XLA launch.  ``mode``:
-        "auto" (compiled fast path when available, batched interpreter
-        fallback), "batched" (force the interpreter), or "compiled"."""
+        "auto" (cost-model pick), "batched" (force the lockstep
+        interpreter — always exact, even under contention), or
+        "compiled" (force the straight-line trace).  ``contention_rate``
+        is the caller's estimate of the fraction of macro-steps whose
+        footprints collide; any positive value steers "auto" to the
+        interpreter, whose per-step conflict check serializes exactly."""
+        self._check_mode(mode, _BATCHED_MODES)
         slot = self._slots[op_id]
         if mode == "auto":
-            mode = "compiled" if slot.compilable else "batched"
+            n_dev = int(mem.shape[0])
+            B = len(params)
+            decision = self.cost_model.choose_batched(
+                batch=B, step_bound=slot.verified.step_bound,
+                compilable=slot.compilable,
+                contention_rate=contention_rate,
+                batched_cached=vm.engine_cached(
+                    slot.verified, self.regions, n_dev, B),
+                compiled_cached=tcompile.compiled_cached(
+                    slot.verified, self.regions, n_dev, B))
+            self.last_decision = decision
+            mode = decision.mode
         if mode == "batched":
             return slot.batched(mem, params, homes=homes, failed=failed)
-        if mode == "compiled":
-            return slot.compiled(mem, params, homes=homes, failed=failed)
-        raise ValueError(f"unknown mode {mode!r}")
+        return slot.compiled(mem, params, homes=homes, failed=failed)
+
+    # -- mixed-op invocation (the multi-tenant line-rate path) -------------
+
+    def store_ops(self) -> List[VerifiedOperator]:
+        """Every registered operator in op_id order — the programs of the
+        shared instruction store.  Concatenated in this order their entry
+        offsets reproduce :meth:`dispatch_table` exactly, which is what
+        the mixed engine dispatches ``op_id`` against.  op_ids are
+        assigned densely in registration order, so this is just the slots
+        in insertion order (dicts preserve it)."""
+        return [s.verified for s in self._slots.values()]
+
+    def _segment_stats(self, plan: "tcompile.MixedPlan",
+                       n_dev: int) -> List[SegmentStats]:
+        out = []
+        for seg in plan.segments:
+            v = self._slots[seg.op_id].verified
+            out.append(SegmentStats(
+                size=seg.size, step_bound=v.step_bound,
+                compilable=self._slots[seg.op_id].compilable,
+                batched_cached=vm.engine_cached(v, self.regions, n_dev,
+                                                seg.size),
+                compiled_cached=tcompile.compiled_cached(
+                    v, self.regions, n_dev, seg.size)))
+        return out
+
+    def invoke_mixed(self, op_ids: Sequence[int], mem: np.ndarray,
+                     params: Sequence[Sequence[int]], *,
+                     homes: Union[int, Sequence[int]] = 0,
+                     failed: Optional[Set[int]] = None,
+                     mode: str = "auto",
+                     contention_rate: float = 0.0
+                     ) -> vm.BatchedInvokeResult:
+        """Dispatch a wave whose requests carry *per-request* op_ids.
+
+        ``mode``:
+          "mixed"      one lockstep launch over the merged instruction
+                       store; request ``b`` enters at
+                       ``dispatch_table()[op_ids[b]]``.  Exact round-robin
+                       semantics, contended steps serialize per request
+                       index — the reference mixed execution.
+          "segmented"  stable-sort by op_id, run each same-op segment on
+                       its best engine (compiled trace when the slot has
+                       one), scatter outputs back to arrival order.
+                       Matches "mixed" whenever cross-segment footprints
+                       are disjoint (the normal serving case).
+          "serial"     arrival-order baseline: one ``invoke_batched``
+                       launch per *contiguous* same-op run — what a
+                       dispatcher without mixed batching must do; a fully
+                       interleaved wave degenerates to one launch per
+                       request.
+          "auto"       single-op waves delegate to :meth:`invoke_batched`;
+                       genuinely mixed waves go to the cost model.
+        """
+        self._check_mode(mode, _MIXED_MODES)
+        ids = np.asarray(list(op_ids), dtype=np.int64)
+        if ids.ndim != 1 or ids.size != len(params):
+            raise ValueError(
+                f"op_ids shape {ids.shape} does not match "
+                f"{len(params)} requests")
+        for i in np.unique(ids):
+            if int(i) not in self._slots:
+                raise KeyError(f"op_id {int(i)} not registered")
+        plan = tcompile.plan_mixed_batch(ids)
+        decision = None
+        if mode == "auto":
+            if plan.n_segments == 1:
+                return self.invoke_batched(
+                    int(ids[0]), mem, params, homes=homes, failed=failed,
+                    mode="auto", contention_rate=contention_rate)
+            n_dev = int(mem.shape[0])
+            decision = self.cost_model.choose_mixed(
+                segments=self._segment_stats(plan, n_dev),
+                contention_rate=contention_rate,
+                mixed_cached=vm.mixed_engine_cached(
+                    self.store_ops(), self.regions, n_dev, plan.batch))
+            mode = decision.mode
+        if mode == "mixed":
+            out = vm.invoke_batched_mixed(
+                self.store_ops(), self.regions, mem, ids, params,
+                homes=homes, failed=failed)
+        elif mode == "segmented":
+            out = self._invoke_groups(
+                ((seg.op_id, plan.segment_indices(seg))
+                 for seg in plan.segments),
+                mem, params, homes=homes, failed=failed,
+                contention_rate=contention_rate)
+        else:
+            out = self._invoke_groups(
+                self._arrival_runs(ids), mem, params, homes=homes,
+                failed=failed, contention_rate=contention_rate)
+        if decision is not None:
+            # nested per-group dispatches recorded their own decisions;
+            # the wave-level pick is what callers audit
+            self.last_decision = decision
+        return out
+
+    @staticmethod
+    def _arrival_runs(ids: np.ndarray):
+        """Contiguous same-op runs in arrival order — the grouping a
+        dispatcher without mixed batching is stuck with."""
+        lo, B = 0, int(ids.size)
+        while lo < B:
+            hi = lo + 1
+            while hi < B and ids[hi] == ids[lo]:
+                hi += 1
+            yield int(ids[lo]), np.arange(lo, hi)
+            lo = hi
+
+    def _invoke_groups(self, groups, mem: np.ndarray,
+                       params: Sequence[Sequence[int]], *,
+                       homes: Union[int, Sequence[int]],
+                       failed: Optional[Set[int]],
+                       contention_rate: float = 0.0
+                       ) -> vm.BatchedInvokeResult:
+        """Launch each ``(op_id, arrival_indices)`` group on its own
+        (best-engine auto dispatch), threading the pool through in group
+        order and scattering per-request outputs back to arrival order."""
+        B = len(params)
+        h = vm.homes_array(homes, B)
+        ret = np.zeros(B, dtype=np.int64)
+        status = np.zeros(B, dtype=np.int64)
+        steps = np.zeros(B, dtype=np.int64)
+        regs = np.zeros((B, isa.NUM_REGS), dtype=np.int64)
+        mem_cur = mem
+        for op_id, idx in groups:
+            idx = np.asarray(idx)
+            r = self.invoke_batched(
+                int(op_id), mem_cur, [list(params[i]) for i in idx],
+                homes=[int(h[i]) for i in idx], failed=failed, mode="auto",
+                contention_rate=contention_rate)
+            mem_cur = r.mem
+            ret[idx], status[idx] = r.ret, r.status
+            steps[idx], regs[idx] = r.steps, r.regs
+        return vm.BatchedInvokeResult(mem=mem_cur, ret=ret, status=status,
+                                      steps=steps, regs=regs)
 
     def dump(self) -> str:
         lines = []

@@ -31,6 +31,24 @@ Two step implementations share that semantics:
 ``build_vm`` (the single-request entry point every existing caller uses)
 is the ``batch=1`` specialization of the same engine.
 
+**Mixed-batch execution model** (the multi-tenant line-rate path): the
+engine is built over a *merged instruction store* — every registered
+program laid out back to back, exactly the registry's shared BRAM — and
+each request additionally carries an ``op_sel`` slot index.  Request ``b``
+starts at ``start_pc[op_sel[b]]``, terminates against its own program end
+and its own verified step bound, and otherwise participates in the very
+same lockstep macro-step: one ``lax.while_loop`` advances B requests
+running *different tenants' operators* against the one shared pool, so a
+serving wave interleaving GraphWalk, PageTableWalk, KV-fetch and MoE
+requests costs one XLA launch instead of one launch per op_id.  The
+per-step sweep-line conflict check and the serialized contended fallback
+reason per-request from the decoded instruction rows, so mixed batches
+compose with them unchanged: contended steps of a mixed batch keep the
+deterministic lowest-index-wins ordering.  ``build_batched_vm`` is the
+one-program specialization (``op_sel`` pinned to slot 0);
+``build_mixed_batched_vm`` / ``invoke_batched_mixed`` expose the full
+dispatch-table form.
+
 The *verified step bound* is the loop fuel: registration-time verification
 proves the VM can never hit it, and the property tests assert exactly that.
 
@@ -44,6 +62,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import weakref
 from typing import Dict, NamedTuple, Optional, Sequence, Set, Tuple, Union
 
 import jax
@@ -117,22 +136,42 @@ def _alu_table(a, b):
     ]
 
 
-def build_batched_vm(op: VerifiedOperator, regions: RegionTable,
-                     n_devices: int, batch: int):
-    """Returns jit-compiled ``f(mem, params, homes, failed) -> VMResult``.
+def _build_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
+                  regions: RegionTable, n_devices: int, batch: int):
+    """Build the lockstep engine over a *merged* instruction store.
+
+    ``codes`` holds one program per dispatch-table slot, laid out back to
+    back in slot order — the same layout as the registry's shared BRAM
+    instruction store, so slot ``i`` starts at the registry's
+    ``start_pc[i]``.  Returns jit-compiled
+    ``f(mem, params, homes, failed, op_sel) -> VMResult`` where
+    ``op_sel``: int64[batch] picks each request's program; the request
+    starts at its program's first pc and terminates against its own
+    program end and verified step bound (``fuels[op_sel[b]]``).
 
     ``mem``: int64[n_devices, pool_words] shared by the whole batch;
     ``params``: int64[batch, <=8]; ``homes``: int64[batch] per-request
     executing-host ids; ``failed``: bool[n_devices].  Result fields
     ``ret/status/steps`` are [batch] and ``regs`` is [batch, 16].
-    Call under ``vm.x64()`` (or use :func:`invoke` / :func:`invoke_batched`).
+    Call under ``vm.x64()`` (or use the ``invoke*`` wrappers).
     """
-    code_np = np.asarray(op.code, dtype=np.int64)
+    codes = [np.asarray(c, dtype=np.int64).reshape(-1, isa.INSTR_WIDTH)
+             for c in codes]
+    if not codes:
+        raise ValueError("engine needs at least one program")
+    code_np = np.concatenate(codes, axis=0)
+    lens_np = np.asarray([c.shape[0] for c in codes], dtype=np.int64)
+    start_np = np.concatenate(
+        [np.zeros(1, np.int64), np.cumsum(lens_np)[:-1]])
+    end_np = start_np + lens_np
+    fuel_np = np.asarray([int(f) for f in fuels], dtype=np.int64)
+    if fuel_np.shape != (len(codes),):
+        raise ValueError("one step bound per program required")
+    n_ops = len(codes)
     n_instr = int(code_np.shape[0])
-    fuel = int(op.step_bound)
     base_np, mask_np, _ = regions.as_arrays()
     n_regions = int(base_np.shape[0])
-    # Static memcpy window: the largest cap used by this program.
+    # Static memcpy window: the largest cap used by any merged program.
     memcpy_caps = [int(r[isa.F_IMM]) for r in code_np
                    if int(r[isa.F_OP]) == int(Op.MEMCPY)]
     max_window = int(min(max(memcpy_caps, default=1), isa.MAX_MEMCPY_WORDS))
@@ -140,13 +179,19 @@ def build_batched_vm(op: VerifiedOperator, regions: RegionTable,
     B = int(batch)
     depth = isa.LOOP_STACK_DEPTH
 
-    def run(mem, params, homes, failed):
+    def run(mem, params, homes, failed, op_sel):
         code = jnp.asarray(code_np)
         base_c = jnp.asarray(base_np)
         mask_c = jnp.asarray(mask_np)
         mem = jnp.asarray(mem, jnp.int64)
         homes = jnp.asarray(homes, jnp.int64).reshape(B)
         failed = jnp.asarray(failed, jnp.bool_)
+        op_sel = jnp.clip(jnp.asarray(op_sel, jnp.int64).reshape(B),
+                          0, n_ops - 1)
+        # per-request dispatch: entry pc, program end, and step-bound fuel
+        pc0 = jnp.asarray(start_np)[op_sel]
+        end_arr = jnp.asarray(end_np)[op_sel]
+        fuel_arr = jnp.asarray(fuel_np)[op_sel]
         pool_words = mem.shape[1]
 
         regs0 = jnp.zeros((B, isa.NUM_REGS), jnp.int64)
@@ -548,17 +593,26 @@ def build_batched_vm(op: VerifiedOperator, regions: RegionTable,
                          ].set(sw_val, mode="drop")
 
             # --- memcpy window gather + scatter --------------------------
-            iw = jnp.arange(max_window, dtype=jnp.int64)[None, :]
-            sphys = base_c[d["m_srid"]][:, None] + \
-                ((d["m_soff"][:, None] + iw) & mask_c[d["m_srid"]][:, None])
-            dphys = base_c[d["m_drid"]][:, None] + \
-                ((d["m_doff"][:, None] + iw) & mask_c[d["m_drid"]][:, None])
-            live = is_mcpy[:, None] & (iw < d["ln"][:, None])
-            sdev_g = jnp.clip(d["m_sdev"], 0, n_dev - 1)[:, None]
-            svals = mem[sdev_g, jnp.clip(sphys, 0, pool_words - 1)]
-            mem = mem.at[jnp.where(live, d["m_ddev"][:, None], n_dev),
-                         jnp.where(live, dphys, pool_words)
-                         ].set(svals, mode="drop")
+            # The window machinery materializes (B, max_window) gathers —
+            # with a merged multi-tenant store max_window is the largest
+            # cap of *any* program, so skip it entirely on the (frequent)
+            # macro-steps where no live lane is copying.
+            def do_memcpy(mem):
+                iw = jnp.arange(max_window, dtype=jnp.int64)[None, :]
+                sphys = base_c[d["m_srid"]][:, None] + \
+                    ((d["m_soff"][:, None] + iw)
+                     & mask_c[d["m_srid"]][:, None])
+                dphys = base_c[d["m_drid"]][:, None] + \
+                    ((d["m_doff"][:, None] + iw)
+                     & mask_c[d["m_drid"]][:, None])
+                live = is_mcpy[:, None] & (iw < d["ln"][:, None])
+                sdev_g = jnp.clip(d["m_sdev"], 0, n_dev - 1)[:, None]
+                svals = mem[sdev_g, jnp.clip(sphys, 0, pool_words - 1)]
+                return mem.at[jnp.where(live, d["m_ddev"][:, None], n_dev),
+                              jnp.where(live, dphys, pool_words)
+                              ].set(svals, mode="drop")
+
+            mem = lax.cond(jnp.any(is_mcpy), do_memcpy, lambda m: m, mem)
 
             # --- inflight ------------------------------------------------
             inflight = jnp.where(
@@ -664,7 +718,7 @@ def build_batched_vm(op: VerifiedOperator, regions: RegionTable,
         # ==============================================================
 
         def live_mask(s: ReqState):
-            return (~s.halted) & (s.pc < n_instr) & (s.steps < fuel)
+            return (~s.halted) & (s.pc < end_arr) & (s.steps < fuel_arr)
 
         def step(carry):
             s, mem = carry
@@ -685,7 +739,7 @@ def build_batched_vm(op: VerifiedOperator, regions: RegionTable,
             return jnp.any(live_mask(s))
 
         init = ReqState(
-            pc=jnp.zeros(B, jnp.int64), regs=regs0,
+            pc=pc0, regs=regs0,
             lstack=jnp.zeros((B, depth, 3), jnp.int64),
             lsp=jnp.zeros(B, jnp.int64),
             inflight=jnp.zeros(B, jnp.int64), halted=jnp.zeros(B, bool),
@@ -697,12 +751,43 @@ def build_batched_vm(op: VerifiedOperator, regions: RegionTable,
         final, mem_f = lax.while_loop(cond, step, (init, mem))
         status = jnp.where(
             final.halted, final.status,
-            jnp.where(final.steps >= fuel, _i64(isa.STATUS_FUEL),
+            jnp.where(final.steps >= fuel_arr, _i64(isa.STATUS_FUEL),
                       _i64(isa.STATUS_FELL_OFF)))
         return VMResult(mem=mem_f, ret=final.ret, status=status,
                         steps=final.steps, regs=final.regs)
 
     return jax.jit(run)
+
+
+def build_batched_vm(op: VerifiedOperator, regions: RegionTable,
+                     n_devices: int, batch: int):
+    """Returns jit-compiled ``f(mem, params, homes, failed) -> VMResult`` —
+    the one-program specialization of :func:`_build_engine` (its merged
+    store holds a single program and every request dispatches to slot 0).
+    Call under ``vm.x64()`` (or use :func:`invoke` / :func:`invoke_batched`).
+    """
+    eng = _build_engine([op.code], [op.step_bound], regions, n_devices,
+                        batch)
+    sel0 = np.zeros(int(batch), dtype=np.int64)
+
+    def run(mem, params, homes, failed):
+        return eng(mem, params, homes, failed, sel0)
+
+    return run
+
+
+def build_mixed_batched_vm(ops: Sequence[VerifiedOperator],
+                           regions: RegionTable, n_devices: int,
+                           batch: int):
+    """The multi-tenant engine: one lockstep launch executing a batch of
+    requests whose per-request ``op_sel`` picks among the ``ops`` programs
+    (laid out back to back like the registry's instruction store, so
+    ``op_sel`` is exactly the registry ``op_id`` when ``ops`` lists every
+    slot in op_id order).  Returns jit-compiled
+    ``f(mem, params, homes, failed, op_sel) -> VMResult``."""
+    return _build_engine([o.code for o in ops],
+                         [o.step_bound for o in ops],
+                         regions, n_devices, batch)
 
 
 def build_vm(op: VerifiedOperator, regions: RegionTable, n_devices: int):
@@ -721,13 +806,40 @@ def build_vm(op: VerifiedOperator, regions: RegionTable, n_devices: int):
     return run
 
 
+# Serializing a program's code for its cache key costs tobytes() over the
+# whole instruction array; a registry hot path keys the full merged store
+# per wave, so memoize per live VerifiedOperator.  Keyed by id() but
+# guarded by a weakref identity check — recycled ids miss and recompute,
+# and dead entries are purged on the weakref callback.
+_CODE_BYTES_MEMO: Dict[int, Tuple[object, bytes]] = {}
+
+
+def _code_bytes(op: VerifiedOperator) -> bytes:
+    ent = _CODE_BYTES_MEMO.get(id(op))
+    if ent is not None and ent[0]() is op:
+        return ent[1]
+    key = id(op)
+    b = op.code.tobytes()
+    _CODE_BYTES_MEMO[key] = (
+        weakref.ref(op, lambda _: _CODE_BYTES_MEMO.pop(key, None)), b)
+    return b
+
+
 def engine_key(op: VerifiedOperator, regions: RegionTable, n_dev: int,
                batch: int, *extra) -> Tuple:
     """Content-addressed cache key for a built engine (object ids recycle
     after GC — never key on id).  Shared with the compiled-path cache."""
     base, mask, _ = regions.as_arrays()
-    return (op.code.tobytes(), base.tobytes(), mask.tobytes(),
+    return (_code_bytes(op), base.tobytes(), mask.tobytes(),
             op.step_bound, n_dev, batch) + extra
+
+
+def mixed_engine_key(ops: Sequence[VerifiedOperator], regions: RegionTable,
+                     n_dev: int, batch: int, *extra) -> Tuple:
+    """Content-addressed cache key for a mixed (multi-program) engine."""
+    base, mask, _ = regions.as_arrays()
+    return (tuple((_code_bytes(o), int(o.step_bound)) for o in ops),
+            base.tobytes(), mask.tobytes(), n_dev, batch) + extra
 
 
 # Engines are cached per (operator, regions, n_devices, batch): a serving
@@ -736,12 +848,36 @@ def engine_key(op: VerifiedOperator, regions: RegionTable, n_dev: int,
 _VM_CACHE: Dict[Tuple, object] = {}
 
 
+def engine_cached(op: VerifiedOperator, regions: RegionTable, n_dev: int,
+                  batch: int) -> bool:
+    """True iff the batched interpreter engine for this (op, batch) is
+    already built — a cache miss costs an XLA compile, which the
+    dispatch cost model charges for."""
+    return engine_key(op, regions, n_dev, batch) in _VM_CACHE
+
+
+def mixed_engine_cached(ops: Sequence[VerifiedOperator],
+                        regions: RegionTable, n_dev: int,
+                        batch: int) -> bool:
+    return mixed_engine_key(ops, regions, n_dev, batch) in _VM_CACHE
+
+
 def _cached_engine(op: VerifiedOperator, regions: RegionTable, n_dev: int,
                    batch: int):
     key = engine_key(op, regions, n_dev, batch)
     fn = _VM_CACHE.get(key)
     if fn is None:
         fn = build_batched_vm(op, regions, n_dev, batch)
+        _VM_CACHE[key] = fn
+    return fn
+
+
+def _cached_mixed_engine(ops: Sequence[VerifiedOperator],
+                         regions: RegionTable, n_dev: int, batch: int):
+    key = mixed_engine_key(ops, regions, n_dev, batch)
+    fn = _VM_CACHE.get(key)
+    if fn is None:
+        fn = build_mixed_batched_vm(ops, regions, n_dev, batch)
         _VM_CACHE[key] = fn
     return fn
 
@@ -772,6 +908,17 @@ def _failed_mask(n_dev: int, failed: Optional[Set[int]]) -> np.ndarray:
     return m
 
 
+def homes_array(homes: Union[int, Sequence[int]],
+                batch: int) -> np.ndarray:
+    """Normalize a ``homes`` argument (scalar broadcast or per-request
+    sequence) to i64[batch] — the one place that marshalling lives."""
+    h = np.full(batch, homes, dtype=np.int64) if np.isscalar(homes) \
+        else np.asarray(list(homes), dtype=np.int64)
+    if h.shape != (batch,):
+        raise ValueError(f"homes shape {h.shape} != ({batch},)")
+    return h
+
+
 def _marshal_batch(params: Sequence[Sequence[int]],
                    homes: Union[int, Sequence[int]]
                    ) -> Tuple[np.ndarray, np.ndarray]:
@@ -785,11 +932,7 @@ def _marshal_batch(params: Sequence[Sequence[int]],
     for b, row in enumerate(params):
         for i, v in enumerate(row):
             p[b, i] = _wrap_param(v)
-    h = np.full(batch, homes, dtype=np.int64) if np.isscalar(homes) \
-        else np.asarray(list(homes), dtype=np.int64)
-    if h.shape != (batch,):
-        raise ValueError(f"homes shape {h.shape} != ({batch},)")
-    return p, h
+    return p, homes_array(homes, batch)
 
 
 def invoke(op: VerifiedOperator, regions: RegionTable, mem: np.ndarray,
@@ -823,6 +966,38 @@ def invoke_batched(op: VerifiedOperator, regions: RegionTable,
     """
     p, h = _marshal_batch(params, homes)
     fn = _cached_engine(op, regions, int(mem.shape[0]), p.shape[0])
+    return run_batched_fn(fn, mem, p, h, failed)
+
+
+def invoke_batched_mixed(ops: Sequence[VerifiedOperator],
+                         regions: RegionTable, mem: np.ndarray,
+                         op_sel: Sequence[int],
+                         params: Sequence[Sequence[int]], *,
+                         homes: Union[int, Sequence[int]] = 0,
+                         failed: Optional[Set[int]] = None
+                         ) -> "BatchedInvokeResult":
+    """Run a *mixed* batch — request ``b`` executes ``ops[op_sel[b]]`` —
+    against one shared pool in one lockstep launch: numpy in/out.
+
+    Semantics are the engine's deterministic round-robin interleaving
+    across programs: each macro-step, request ``i`` executes the next
+    instruction *of its own operator* and observes all same-step memory
+    effects of requests ``j < i``.
+    """
+    p, h = _marshal_batch(params, homes)
+    B = p.shape[0]
+    sel = np.asarray(list(op_sel), dtype=np.int64)
+    if sel.shape != (B,):
+        raise ValueError(f"op_sel shape {sel.shape} != ({B},)")
+    if sel.size and (sel.min() < 0 or sel.max() >= len(ops)):
+        raise ValueError(
+            f"op_sel entries must be in [0, {len(ops)}) for {len(ops)} "
+            f"programs; got range [{sel.min()}, {sel.max()}]")
+    eng = _cached_mixed_engine(tuple(ops), regions, int(mem.shape[0]), B)
+
+    def fn(mem_j, p_j, h_j, failed_j):
+        return eng(mem_j, p_j, h_j, failed_j, sel)
+
     return run_batched_fn(fn, mem, p, h, failed)
 
 

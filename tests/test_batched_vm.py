@@ -13,7 +13,7 @@ import pytest
 from repro.core import compile as tc
 from repro.core import isa, memory, pyvm, vm
 from repro.core.isa import Alu
-from repro.core.memory import Grant
+from repro.core.memory import Grant, merge_tables
 from repro.core import operators as ops
 from repro.core.program import OperatorBuilder
 from repro.core.registry import OperatorRegistry
@@ -338,6 +338,136 @@ def test_registry_slot_entry_points():
     assert (r1.ret, r1.status, r1.steps) == (r2.ret, r2.status, r2.steps)
     assert np.array_equal(r1.mem, r2.mem)
     assert "compiled" in reg.dump()
+
+
+# ---------------------------------------------------------------------------
+# Mixed-op batches: many tenants' operators in one lockstep launch
+# ---------------------------------------------------------------------------
+
+def _mixed_stock_setup(B=128, seed=7):
+    """Six stock operators from six tenants in one shared pool, with a
+    random interleaving whose footprints make lockstep round-robin
+    bit-identical to sequential per-request pyvm: GraphWalk/PTW/KV/MoE
+    requests write disjoint reply slots, DistLock requests take disjoint
+    latches, and NSA requests within the tenant are identical (idempotent
+    reply writes — these exercise the serialized contended path inside
+    the mixed wave)."""
+    gw = ops.GraphWalk(n_nodes=64, max_depth=8, reply_words=32 * 8)
+    ptw = ops.PageTableWalk(fanout=16, n_pages=8, reply_pages=32)
+    lk = ops.DistLock(max_retries=2)
+    kv = ops.PagedKVFetch(n_blocks_pool=16, block_bytes=1024,
+                          max_req_blocks=4, reply_slots=32)
+    moe = ops.MoEExpertGather(n_experts=16, max_k=4, slab_words=64,
+                              reply_slots=32)
+    nsa = ops.NSASelect(n_scores=16, block_words=32)
+    combined, views = merge_tables([
+        ("gw", gw.regions()), ("ptw", ptw.regions()),
+        ("lk", lk.regions()), ("kv", kv.regions()),
+        ("moe", moe.regions()), ("nsa", nsa.regions())])
+    reg = OperatorRegistry(combined, n_devices=3)
+    for t, v in views.items():
+        reg.add_tenant(Grant.all_of(v, t))
+    reg.register("gw", gw.build(views["gw"], reply_param=True))
+    reg.register("ptw", ptw.build(views["ptw"], reply_param=True))
+    reg.register("lk", lk.build(views["lk"]))
+    reg.register("kv", kv.build(views["kv"], reply_param=True))
+    reg.register("moe", moe.build(views["moe"], reply_param=True))
+    reg.register("nsa", nsa.build(views["nsa"]))
+
+    mem = memory.make_pool(3, combined)
+    order = gw.populate(mem, views["gw"])
+    vamap = ptw.populate(mem, views["ptw"])
+    kv.populate(mem, views["kv"])
+    kv.make_request(mem, views["kv"], [3, 9, 1])
+    moe.populate(mem, views["moe"])
+    memory.write_region(mem, views["moe"], 0, "expert_ids",
+                        np.asarray([5, 2, 9], dtype=np.int64))
+    nsa.populate(mem, views["nsa"])
+    vas = sorted(vamap.keys())
+
+    rng = np.random.default_rng(seed)
+    ids = np.concatenate([np.arange(6)] * (B // 6 + 1))[:B]
+    rng.shuffle(ids)
+    slot = [0] * 6
+    params = []
+    for op_id in ids:
+        j = slot[op_id]
+        slot[op_id] += 1
+        if op_id == 0:
+            params.append([int(order[j % 64]) * 8, (3 * j) % 8,
+                           j % 32 * ops.NODE_WORDS])
+        elif op_id == 1:
+            params.append([int(vas[j % len(vas)]),
+                           j % 32 * ops.PAGE_WORDS])
+        elif op_id == 2:                      # disjoint latch/state pairs
+            params.append([2 * (j % 32), 2 * (j % 32) + 1, 1000 + j,
+                           1, 2 * (j % 32) + 1, 2, 2 * (j % 32) + 1])
+        elif op_id == 3:                      # varied n, disjoint slots
+            params.append([1 + j % 3, (j % 32) * 4 * 128])
+        elif op_id == 4:                      # varied k, disjoint slots
+            params.append([1 + j % 4, (j % 32) * 4 * 64])
+        else:
+            params.append([16, 40])
+    return reg, mem, list(ids), params
+
+
+def test_mixed_batch_parity_all_stock_ops():
+    """B=128 random interleaving of every stock operator: every mixed
+    dispatch mode is bit-identical to the per-request pyvm oracle."""
+    reg, mem, ids, params = _mixed_stock_setup(B=128)
+    vops = reg.store_ops()
+    seq = mem.copy()
+    rets, stats, steps = [], [], []
+    for op_id, p in zip(ids, params):
+        r = pyvm.run(vops[op_id], reg.regions, seq, p)
+        rets.append(r.ret)
+        stats.append(r.status)
+        steps.append(r.steps)
+    for mode in ("mixed", "segmented", "serial", "auto"):
+        res = reg.invoke_mixed(ids, mem, params, mode=mode)
+        assert_batch_matches(res, seq, np.array(rets), np.array(stats),
+                             np.array(steps))
+
+
+def test_mixed_engine_level_parity():
+    """vm.invoke_batched_mixed (below the registry) agrees with pyvm."""
+    reg, mem, ids, params = _mixed_stock_setup(B=36, seed=3)
+    vops = reg.store_ops()
+    res = vm.invoke_batched_mixed(vops, reg.regions, mem, ids, params)
+    seq = mem.copy()
+    for op_id, p in zip(ids, params):
+        pyvm.run(vops[op_id], reg.regions, seq, p)
+    assert np.array_equal(res.mem, seq)
+
+
+def test_mixed_contended_store_cas_deterministic():
+    """A mixed STORE/CAS race on one shared latch: round-robin order
+    serializes the contended macro-step, so the lowest-indexed CAS lane
+    wins deterministically and later STORE lanes overwrite in index
+    order."""
+    rt = memory.packed_table([("lock", 64)])
+    cas_op = _cas_race_op(rt)                 # movi; cas(0 -> 100+i); ret
+    sb = OperatorBuilder("store_then_load", n_params=1, regions=rt)
+    off = sb.const(0)
+    sb.store(sb.param(0), "lock", off)
+    got = sb.load(sb.reg(), "lock", off)
+    sb.ret(got)
+    store_op = sb.build()
+    v_cas = verify(cas_op, grant=Grant.all_of(rt), regions=rt)
+    v_store = verify(store_op, grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(1, rt)
+    ids = [0, 1, 0, 1]                        # CAS, STORE, CAS, STORE
+    params = [[100], [201], [102], [203]]
+    res = vm.invoke_batched_mixed([v_cas, v_store], rt, mem, ids, params)
+    # macro-step with the contended word, serialized in request order:
+    #   req0 CAS sees 0 (wins, latch=100); req1 stores 201; req2 CAS
+    #   sees 201 (loses); req3 stores 203.  The STORE ops' trailing
+    #   loads then both observe 203.
+    assert list(res.ret) == [0, 203, 201, 203]
+    assert res.mem[0, rt["lock"].base] == 203
+    res2 = vm.invoke_batched_mixed([v_cas, v_store], rt, mem, ids, params)
+    assert np.array_equal(res.ret, res2.ret)
+    assert np.array_equal(res.mem, res2.mem)
 
 
 def test_registry_interp_fallback_for_uncompilable():
