@@ -9,17 +9,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Sequence, Set
+from typing import List, Optional, Sequence
 
-import numpy as np
-
-from repro.core import memory, pyvm
-from repro.core.costmodel import DEFAULT_HW, HW
+from repro.core.endpoint import TiaraEndpoint
 from repro.core.isa import Op
-from repro.core.memory import Grant, RegionTable
 from repro.core.pyvm import TraceEvent
-from repro.core.simulator import TaskSim, simulate_task
-from repro.core.verifier import VerifiedOperator, verify
 
 
 @dataclasses.dataclass
@@ -60,22 +54,28 @@ def rate(fn, per_call_ops: int, min_seconds: float = 0.3) -> tuple:
 def run_traced(workload, build_fn, params: Sequence[int], *,
                n_devices: int = 1, home: int = 0,
                populate_args: Optional[dict] = None,
-               setup_fn=None) -> tuple:
-    """Verify + populate + run on the pyvm oracle with tracing.
+               setup_fn=None, max_steps: Optional[int] = None) -> tuple:
+    """Register + populate + trace one invocation through an endpoint.
 
-    Returns (vop, trace, result, rt, mem_before)."""
-    rt = workload.regions()
-    prog = build_fn(rt)
-    vop = verify(prog, grant=Grant.all_of(rt), regions=rt)
-    mem = memory.make_pool(n_devices, rt)
+    The workload becomes one tenant of a fresh :class:`TiaraEndpoint`
+    (which owns the pool); the invocation runs on the ``pyvm`` oracle
+    via ``Session.trace`` so the cycle simulator gets an event trace.
+
+    Returns (vop, trace, result, rt, mem_before) — ``rt`` is the
+    tenant's region view over the endpoint pool."""
+    ep, sessions = TiaraEndpoint.for_tenants(
+        [("bench", workload.regions())], n_devices=n_devices,
+        max_steps=max_steps)
+    s = sessions["bench"]
+    op_id = s.register(build_fn(s.view))
     if hasattr(workload, "populate"):
-        workload.populate(mem, rt, **(populate_args or {}))
+        workload.populate(s.pool, s.view, **(populate_args or {}))
     if setup_fn is not None:
-        setup_fn(mem, rt)
-    before = mem.copy()
-    res = pyvm.run(vop, rt, mem, list(params), home=home, record_trace=True)
+        setup_fn(s.pool, s.view)
+    before = ep.mem.copy()
+    res = s.trace(op_id, list(params), home=home)
     assert res.status in (0, 1), f"operator failed: status={res.status}"
-    return vop, res.trace, res, rt, before
+    return ep.registry[op_id].verified, res.trace, res, s.view, before
 
 
 def count_rtts(trace: Sequence[TraceEvent], *,

@@ -11,8 +11,6 @@ from __future__ import annotations
 
 from typing import List
 
-import numpy as np
-
 from repro.core import costmodel as cm
 from repro.core import operators as ops
 from repro.core import simulator as sim

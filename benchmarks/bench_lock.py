@@ -16,8 +16,6 @@ from __future__ import annotations
 
 from typing import List
 
-import numpy as np
-
 from repro.core import costmodel as cm
 from repro.core import memory
 from repro.core import operators as ops

@@ -19,29 +19,27 @@ import numpy as np
 from repro.core import costmodel as cm
 from repro.core import memory
 from repro.core import operators as ops
-from repro.core import pyvm
 from repro.core import simulator as sim
-from repro.core.memory import Grant
-from repro.core.verifier import verify
 
-from benchmarks._workbench import Row
+from benchmarks._workbench import Row, run_traced
 
 KS = (4, 8, 16, 32, 64)
 
 
 def tiara_moe_latency(k: int, hw: cm.HW):
     m = ops.MoEExpertGather(n_experts=256, max_k=64)
-    rt = m.regions()
-    prog = m.build(rt, remote_reply=True)
-    vop = verify(prog, grant=Grant.all_of(rt), regions=rt)
-    mem = memory.make_pool(2, rt)
-    m.populate(mem, rt)
     rng = np.random.default_rng(1)
     eids = rng.choice(256, size=k, replace=False)
-    memory.write_region(mem, rt, 0, "expert_ids", eids.astype(np.int64))
-    res = pyvm.run(vop, rt, mem, [k, 1], home=0, record_trace=True)
+
+    def setup(mem, rt):
+        memory.write_region(mem, rt, 0, "expert_ids",
+                            eids.astype(np.int64))
+
+    vop, trace, res, _, _ = run_traced(
+        m, lambda rt: m.build(rt, remote_reply=True), [k, 1],
+        n_devices=2, setup_fn=setup)
     assert res.ok
-    return sim.simulate_task(vop, res.trace, hw, pipelined=True,
+    return sim.simulate_task(vop, trace, hw, pipelined=True,
                              serial_chain=False)
 
 

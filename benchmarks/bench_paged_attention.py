@@ -18,14 +18,10 @@ from typing import List
 import numpy as np
 
 from repro.core import costmodel as cm
-from repro.core import memory
 from repro.core import operators as ops
 from repro.core import simulator as sim
-from repro.core.memory import Grant
-from repro.core.verifier import verify
-from repro.core import pyvm
 
-from benchmarks._workbench import Row
+from benchmarks._workbench import Row, run_traced
 
 TOTAL_BYTES = 8 * 1024 * 1024
 BLOCK_SIZES = (1024, 4096, 8192, 32768, 262144)
@@ -37,18 +33,18 @@ def tiara_gather_gbs(block_bytes: int, hw: cm.HW) -> float:
     n_req = TOTAL_BYTES // block_bytes
     k = ops.PagedKVFetch(n_blocks_pool=POOL_BLOCKS, block_bytes=block_bytes,
                          max_req_blocks=n_req)
-    rt = k.regions()
-    prog = k.build(rt, remote_reply=True)
-    vop = verify(prog, grant=Grant.all_of(rt), regions=rt,
-                 max_steps=1 << 22)
-    mem = memory.make_pool(2, rt)          # dev0 = memory node, dev1 = client
-    k.populate(mem, rt)
     rng = np.random.default_rng(0)
     ids = rng.integers(0, POOL_BLOCKS, size=n_req)
-    k.make_request(mem, rt, list(ids))
-    res = pyvm.run(vop, rt, mem, [n_req, 1], home=0, record_trace=True)
+
+    def setup(mem, rt):
+        k.make_request(mem, rt, list(ids))
+
+    # dev0 = memory node, dev1 = client
+    vop, trace, res, _, _ = run_traced(
+        k, lambda rt: k.build(rt, remote_reply=True), [n_req, 1],
+        n_devices=2, setup_fn=setup, max_steps=1 << 22)
     assert res.ok and res.ret == n_req
-    ts = sim.simulate_task(vop, res.trace, hw, pipelined=True,
+    ts = sim.simulate_task(vop, trace, hw, pipelined=True,
                            serial_chain=False, reply_payload_bytes=0)
     return sim.effective_gather_gbs(ts, TOTAL_BYTES, hw), ts
 

@@ -56,7 +56,6 @@ def rows(hw: cm.HW = cm.DEFAULT_HW) -> List[Row]:
 
 
 def _first_va(p: ops.PageTableWalk) -> int:
-    import numpy as np
     from repro.core import memory
     rt = p.regions()
     mem = memory.make_pool(1, rt)

@@ -1,9 +1,10 @@
 """Table 1 — RTT cost of indirection across workloads.
 
-The Tiara column is *derived from executed traces*: we count the request/
-reply round trip plus every remote synchronous op and every Wait joining
-remote async ops.  The RDMA column is the dependence-depth accounting the
-table states.
+The Tiara column is *derived from executed traces*: every workload is
+registered on a queue-pair endpoint (``run_traced``) and we count the
+request/reply round trip plus every remote synchronous op and every Wait
+joining remote async ops.  The RDMA column is the dependence-depth
+accounting the table states.
 """
 
 from __future__ import annotations
@@ -15,9 +16,6 @@ import numpy as np
 from repro.core import costmodel as cm
 from repro.core import memory
 from repro.core import operators as ops
-from repro.core import pyvm
-from repro.core.memory import Grant
-from repro.core.verifier import verify
 
 from benchmarks._workbench import Row, count_rtts, run_traced
 
@@ -31,66 +29,62 @@ def rows(hw: cm.HW = cm.DEFAULT_HW) -> List[Row]:
     out.append(Row("table1/graph_d10/tiara", 0, count_rtts(trace), "RTT", 1))
     out.append(Row("table1/graph_d10/rdma", 0, 10, "RTT", 10))
 
-    # 3-level page-table walk (+ data fetch)
+    # 3-level page-table walk (+ data fetch); populate is deterministic,
+    # so a scratch pool yields the same VA map as the endpoint's
     p = ops.PageTableWalk(fanout=16, n_pages=16)
-    rt = p.regions()
-    mem = memory.make_pool(1, rt)
-    vamap = p.populate(mem, rt)
+    rt0 = p.regions()
+    vamap = p.populate(memory.make_pool(1, rt0), rt0)
     va = next(iter(vamap.keys()))
-    vop = verify(p.build(rt), grant=Grant.all_of(rt), regions=rt)
-    res = pyvm.run(vop, rt, mem, [va], record_trace=True)
-    out.append(Row("table1/ptw3/tiara", 0, count_rtts(res.trace), "RTT", 1))
+    _, trace, _, _, _ = run_traced(p, p.build, [va])
+    out.append(Row("table1/ptw3/tiara", 0, count_rtts(trace), "RTT", 1))
     out.append(Row("table1/ptw3/rdma", 0, 4, "RTT", 4))
 
     # distributed lock + replication
     d = ops.DistLock()
-    rt = d.regions()
-    mem = memory.make_pool(3, rt)
-    memory.write_region(mem, rt, 0, "lock", [0, 0])
-    vop = verify(d.build(rt), grant=Grant.all_of(rt), regions=rt)
-    res = pyvm.run(vop, rt, mem, [0, 1, 9, 1, 1, 2, 1], record_trace=True)
-    out.append(Row("table1/dist_lock/tiara", 0, count_rtts(res.trace),
+
+    def lock_setup(mem, rt):
+        memory.write_region(mem, rt, 0, "lock", [0, 0])
+
+    _, trace, _, _, _ = run_traced(d, d.build, [0, 1, 9, 1, 1, 2, 1],
+                                   n_devices=3, setup_fn=lock_setup)
+    out.append(Row("table1/dist_lock/tiara", 0, count_rtts(trace),
                    "RTT", 2))
     out.append(Row("table1/dist_lock/rdma", 0, 5, "RTT", 5))
 
     # PagedAttention (unoptimized stop-and-wait vs optimally batched)
     k = ops.PagedKVFetch(n_blocks_pool=16, block_bytes=4096,
                          max_req_blocks=8)
-    rt = k.regions()
-    mem = memory.make_pool(2, rt)
-    k.populate(mem, rt)
-    k.make_request(mem, rt, [1, 3, 5, 7])
-    vop = verify(k.build(rt, remote_reply=True), grant=Grant.all_of(rt),
-                 regions=rt)
-    res = pyvm.run(vop, rt, mem, [4, 1], record_trace=True)
-    out.append(Row("table1/paged_attention/tiara", 0, count_rtts(res.trace, client_dev=1),
-                   "RTT", 1))
+
+    def kv_setup(mem, rt):
+        k.make_request(mem, rt, [1, 3, 5, 7])
+
+    _, trace, _, _, _ = run_traced(
+        k, lambda rt: k.build(rt, remote_reply=True), [4, 1],
+        n_devices=2, setup_fn=kv_setup)
+    out.append(Row("table1/paged_attention/tiara", 0,
+                   count_rtts(trace, client_dev=1), "RTT", 1))
     out.append(Row("table1/paged_attention/rdma_stop_and_wait", 0, 160,
                    "RTT", 160, note="LLaMA3-70B request, Yue et al."))
     out.append(Row("table1/paged_attention/rdma_batched", 0, 2, "RTT", 2))
 
     # MoE expert loading
     m = ops.MoEExpertGather(n_experts=16, max_k=8)
-    rt = m.regions()
-    mem = memory.make_pool(2, rt)
-    m.populate(mem, rt)
-    memory.write_region(mem, rt, 0, "expert_ids",
-                        np.asarray([2, 5], dtype=np.int64))
-    vop = verify(m.build(rt, remote_reply=True), grant=Grant.all_of(rt),
-                 regions=rt)
-    res = pyvm.run(vop, rt, mem, [2, 1], record_trace=True)
-    out.append(Row("table1/moe_gather/tiara", 0, count_rtts(res.trace, client_dev=1),
-                   "RTT", 1))
+
+    def moe_setup(mem, rt):
+        memory.write_region(mem, rt, 0, "expert_ids",
+                            np.asarray([2, 5], dtype=np.int64))
+
+    _, trace, _, _, _ = run_traced(
+        m, lambda rt: m.build(rt, remote_reply=True), [2, 1],
+        n_devices=2, setup_fn=moe_setup)
+    out.append(Row("table1/moe_gather/tiara", 0,
+                   count_rtts(trace, client_dev=1), "RTT", 1))
     out.append(Row("table1/moe_gather/rdma", 0, 2, "RTT", 2))
 
     # NSA score-then-select
     s = ops.NSASelect(n_scores=16, block_words=64)
-    rt = s.regions()
-    mem = memory.make_pool(1, rt)
-    s.populate(mem, rt)
-    vop = verify(s.build(rt), grant=Grant.all_of(rt), regions=rt)
-    res = pyvm.run(vop, rt, mem, [16, 50], record_trace=True)
-    out.append(Row("table1/nsa_select/tiara", 0, count_rtts(res.trace),
+    _, trace, _, _, _ = run_traced(s, s.build, [16, 50])
+    out.append(Row("table1/nsa_select/tiara", 0, count_rtts(trace),
                    "RTT", 1))
     out.append(Row("table1/nsa_select/rdma", 0, 2, "RTT", 2))
     return out

@@ -1,17 +1,21 @@
-"""Operator throughput: interpreter vs batch-parallel vs trace-compiled.
+"""Operator throughput through the endpoint: interp vs batched vs compiled.
 
 The paper's Fig. 7 point is that the NIC pipeline keeps many requests in
 flight, so *throughput*, not latency, is the headline.  This benchmark
-drives the software analogue: the 10-hop graph-traversal operator executed
+drives the software analogue through the queue-pair surface — the 10-hop
+graph-traversal operator posted to a ``Session`` and drained by
+``doorbell(mode=...)`` —
 
-  * one request per XLA launch on the single-request interpreter (the
+  * one request per doorbell on the single-request interpreter (the
     pre-batching engine — every launch pays dispatch + a 13-way switch
     per instruction),
-  * B requests per launch on the batch-parallel interpreter, and
-  * B requests per launch on the registration-time trace-compiled path
+  * B posts per doorbell on the batch-parallel interpreter, and
+  * B posts per doorbell on the registration-time trace-compiled path
     (no interpreter at all: straight-line gather chains).
 
-Wall-clock ops/s at B in {1, 64, 1024} are printed as rows and written to
+Timing includes the posting loop, so this is also the endpoint-overhead
+case the scheduled quick-bench job watches.  Wall-clock ops/s at B in
+{1, 64, 1024} are printed as rows and written to
 ``BENCH_vm_throughput.json`` for machine consumption.
 """
 
@@ -21,13 +25,8 @@ import json
 import os
 from typing import List
 
-import numpy as np
-
-from repro.core import compile as tc
-from repro.core import memory, vm
 from repro.core import operators as ops
-from repro.core.memory import Grant
-from repro.core.verifier import verify
+from repro.core.endpoint import TiaraEndpoint
 
 from benchmarks._workbench import Row, rate as _wb_rate
 
@@ -46,17 +45,18 @@ MIN_SECONDS = 0.3
 def _setup(max_batch: int):
     w = ops.GraphWalk(n_nodes=N_NODES, max_depth=MAX_DEPTH,
                       reply_words=max_batch * ops.NODE_WORDS)
-    rt = w.regions()
-    vop = verify(w.build(rt, reply_param=True), grant=Grant.all_of(rt),
-                 regions=rt)
-    mem = memory.make_pool(1, rt)
-    order = w.populate(mem, rt)
-    return w, rt, vop, mem, order
+    ep, sessions = TiaraEndpoint.for_tenants([("bench", w.regions())])
+    s = sessions["bench"]
+    prog = w.build(s.view, reply_param=True)
+    s.register(prog)
+    order = w.populate(s.pool, s.view)
+    return ep, s, prog.name, order
 
 
-def _params(order, batch: int):
-    return [[int(order[i % N_NODES]) * 8, DEPTH, i * ops.NODE_WORDS]
-            for i in range(batch)]
+def _post(s, name, order, batch: int):
+    for i in range(batch):
+        s.post(name, [int(order[i % N_NODES]) * 8, DEPTH,
+                      i * ops.NODE_WORDS])
 
 
 def _rate(fn, per_call_ops: int) -> tuple:
@@ -65,45 +65,38 @@ def _rate(fn, per_call_ops: int) -> tuple:
 
 def measure(quick: bool = False) -> List[dict]:
     batches = QUICK_BATCHES if quick else BATCHES
-    w, rt, vop, mem, order = _setup(max(batches))
+    ep, s, name, order = _setup(max(batches))
     out: List[dict] = []
 
-    # single-request interpreter: one launch per request
-    p1 = _params(order, 1)[0]
+    def wave(batch: int, mode: str):
+        _post(s, name, order, batch)
+        ep.doorbell(mode=mode)
+        s.poll_cq()
 
+    # single-request interpreter: one doorbell per request
     def interp_one():
-        vm.invoke(vop, rt, mem, p1)
+        wave(1, "interp")
 
     us, rate = _rate(interp_one, 1)
     base = rate
     out.append(dict(engine="interp", batch=1, us_per_call=us, ops_per_s=rate,
                     speedup_vs_interp=1.0))
 
-    for b in batches:
-        pb = _params(order, b)
+    for engine in ("batched", "compiled"):
+        for b in batches:
+            def call(b=b, engine=engine):
+                wave(b, engine)
 
-        def batched():
-            vm.invoke_batched(vop, rt, mem, pb)
-
-        us, rate = _rate(batched, b)
-        out.append(dict(engine="batched", batch=b, us_per_call=us,
-                        ops_per_s=rate, speedup_vs_interp=rate / base))
-
-    for b in batches:
-        pb = _params(order, b)
-
-        def compiled():
-            tc.invoke_compiled(vop, rt, mem, pb)
-
-        us, rate = _rate(compiled, b)
-        out.append(dict(engine="compiled", batch=b, us_per_call=us,
-                        ops_per_s=rate, speedup_vs_interp=rate / base))
+            us, rate = _rate(call, b)
+            out.append(dict(engine=engine, batch=b, us_per_call=us,
+                            ops_per_s=rate, speedup_vs_interp=rate / base))
     return out
 
 
 def rows(quick: bool = False) -> List[Row]:
     data = measure(quick=quick)
-    payload = dict(workload=f"graph_walk depth={DEPTH} n_nodes={N_NODES}",
+    payload = dict(workload=f"graph_walk depth={DEPTH} n_nodes={N_NODES} "
+                            f"via Session.post + doorbell",
                    unit="ops/s", results=data)
     with open(JSON_PATH, "w") as f:
         json.dump(payload, f, indent=1)

@@ -13,9 +13,8 @@ batched RDMA.
 import numpy as np
 
 from repro.core import costmodel as cm
-from repro.core import memory, pyvm, simulator as sim
-from repro.core.memory import Grant
-from repro.core.verifier import verify
+from repro.core import simulator as sim
+from repro.core.endpoint import TiaraEndpoint
 from repro.core import operators as ops
 
 N_NODES = 4
@@ -28,13 +27,16 @@ def main() -> None:
     k = ops.PagedKVFetch(n_blocks_pool=BLOCKS_PER_NODE,
                          block_bytes=BLOCK_BYTES,
                          max_req_blocks=REQ_BLOCKS)
-    rt = k.regions()
-    vop = verify(k.build(rt, remote_reply=True), grant=Grant.all_of(rt),
-                 regions=rt)
 
-    # devices 0..N-1 = memory nodes, device N = the compute node (client)
-    mem = memory.make_pool(N_NODES + 1, rt)
-    tables = [k.populate(mem, rt, device=d, seed=d) for d in range(N_NODES)]
+    # devices 0..N-1 = memory nodes, device N = the compute node
+    # (client); one endpoint owns the whole multi-node pool
+    ep, sessions = TiaraEndpoint.for_tenants([("kv", k.regions())],
+                                             n_devices=N_NODES + 1)
+    sess = sessions["kv"]
+    op_id = sess.register(k.build(sess.view, remote_reply=True))
+    vop = ep.registry[op_id].verified
+    for d in range(N_NODES):
+        k.populate(sess.pool, sess.view, device=d, seed=d)
 
     rng = np.random.default_rng(0)
     want = rng.integers(0, N_NODES * BLOCKS_PER_NODE, REQ_BLOCKS)
@@ -45,9 +47,8 @@ def main() -> None:
                if b // BLOCKS_PER_NODE == node][:REQ_BLOCKS]
         if not ids:
             continue
-        k.make_request(mem, rt, ids, device=node)
-        res = pyvm.run(vop, rt, mem, [len(ids), N_NODES], home=node,
-                       record_trace=True)
+        k.make_request(sess.pool, sess.view, ids, device=node)
+        res = sess.trace(op_id, [len(ids), N_NODES], home=node)
         assert res.status == 0 and res.ret == len(ids)
         ts = sim.simulate_task(vop, res.trace, pipelined=True,
                                serial_chain=False)

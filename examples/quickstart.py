@@ -1,24 +1,32 @@
-"""Quickstart: write a Tiara operator, verify it, run it, time it.
+"""Quickstart: write a Tiara operator, register it on an endpoint, post
+work to your queue pair, ring the doorbell, poll the completion.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The surface mirrors an RNIC: a ``TiaraEndpoint`` owns the memory pool
+and the dispatch table; ``connect()`` gives each tenant a ``Session``
+(queue pair) with its regions and grant wired automatically;
+``Session.post`` enqueues pre-registered operator invocations; one
+``doorbell()`` drains every session's posts as a single batched wave.
 """
 
-import numpy as np
-
 from repro.core import costmodel as cm
-from repro.core import memory, pyvm, simulator as sim
-from repro.core.frontend import compile_source
-from repro.core.memory import Grant
-from repro.core.registry import OperatorRegistry
+from repro.core import simulator as sim
 from repro.core import operators as ops
+from repro.core.endpoint import TiaraEndpoint
+from repro.core.frontend import compile_source
 
 
 def main() -> None:
     # A disaggregated memory node: a graph region and a reply region.
     w = ops.GraphWalk(n_nodes=4096, max_depth=64)
-    regions = w.regions()
 
-    # 1. Write the operator in the restricted source subset (paper §3.3).
+    # 1. Stand up the endpoint (it owns the pool) and connect: the
+    #    tenant's regions, view, and grant are wired in one call.
+    ep, sessions = TiaraEndpoint.for_tenants([("quickstart", w.regions())])
+    sess = sessions["quickstart"]
+
+    # 2. Write the operator in the restricted source subset (paper §3.3).
     program = compile_source('''
 def walk(start, depth):
     cur = start
@@ -26,31 +34,39 @@ def walk(start, depth):
         cur = load("graph", cur + 1)     # the loaded value IS the next
     memcpy("reply", 0, "graph", cur, 8)  # address: register-chained loads
     return load("graph", cur)
-''', regions=regions)
+''', regions=sess.view)
     print("compiled operator:")
     print(program.disassemble(), "\n")
 
-    # 2. Register it: compile -> static verification -> op_id.
-    registry = OperatorRegistry(regions)
-    registry.add_tenant(Grant.all_of(regions, "quickstart"))
-    op_id = registry.register("quickstart", program)
-    vop = registry[op_id].verified
+    # 3. Register it: compile -> static verification against the
+    #    session's grant -> op_id in the endpoint's dispatch table.
+    op_id = sess.register(program)
+    vop = ep.registry[op_id].verified
     print(f"registered as op {op_id}; proven step bound = "
           f"{vop.step_bound}, loop depth = {vop.max_loop_depth}\n")
 
-    # 3. Populate the memory node and invoke (one message, one reply).
-    mem = memory.make_pool(1, regions)
-    order = w.populate(mem, regions)
+    # 4. Populate the memory node and post work to the queue pair.  The
+    #    doorbell drains the send queue as one wave; completions land in
+    #    the session's completion queue.
+    order = w.populate(sess.pool, sess.view)
     start, depth = int(order[0]) * 8, 24
-    result = registry.invoke(op_id, mem, [start, depth])
+    completion = sess.post("walk", [start, depth])
+    ep.doorbell()
+    (done,) = sess.poll_cq()
+    assert done is completion and completion.done
     expect = w.reference(order, int(order[0]), depth)
-    print(f"walk(depth={depth}) -> {result.ret} "
-          f"(reference {expect}, steps {result.steps})")
-    assert result.ret == expect
+    print(f"walk(depth={depth}) -> {completion.result()} "
+          f"(reference {expect}, steps {completion.steps})")
+    assert completion.result() == expect
 
-    # 4. What did it cost?  Cycle-level NIC timing vs one-sided RDMA.
-    trace = pyvm.run(vop, regions, mem.copy(), [start, depth],
-                     record_trace=True).trace
+    # ... or let the handle flush for you: result() rings the doorbell
+    # if the post is still outstanding.
+    assert sess.post("walk", [start, 12]).result() == \
+        w.reference(order, int(order[0]), 12)
+
+    # 5. What did it cost?  Cycle-level NIC timing vs one-sided RDMA
+    #    (Session.trace replays the invocation on the pyvm oracle).
+    trace = sess.trace("walk", [start, depth]).trace
     ts = sim.simulate_task(vop, trace)
     print(f"\nTiara:  {ts.latency_us:6.2f} us  (1 round trip + "
           f"{depth} local DMA hops)")

@@ -1,0 +1,431 @@
+"""Queue-pair endpoint — the one way to invoke Tiara operators.
+
+The paper's execution model is an RNIC, not a function call: clients
+*post* pre-registered operator invocations to per-tenant queue pairs and
+poll completions, while the NIC decides how to batch whatever is sitting
+in the queues.  This module is that surface in software:
+
+  * :class:`TiaraEndpoint` models one NIC plus its attached memory blade.
+    It owns the region table, the ``(n_devices, pool_words)`` pool, and
+    the operator registry — callers never thread a raw numpy pool
+    through invocations again.
+  * :meth:`TiaraEndpoint.connect` admits a tenant: the tenant's region
+    layout is re-registered under its namespace in the shared pool, a
+    :class:`~repro.core.memory.RegionView` and a full
+    :class:`~repro.core.memory.Grant` over exactly those regions are
+    wired automatically, and the tenant gets back a :class:`Session` —
+    its queue pair.
+  * :meth:`Session.post` enqueues one operator invocation on the send
+    queue and returns a :class:`Completion` handle immediately; nothing
+    executes yet.
+  * :meth:`TiaraEndpoint.doorbell` drains *all* sessions' outstanding
+    posts into one wave in global arrival order and runs it through the
+    mixed-batch planner + dispatch cost model (one XLA launch for the
+    whole multi-tenant wave in the common case).  Results retire into
+    per-session completion queues in per-session FIFO order; contended
+    STORE/CAS posts keep the engines' deterministic
+    lowest-arrival-index-wins semantics because the wave *is* the
+    arrival order.
+  * :meth:`Session.poll_cq` / :meth:`Completion.result` are the receive
+    side.  ``result()`` rings the doorbell on demand, so single-request
+    control-path code stays one line.
+
+An optional ``flush_watermark`` auto-rings the doorbell once that many
+posts are outstanding across all sessions — the NIC analogue of a
+doorbell-batching driver.
+
+The legacy ``registry.invoke*`` entry points survive one release as
+deprecated shims; everything in ``examples/`` and ``benchmarks/`` goes
+through this surface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import isa, memory, pyvm, vm
+from repro.core import registry as _registry
+from repro.core.costmodel import DispatchCostModel
+from repro.core.memory import Grant, RegionTable, RegionView
+from repro.core.program import TiaraProgram
+from repro.core.registry import OperatorRegistry
+
+# the wave/engine mode vocabularies are the registry's — one source of
+# truth, the endpoint only adds the single-request "interp" spelling
+_WAVE_MODES = _registry._MIXED_MODES
+_SINGLE_OP_MODES = tuple(m for m in _registry._BATCHED_MODES
+                         if m != "auto")
+_SINGLE_REQ_MODES = ("interp",)
+DOORBELL_MODES = _WAVE_MODES + _SINGLE_OP_MODES + _SINGLE_REQ_MODES
+
+
+class EndpointError(Exception):
+    pass
+
+
+@dataclasses.dataclass(eq=False)
+class Completion:
+    """Handle for one posted invocation (one CQE once retired).
+    Identity equality: two handles are the same completion only if they
+    are the same object (value comparison over the regs array would be
+    meaningless for a handle).
+
+    ``seq`` is the global arrival index — the deterministic position of
+    this post in the next wave.  Until :meth:`done`, the result fields
+    hold zeros; :meth:`result` rings the owning endpoint's doorbell on
+    demand so callers never have to flush by hand.
+    """
+
+    session: "Session" = dataclasses.field(repr=False)
+    seq: int
+    op_id: int
+    op_name: str
+    params: Tuple[int, ...]
+    home: int
+    done: bool = False
+    ret: int = 0
+    status: int = 0
+    steps: int = 0
+    regs: Optional[np.ndarray] = dataclasses.field(default=None, repr=False)
+
+    @property
+    def ok(self) -> bool:
+        return self.done and self.status == isa.STATUS_OK
+
+    def result(self, *, flush: bool = True, check: bool = True) -> int:
+        """The operator's return value, ringing the doorbell if this
+        post is still outstanding (``flush=False`` raises instead).
+
+        With ``check=True`` (default) a non-OK status raises — like an
+        RNIC CQE error — so failures can't masquerade as values; pass
+        ``check=False`` (or read ``.ret``/``.status``/``.ok`` directly)
+        for operators whose failure status is an expected outcome
+        (e.g. a busy lock)."""
+        if not self.done:
+            if not flush:
+                raise EndpointError(
+                    f"completion for {self.op_name!r} (seq {self.seq}) "
+                    f"still outstanding; ring doorbell() first")
+            self.session.endpoint.doorbell()
+        # result() is a consuming read: drop this CQE from the session's
+        # completion queue so a later poll_cq() doesn't deliver it twice
+        try:
+            self.session._cq.remove(self)
+        except ValueError:
+            pass
+        if check and self.status != isa.STATUS_OK:
+            raise EndpointError(
+                f"op {self.op_name!r} (seq {self.seq}) completed with "
+                f"status {self.status} (ret {self.ret}); use "
+                f"result(check=False) or .ret/.status for expected "
+                f"failures")
+        return self.ret
+
+
+class Session:
+    """One tenant's queue pair: a send queue of posted invocations and a
+    completion queue of retired ones, both FIFO in post order."""
+
+    def __init__(self, endpoint: "TiaraEndpoint", tenant: str,
+                 view: RegionView, grant: Grant):
+        self.endpoint = endpoint
+        self.tenant = tenant
+        self.view = view
+        self.grant = grant
+        self._ops: Dict[str, int] = {}
+        self._sq: List[Completion] = []      # posted, not yet drained
+        self._cq: List[Completion] = []      # retired, not yet polled
+
+    # -- control path ---------------------------------------------------
+
+    def register(self, program: TiaraProgram) -> int:
+        """Register an operator (compile output -> verify against this
+        tenant's grant -> op_id); remembered by ``program.name`` so posts
+        can use the name."""
+        op_id = self.endpoint.registry.register(self.tenant, program)
+        self._ops[program.name] = op_id
+        return op_id
+
+    def op_id(self, name: str) -> int:
+        return self._ops[name]
+
+    @property
+    def pool(self) -> np.ndarray:
+        """The endpoint's pool, writable — for host-side (control path)
+        population through this tenant's :attr:`view`.
+
+        Do NOT hold the returned array across a doorbell: every wave
+        rebinds the endpoint's pool to the engine's output, so a stale
+        reference reads/writes an orphaned copy.  Re-fetch ``.pool``
+        (or use :meth:`write_region`/:meth:`read_region`) after each
+        doorbell."""
+        return self.endpoint.host_mem()
+
+    def write_region(self, region: str, data: Sequence[int], *,
+                     device: int = 0, offset: int = 0) -> None:
+        memory.write_region(self.endpoint.host_mem(), self.view, device,
+                            region, data, offset=offset)
+
+    def read_region(self, region: str, *, device: int = 0, offset: int = 0,
+                    count: Optional[int] = None) -> np.ndarray:
+        return memory.read_region(self.endpoint.mem, self.view, device,
+                                  region, offset=offset, count=count)
+
+    # -- data path ------------------------------------------------------
+
+    def _resolve(self, op: Union[str, int]) -> Tuple[int, str]:
+        """Name or op_id -> (op_id, name), rejecting other tenants' slots:
+        a queue pair may only post operators registered through it."""
+        if isinstance(op, str):
+            return self._ops[op], op
+        op_id = int(op)
+        slot = self.endpoint.registry[op_id]
+        if slot.tenant != self.tenant:
+            raise EndpointError(
+                f"op {op_id} belongs to tenant {slot.tenant!r}; session "
+                f"{self.tenant!r} cannot post it")
+        return op_id, slot.verified.program.name
+
+    def post(self, op: Union[str, int], params: Sequence[int] = (), *,
+             home: int = 0) -> Completion:
+        """Enqueue one invocation; returns its completion handle.  No
+        execution happens until a doorbell (explicit, watermark, or
+        ``Completion.result()``)."""
+        op_id, name = self._resolve(op)
+        c = Completion(session=self, seq=self.endpoint._next_seq(),
+                       op_id=op_id, op_name=name,
+                       params=tuple(int(p) for p in params), home=int(home))
+        self._sq.append(c)
+        self.endpoint._posted(c)
+        return c
+
+    @property
+    def outstanding(self) -> int:
+        return len(self._sq)
+
+    def poll_cq(self, n: Optional[int] = None) -> List[Completion]:
+        """Pop up to ``n`` retired completions (all of them by default)
+        in per-session FIFO order."""
+        n = len(self._cq) if n is None else \
+            max(0, min(int(n), len(self._cq)))
+        out, self._cq = self._cq[:n], self._cq[n:]
+        return out
+
+    # -- oracle / simulator path ----------------------------------------
+
+    def trace(self, op: Union[str, int], params: Sequence[int] = (), *,
+              home: int = 0, record_trace: bool = True) -> pyvm.Result:
+        """Run one invocation on the ``pyvm`` oracle against the
+        endpoint's pool (in place), recording the event trace the cycle
+        simulator replays.  This is the control-path debugging/timing
+        entry point; the data path is :meth:`post` + doorbell."""
+        op_id, _ = self._resolve(op)
+        slot = self.endpoint.registry[op_id]
+        return pyvm.run(slot.verified, self.endpoint.regions,
+                        self.endpoint.host_mem(), list(params), home=home,
+                        record_trace=record_trace)
+
+
+class TiaraEndpoint:
+    """One NIC + memory blade: region table, pool, registry, doorbell.
+
+    ``pool_words`` is the capacity of the attached DRAM; tenants carve
+    regions out of it at :meth:`connect` time (registration order, each
+    region naturally aligned).  ``flush_watermark`` auto-rings the
+    doorbell when that many posts are outstanding across all sessions.
+    """
+
+    def __init__(self, pool_words: int, *, n_devices: int = 1,
+                 flush_watermark: Optional[int] = None,
+                 max_steps: Optional[int] = None,
+                 cost_model: Optional[DispatchCostModel] = None,
+                 sep: str = "/"):
+        self.regions = RegionTable(pool_words)
+        self.registry = OperatorRegistry(self.regions, n_devices=n_devices,
+                                         max_steps=max_steps,
+                                         cost_model=cost_model)
+        self.n_devices = int(n_devices)
+        self.mem = memory.make_pool(n_devices, self.regions)
+        self.flush_watermark = flush_watermark
+        self.sep = sep
+        self._sessions: Dict[str, Session] = {}
+        self._seq = 0
+        self._outstanding = 0
+
+    @classmethod
+    def for_tenants(cls, named: Sequence[Tuple[str, RegionTable]], *,
+                    n_devices: int = 1, sep: str = "/", **kwargs
+                    ) -> Tuple["TiaraEndpoint", Dict[str, Session]]:
+        """Build an endpoint sized exactly for the given per-tenant
+        region layouts and connect every tenant — the one-call setup for
+        examples, benchmarks, and tests."""
+        cursor = 0
+        for _, table in named:
+            cursor = memory.aligned_end(cursor, table)
+        ep = cls(max(cursor, 1), n_devices=n_devices, sep=sep, **kwargs)
+        sessions = {tenant: ep.connect(tenant, table)
+                    for tenant, table in named}
+        return ep, sessions
+
+    # -- tenants --------------------------------------------------------
+
+    def connect(self, tenant: str, regions: RegionTable) -> Session:
+        """Admit a tenant: re-register its region layout under
+        ``tenant/<name>`` in the shared pool, wire up its view + grant,
+        and hand back its queue pair."""
+        if self.sep in tenant:
+            raise EndpointError(
+                f"tenant name {tenant!r} must not contain {self.sep!r}")
+        if tenant in self._sessions:
+            raise EndpointError(f"tenant {tenant!r} already connected")
+        # admission is all-or-nothing: check capacity BEFORE registering
+        # anything (RegionTable has no unregister, so a mid-layout
+        # failure would leak the tenant's earlier regions forever)
+        need = memory.aligned_end(self.regions.high_water, regions)
+        if need > self.regions.pool_words:
+            raise EndpointError(
+                f"cannot admit tenant {tenant!r}: layout needs "
+                f"{need} words, pool has {self.regions.pool_words}")
+        for r in regions:
+            try:
+                self.regions.register(f"{tenant}{self.sep}{r.name}",
+                                      r.size, writable=r.writable)
+            except ValueError as e:
+                raise EndpointError(
+                    f"cannot admit tenant {tenant!r}: {e}") from e
+        view = RegionView(self.regions, f"{tenant}{self.sep}")
+        grant = Grant.all_of(view, tenant)
+        self.registry.add_tenant(grant)
+        session = Session(self, tenant, view, grant)
+        self._sessions[tenant] = session
+        return session
+
+    def session(self, tenant: str) -> Session:
+        return self._sessions[tenant]
+
+    def host_mem(self) -> np.ndarray:
+        """The pool, guaranteed host-writable for control-path access.
+
+        After a doorbell the pool may be a read-only view of the last
+        launch's device buffer; the copy happens lazily here, so the
+        data path never pays for it."""
+        if not self.mem.flags.writeable:
+            self.mem = self.mem.copy()
+        return self.mem
+
+    @property
+    def sessions(self) -> Dict[str, Session]:
+        return dict(self._sessions)
+
+    # -- doorbell (the data path) ----------------------------------------
+
+    def _next_seq(self) -> int:
+        s = self._seq
+        self._seq += 1
+        return s
+
+    def _posted(self, c: Completion) -> None:
+        self._outstanding += 1
+        if self.flush_watermark is not None and \
+                self._outstanding >= self.flush_watermark:
+            try:
+                self.doorbell()
+            except BaseException:
+                # post() must be atomic: if the auto-ring fails, cancel
+                # the triggering post (the doorbell failure path already
+                # re-queued the wave, including it) so the caller, who
+                # gets the exception instead of a handle, can re-post
+                # without risking double execution
+                c.session._sq.remove(c)
+                self._outstanding -= 1
+                raise
+
+    @property
+    def outstanding(self) -> int:
+        return self._outstanding
+
+    def doorbell(self, *, mode: str = "auto",
+                 contention_rate: float = 0.0) -> int:
+        """Drain every session's outstanding posts into one wave (global
+        arrival order) and retire the results into per-session CQs.
+
+        ``mode`` picks the wave engine: the mixed-dispatch set
+        ("auto"/"mixed"/"segmented"/"serial") for any wave, "batched"/
+        "compiled" for single-op waves, "interp" for a single-request
+        wave — which makes the endpoint the one surface that can drive
+        every engine (the benchmarks rely on this).  Returns the number
+        of completions retired."""
+        if mode not in DOORBELL_MODES:
+            raise ValueError(
+                f"unknown mode {mode!r}; expected one of "
+                f"{list(DOORBELL_MODES)}")
+        wave: List[Completion] = []
+        for s in self._sessions.values():
+            wave.extend(s._sq)
+            s._sq = []
+        self._outstanding = 0
+        if not wave:
+            return 0
+        wave.sort(key=lambda c: c.seq)
+        ids = [c.op_id for c in wave]
+        params = [list(c.params) for c in wave]
+        homes = [c.home for c in wave]
+        reg = self.registry
+        try:
+            if mode in _WAVE_MODES:
+                res = reg._invoke_mixed(ids, self.mem, params, homes=homes,
+                                        mode=mode,
+                                        contention_rate=contention_rate)
+            elif mode in _SINGLE_OP_MODES:
+                if len(set(ids)) != 1:
+                    raise EndpointError(
+                        f"mode {mode!r} needs a single-op wave; got op_ids "
+                        f"{sorted(set(ids))}")
+                res = reg._invoke_batched(ids[0], self.mem, params,
+                                         homes=homes, mode=mode)
+            else:  # "interp"
+                if len(wave) != 1:
+                    raise EndpointError(
+                        f"mode 'interp' needs a single-request wave; got "
+                        f"{len(wave)} posts")
+                r = reg._invoke(ids[0], self.mem, params[0], home=homes[0],
+                                mode="interp")
+                res = vm.BatchedInvokeResult(
+                    mem=r.mem, ret=np.asarray([r.ret], dtype=np.int64),
+                    status=np.asarray([r.status], dtype=np.int64),
+                    steps=np.asarray([r.steps], dtype=np.int64),
+                    regs=np.asarray(r.regs, dtype=np.int64)[None, :])
+        except BaseException:
+            # a failed doorbell must not drop the send queues: re-post
+            # the wave untouched (it is seq-sorted, and nothing can have
+            # posted concurrently), so the caller can ring again
+            for c in wave:
+                c.session._sq.append(c)
+            self._outstanding = len(wave)
+            raise
+        self.mem = res.mem
+        for i, c in enumerate(wave):
+            c.ret = int(res.ret[i])
+            c.status = int(res.status[i])
+            c.steps = int(res.steps[i])
+            c.regs = np.asarray(res.regs[i])
+            c.done = True
+            c.session._cq.append(c)
+        return len(wave)
+
+    @property
+    def last_decision(self):
+        """The wave-level dispatch decision of the most recent doorbell
+        that went through the cost model (audit hook)."""
+        return self.registry.last_decision
+
+    def dump(self) -> str:
+        lines = [f"endpoint: {len(self._sessions)} sessions, "
+                 f"{len(self.registry)} ops, pool "
+                 f"{self.n_devices}x{self.regions.pool_words} words, "
+                 f"{self._outstanding} outstanding"]
+        lines.append(self.registry.dump())
+        return "\n".join(lines)

@@ -27,6 +27,17 @@ def _is_pow2(x: int) -> bool:
     return x > 0 and (x & (x - 1)) == 0
 
 
+def align_base(cursor: int, size: int) -> int:
+    """First naturally aligned base >= ``cursor`` for a region of
+    ``size`` words — THE alignment rule; every allocation walk
+    (``RegionTable.register``, ``packed_table``, ``aligned_end``)
+    shares it so capacity pre-checks can never diverge from the
+    allocator."""
+    if size <= 0:
+        return cursor
+    return (cursor + size - 1) & ~(size - 1)
+
+
 @dataclasses.dataclass(frozen=True)
 class Region:
     """A registered memory window (word granularity, power-of-two size)."""
@@ -74,10 +85,10 @@ class RegionTable:
             raise ValueError(f"region {name!r} already registered")
         if base is None:
             base = self.high_water
-            if align and size_words > 0:
+            if align:
                 # Align the base to the region size so wrapped offsets stay
                 # inside naturally aligned hardware pages.
-                base = (base + size_words - 1) & ~(size_words - 1)
+                base = align_base(base, size_words)
         region = Region(rid=len(self._regions), name=name, base=base,
                         size=size_words, writable=writable)
         if region.end > self.pool_words:
@@ -236,6 +247,17 @@ def merge_tables(named: Sequence[Tuple[str, RegionTable]], *,
     return combined, views
 
 
+def aligned_end(cursor: int, regions: Iterable[Region]) -> int:
+    """Pool end after appending ``regions`` at ``cursor`` with the same
+    naturally-aligned walk :meth:`RegionTable.register` performs (every
+    :class:`Region` size is a power of two >= 1 by construction).  The
+    one place capacity pre-checks (e.g. endpoint tenant admission) and
+    the allocator share the alignment rule."""
+    for r in regions:
+        cursor = align_base(cursor, r.size) + r.size
+    return cursor
+
+
 def next_pow2(x: int) -> int:
     return 1 << max(int(x) - 1, 0).bit_length()
 
@@ -248,7 +270,7 @@ def packed_table(specs: Sequence[Tuple[str, int]], *,
     layout = []
     specs = [(name, next_pow2(size)) for name, size in specs]
     for name, size in specs:
-        base = (cursor + size - 1) & ~(size - 1) if size > 0 else cursor
+        base = align_base(cursor, size)
         layout.append((name, base, size))
         cursor = base + size
     rt = RegionTable(pool_words=cursor + extra_words)

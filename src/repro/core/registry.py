@@ -8,11 +8,12 @@ get a slot.  Registration is also the trace-compile moment: the slot
 records whether the operator's CFG admits the interpreter-free fast path
 (``core/compile``), so the data path can dispatch with no further checks.
 
-``invoke()`` is the single-request data path — O(1) dispatch, no checks.
-``invoke_batched()`` is the line-rate path: B requests share one XLA
-launch.  ``invoke_mixed()`` is the *multi-tenant* line-rate path: a wave
-whose requests carry per-request op_ids runs either through the mixed
-lockstep engine (one launch over the merged instruction store, each
+The data path is *internal* engine plumbing behind the queue-pair
+endpoint surface (``core/endpoint``): ``_invoke()`` is single-request
+O(1) dispatch, ``_invoke_batched()`` the line-rate path (B requests, one
+XLA launch), and ``_invoke_mixed()`` the *multi-tenant* line-rate path: a
+wave whose requests carry per-request op_ids runs either through the
+mixed lockstep engine (one launch over the merged instruction store, each
 request entering at its slot's ``start_pc`` — the hardware dispatch
 table in software) or stable-sorted into same-op segments through the
 compiled traces, with per-request outputs scattered back to arrival
@@ -21,6 +22,12 @@ order.  All ``mode="auto"`` choices go through the analytical
 function of batch size, trace length, op-mix entropy, and the caller's
 contention-rate hint, not a hardcoded preference.
 
+The un-prefixed ``invoke``/``invoke_batched``/``invoke_mixed`` methods
+are **deprecated shims** (one release): new code posts work to a
+:class:`~repro.core.endpoint.Session` and rings
+:meth:`~repro.core.endpoint.TiaraEndpoint.doorbell`, which owns the pool
+and calls the internal engines here.
+
 The instruction stores are per-MP BRAMs of 1024 entries; we model one
 shared store and enforce the aggregate capacity.
 """
@@ -28,6 +35,7 @@ shared store and enforce the aggregate capacity.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence, Set, Union
 
 import numpy as np
@@ -179,10 +187,34 @@ class OperatorRegistry:
             raise ValueError(
                 f"unknown mode {mode!r}; expected one of {list(allowed)}")
 
-    def invoke(self, op_id: int, mem: np.ndarray,
-               params: Sequence[int] = (), *, home: int = 0,
-               failed: Optional[Set[int]] = None,
-               mode: str = "interp") -> vm.InvokeResult:
+    _DEPRECATION = (
+        "registry.{name}() is deprecated: post work to a TiaraEndpoint "
+        "Session and ring doorbell() (repro.core.endpoint); this shim "
+        "will be removed next release")
+
+    def _deprecated(self, name: str) -> None:
+        warnings.warn(self._DEPRECATION.format(name=name),
+                      DeprecationWarning, stacklevel=3)
+
+    def invoke(self, *args, **kwargs) -> vm.InvokeResult:
+        """Deprecated shim for :meth:`_invoke`."""
+        self._deprecated("invoke")
+        return self._invoke(*args, **kwargs)
+
+    def invoke_batched(self, *args, **kwargs) -> vm.BatchedInvokeResult:
+        """Deprecated shim for :meth:`_invoke_batched`."""
+        self._deprecated("invoke_batched")
+        return self._invoke_batched(*args, **kwargs)
+
+    def invoke_mixed(self, *args, **kwargs) -> vm.BatchedInvokeResult:
+        """Deprecated shim for :meth:`_invoke_mixed`."""
+        self._deprecated("invoke_mixed")
+        return self._invoke_mixed(*args, **kwargs)
+
+    def _invoke(self, op_id: int, mem: np.ndarray,
+                params: Sequence[int] = (), *, home: int = 0,
+                failed: Optional[Set[int]] = None,
+                mode: str = "interp") -> vm.InvokeResult:
         """Single-request dispatch.  ``mode``: "interp" (default — the
         classic MP datapath), "compiled" (trace-compiled fast path), or
         "auto" (cost-model pick between the two)."""
@@ -207,13 +239,13 @@ class OperatorRegistry:
                                status=int(r.status[0]),
                                steps=int(r.steps[0]), regs=r.regs[0])
 
-    def invoke_batched(self, op_id: int, mem: np.ndarray,
-                       params: Sequence[Sequence[int]], *,
-                       homes: Union[int, Sequence[int]] = 0,
-                       failed: Optional[Set[int]] = None,
-                       mode: str = "auto",
-                       contention_rate: float = 0.0
-                       ) -> vm.BatchedInvokeResult:
+    def _invoke_batched(self, op_id: int, mem: np.ndarray,
+                        params: Sequence[Sequence[int]], *,
+                        homes: Union[int, Sequence[int]] = 0,
+                        failed: Optional[Set[int]] = None,
+                        mode: str = "auto",
+                        contention_rate: float = 0.0
+                        ) -> vm.BatchedInvokeResult:
         """Line-rate dispatch: B requests, one XLA launch.  ``mode``:
         "auto" (cost-model pick), "batched" (force the lockstep
         interpreter — always exact, even under contention), or
@@ -265,13 +297,13 @@ class OperatorRegistry:
                     v, self.regions, n_dev, seg.size)))
         return out
 
-    def invoke_mixed(self, op_ids: Sequence[int], mem: np.ndarray,
-                     params: Sequence[Sequence[int]], *,
-                     homes: Union[int, Sequence[int]] = 0,
-                     failed: Optional[Set[int]] = None,
-                     mode: str = "auto",
-                     contention_rate: float = 0.0
-                     ) -> vm.BatchedInvokeResult:
+    def _invoke_mixed(self, op_ids: Sequence[int], mem: np.ndarray,
+                      params: Sequence[Sequence[int]], *,
+                      homes: Union[int, Sequence[int]] = 0,
+                      failed: Optional[Set[int]] = None,
+                      mode: str = "auto",
+                      contention_rate: float = 0.0
+                      ) -> vm.BatchedInvokeResult:
         """Dispatch a wave whose requests carry *per-request* op_ids.
 
         ``mode``:
@@ -290,8 +322,9 @@ class OperatorRegistry:
                        dispatcher without mixed batching must do; a fully
                        interleaved wave degenerates to one launch per
                        request.
-          "auto"       single-op waves delegate to :meth:`invoke_batched`;
-                       genuinely mixed waves go to the cost model.
+          "auto"       single-op waves delegate to
+                       :meth:`_invoke_batched`; genuinely mixed waves go
+                       to the cost model.
         """
         self._check_mode(mode, _MIXED_MODES)
         ids = np.asarray(list(op_ids), dtype=np.int64)
@@ -306,7 +339,7 @@ class OperatorRegistry:
         decision = None
         if mode == "auto":
             if plan.n_segments == 1:
-                return self.invoke_batched(
+                return self._invoke_batched(
                     int(ids[0]), mem, params, homes=homes, failed=failed,
                     mode="auto", contention_rate=contention_rate)
             n_dev = int(mem.shape[0])
@@ -366,7 +399,7 @@ class OperatorRegistry:
         mem_cur = mem
         for op_id, idx in groups:
             idx = np.asarray(idx)
-            r = self.invoke_batched(
+            r = self._invoke_batched(
                 int(op_id), mem_cur, [list(params[i]) for i in idx],
                 homes=[int(h[i]) for i in idx], failed=failed, mode="auto",
                 contention_rate=contention_rate)

@@ -1,0 +1,23 @@
+"""Small shims over jax API drift, so version checks live in one place.
+
+The container pins jax 0.4.37; newer APIs used by the launch/distributed
+code get a portable spelling here.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+
+def mesh_context(mesh):
+    """The ambient-mesh context manager across jax versions:
+    ``jax.set_mesh`` where it exists (>= 0.6), else the mesh itself
+    (``with mesh:`` — the 0.4.x spelling)."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+
+
+def axis_size(a):
+    """``lax.axis_size`` landed after 0.4.x; ``psum(1, axis)`` is the
+    portable form (valid inside shard_map/pmap collectives)."""
+    return lax.axis_size(a) if hasattr(lax, "axis_size") else lax.psum(1, a)

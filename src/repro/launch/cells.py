@@ -29,6 +29,9 @@ from repro.training.optimizer import AdamWConfig, AdamWState, warmup_cosine
 from repro.training.train_step import TrainState, make_train_step
 
 
+from repro.jaxcompat import mesh_context
+
+
 @dataclasses.dataclass
 class Cell:
     cfg: ArchConfig
@@ -255,5 +258,5 @@ def lower_cell(cell: Cell, mesh):
         else None
     jitted = jax.jit(cell.fn, in_shardings=in_sh, out_shardings=out_sh,
                      donate_argnums=cell.donate)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         return jitted.lower(*cell.args)

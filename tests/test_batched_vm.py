@@ -326,15 +326,15 @@ def test_registry_slot_entry_points():
     mem = memory.make_pool(1, rt)
     order = w.populate(mem, rt)
     params = [[int(order[i]) * 8, 3, i * ops.NODE_WORDS] for i in range(4)]
-    r_int = reg.invoke_batched(op_id, mem, params, mode="batched")
-    r_cmp = reg.invoke_batched(op_id, mem, params, mode="compiled")
-    r_auto = reg.invoke_batched(op_id, mem, params, mode="auto")
+    r_int = reg._invoke_batched(op_id, mem, params, mode="batched")
+    r_cmp = reg._invoke_batched(op_id, mem, params, mode="compiled")
+    r_auto = reg._invoke_batched(op_id, mem, params, mode="auto")
     for r in (r_cmp, r_auto):
         assert np.array_equal(r_int.ret, r.ret)
         assert np.array_equal(r_int.mem, r.mem)
     # single-request modes agree too
-    r1 = reg.invoke(op_id, mem, params[0], mode="interp")
-    r2 = reg.invoke(op_id, mem, params[0], mode="compiled")
+    r1 = reg._invoke(op_id, mem, params[0], mode="interp")
+    r2 = reg._invoke(op_id, mem, params[0], mode="compiled")
     assert (r1.ret, r1.status, r1.steps) == (r2.ret, r2.status, r2.steps)
     assert np.array_equal(r1.mem, r2.mem)
     assert "compiled" in reg.dump()
@@ -424,7 +424,7 @@ def test_mixed_batch_parity_all_stock_ops():
         stats.append(r.status)
         steps.append(r.steps)
     for mode in ("mixed", "segmented", "serial", "auto"):
-        res = reg.invoke_mixed(ids, mem, params, mode=mode)
+        res = reg._invoke_mixed(ids, mem, params, mode=mode)
         assert_batch_matches(res, seq, np.array(rets), np.array(stats),
                              np.array(steps))
 
@@ -487,7 +487,7 @@ def test_registry_interp_fallback_for_uncompilable():
     assert not slot.compilable and "unroll" in slot.compile_reason
     mem = memory.make_pool(1, rt)
     mem[0, :1024] = np.arange(1024)
-    res = reg.invoke_batched(op_id, mem, [[0], [0]], mode="auto")
+    res = reg._invoke_batched(op_id, mem, [[0], [0]], mode="auto")
     assert np.all(res.status == isa.STATUS_OK)
     with pytest.raises(Exception):
         slot.compiled(mem, [[0]])

@@ -186,13 +186,13 @@ def test_registry_mode_validation():
     op_id = reg.register("t", _tiny_program("p", rt))
     mem = memory.make_pool(1, rt)
     with pytest.raises(ValueError, match="unknown mode"):
-        reg.invoke(op_id, mem, mode="batched")
+        reg._invoke(op_id, mem, mode="batched")
     with pytest.raises(ValueError, match="unknown mode"):
-        reg.invoke_batched(op_id, mem, [[]], mode="interp")
+        reg._invoke_batched(op_id, mem, [[]], mode="interp")
     with pytest.raises(ValueError, match="unknown mode"):
-        reg.invoke_mixed([op_id], mem, [[]], mode="compiled")
+        reg._invoke_mixed([op_id], mem, [[]], mode="compiled")
     with pytest.raises(ValueError, match="unknown mode"):
-        reg.invoke_batched(op_id, mem, [[]], mode="Auto")
+        reg._invoke_batched(op_id, mem, [[]], mode="Auto")
 
 
 def test_registry_duplicate_key_rejected():
@@ -248,13 +248,13 @@ def test_invoke_mixed_validation_and_delegation():
     op_id = reg.register("t", b.build())
     mem = memory.make_pool(1, rt)
     with pytest.raises(ValueError, match="does not match"):
-        reg.invoke_mixed([op_id], mem, [[1], [2]])
+        reg._invoke_mixed([op_id], mem, [[1], [2]])
     with pytest.raises(KeyError):
-        reg.invoke_mixed([op_id, 99], mem, [[1], [2]])
+        reg._invoke_mixed([op_id, 99], mem, [[1], [2]])
     # single-op wave under "auto" delegates to the single-op dispatcher
-    r_mixed = reg.invoke_mixed([op_id, op_id], mem, [[5], [6]],
+    r_mixed = reg._invoke_mixed([op_id, op_id], mem, [[5], [6]],
                                mode="auto")
-    r_batched = reg.invoke_batched(op_id, mem, [[5], [6]], mode="auto")
+    r_batched = reg._invoke_batched(op_id, mem, [[5], [6]], mode="auto")
     assert np.array_equal(r_mixed.ret, r_batched.ret)
     assert np.array_equal(r_mixed.mem, r_batched.mem)
 
@@ -295,13 +295,13 @@ def test_invoke_mixed_threads_contention_rate_to_segments():
     b2.ret(b2.load(b2.reg(), "d", b2.const(0)))
     id2 = reg.register("t", b2.build())
     mem = memory.make_pool(1, rt)
-    reg.invoke_mixed([id1, id2, id1], mem, [[5], [], [6]],
+    reg._invoke_mixed([id1, id2, id1], mem, [[5], [], [6]],
                      mode="segmented", contention_rate=0.9)
     assert reg.last_decision.mode == "batched"
     assert "compiled" not in reg.last_decision.costs
     # under "auto" the *wave-level* decision survives the nested
     # per-segment dispatches — that is what callers audit
-    reg.invoke_mixed([id1, id2, id1], mem, [[5], [], [6]], mode="auto")
+    reg._invoke_mixed([id1, id2, id1], mem, [[5], [], [6]], mode="auto")
     assert reg.last_decision.mode in ("mixed", "segmented")
     assert reg.last_decision.entropy_bits > 0
 
@@ -315,11 +315,11 @@ def test_registry_last_decision_recorded():
     mem = memory.make_pool(1, rt)
     order = w.populate(mem, rt)
     params = [[int(order[i]) * 8, 3, i * ops.NODE_WORDS] for i in range(4)]
-    reg.invoke_batched(op_id, mem, params, mode="auto")
+    reg._invoke_batched(op_id, mem, params, mode="auto")
     assert reg.last_decision is not None
     assert reg.last_decision.mode in ("batched", "compiled")
     assert set(reg.last_decision.costs) >= {"batched"}
     # contention hint steers auto to the exact interpreter
-    reg.invoke_batched(op_id, mem, params, mode="auto",
+    reg._invoke_batched(op_id, mem, params, mode="auto",
                        contention_rate=0.9)
     assert reg.last_decision.mode == "batched"

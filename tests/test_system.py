@@ -43,7 +43,7 @@ def test_indirection_wall_collapse_end_to_end():
         client_answer = 10_000 + cur // 8
         client_rtts = d
 
-        res = reg.invoke(op_id, mem.copy(), [int(order[0]) * 8, d])
+        res = reg._invoke(op_id, mem.copy(), [int(order[0]) * 8, d])
         assert res.ok
         assert res.ret == client_answer == w.reference(order,
                                                        int(order[0]), d)

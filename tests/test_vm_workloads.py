@@ -143,7 +143,7 @@ def test_registry_multi_tenant_isolation():
         reg.register("bob", w.build(rt))
     mem = memory.make_pool(1, rt)
     order = w.populate(mem, rt)
-    r = reg.invoke(op_id, mem, [int(order[0]) * 8, 3])
+    r = reg._invoke(op_id, mem, [int(order[0]) * 8, 3])
     assert r.ret == w.reference(order, int(order[0]), 3)
     assert reg.dispatch_table()[op_id] == 0
     assert len(reg) == 1
