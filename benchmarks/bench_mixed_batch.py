@@ -54,11 +54,13 @@ ENGINES = ("serial", "mixed", "segmented", "auto")
 TENANTS = ("gw", "ptw", "kv", "moe")
 
 
-def _setup(max_batch: int):
+def _setup(max_batch: int, n_devices: int = 1):
     """One endpoint, four tenant sessions, one shared pool.  Every
     workload gets per-request disjoint reply slots (``reply_param``) —
     the serving configuration, and what lets the whole wave run
-    conflict-free."""
+    conflict-free.  With ``n_devices > 1`` every device's pool row is
+    populated identically, so waves may scatter posts over any homes
+    (``bench_sharded`` reuses this setup over a device mesh)."""
     n_slots = max(max_batch // 4 + 1, 64)
     gw = ops.GraphWalk(n_nodes=1024, max_depth=16,
                        reply_words=n_slots * ops.NODE_WORDS)
@@ -69,28 +71,37 @@ def _setup(max_batch: int):
                               reply_slots=n_slots)
     ep, sessions = TiaraEndpoint.for_tenants([
         ("gw", gw.regions()), ("ptw", ptw.regions()),
-        ("kv", kv.regions()), ("moe", moe.regions())])
+        ("kv", kv.regions()), ("moe", moe.regions())],
+        n_devices=n_devices)
     names = {}
     for tenant, wl in (("gw", gw), ("ptw", ptw), ("kv", kv), ("moe", moe)):
         s = sessions[tenant]
         prog = wl.build(s.view, reply_param=True)
         s.register(prog)
         names[tenant] = prog.name
-    order = gw.populate(sessions["gw"].pool, sessions["gw"].view)
-    vamap = ptw.populate(sessions["ptw"].pool, sessions["ptw"].view)
-    kv.populate(sessions["kv"].pool, sessions["kv"].view)
-    kv.make_request(sessions["kv"].pool, sessions["kv"].view, [3, 9, 1])
-    moe.populate(sessions["moe"].pool, sessions["moe"].view)
-    sessions["moe"].write_region(
-        "expert_ids", np.asarray([7, 0, 31, 12], dtype=np.int64))
+    for d in range(n_devices):
+        order = gw.populate(sessions["gw"].pool, sessions["gw"].view,
+                            device=d)
+        vamap = ptw.populate(sessions["ptw"].pool, sessions["ptw"].view,
+                             device=d)
+        kv.populate(sessions["kv"].pool, sessions["kv"].view, device=d)
+        kv.make_request(sessions["kv"].pool, sessions["kv"].view,
+                        [3, 9, 1], device=d)
+        moe.populate(sessions["moe"].pool, sessions["moe"].view, device=d)
+        sessions["moe"].write_region(
+            "expert_ids", np.asarray([7, 0, 31, 12], dtype=np.int64),
+            device=d)
     vas = sorted(vamap.keys())
     return ep, sessions, names, order, vas
 
 
-def _post_wave(sessions: dict, names: dict, order, vas, batch: int):
+def _post_wave(sessions: dict, names: dict, order, vas, batch: int,
+               n_devices: int = 1):
     """Round-robin 4-tenant interleaving posted across the sessions: the
     worst case for per-op launch batching (every adjacent pair differs in
-    op_id).  Returns the completion handles in arrival order."""
+    op_id).  With ``n_devices > 1`` the posts also round-robin their
+    ``home`` over the devices (the sharded-placement wave).  Returns the
+    completion handles in arrival order."""
     cs = []
     slot = {t: 0 for t in TENANTS}
     for i in range(batch):
@@ -107,7 +118,7 @@ def _post_wave(sessions: dict, names: dict, order, vas, batch: int):
             p = [1 + i % 3, j * 4 * 256]
         else:
             p = [1 + i % 4, j * 4 * 256]
-        cs.append(sessions[t].post(names[t], p))
+        cs.append(sessions[t].post(names[t], p, home=i % n_devices))
     return cs
 
 
@@ -117,7 +128,8 @@ def _oracle(ep, cs):
     seq = ep.mem.copy()
     rets, stats, steps = [], [], []
     for c in sorted(cs, key=lambda c: c.seq):
-        r = pyvm.run(vops[c.op_id], ep.regions, seq, list(c.params))
+        r = pyvm.run(vops[c.op_id], ep.regions, seq, list(c.params),
+                     home=c.home)
         rets.append(r.ret)
         stats.append(r.status)
         steps.append(r.steps)

@@ -1,0 +1,129 @@
+"""Sharded memory pool over a device mesh vs the single-device engine.
+
+The paper's end state is a fabric of memory-side NICs, each executing
+the operators whose data it owns.  This benchmark stands up the same
+4-tenant interleaved serving wave as ``bench_mixed_batch`` — but posts
+round-robin their ``home`` across the mesh, so ``doorbell(placement=
+"sharded")`` buckets each wave into per-device sub-waves and the
+shard_map engine executes them in lockstep with remote LOAD/MEMCPY on
+collectives.  Compared engines at each batch size:
+
+  * ``mixed_single``  the one-launch mixed lockstep engine on a single
+                      chip against the whole pool — the PR 2 reference
+                      (``placement="single"``, the in-run baseline that
+                      speedups normalize to).
+  * ``sharded``       home-bucketed per-device sub-waves over the mesh
+                      (``placement="sharded"``).
+
+Every wave is checked bit-identical against the per-request ``pyvm``
+oracle before timing (``parity_ok``).  Per-device sub-wave sizes, ops/s
+and the speedup normalized to the in-run ``mixed_single`` baseline land
+in ``BENCH_sharded.json``.
+
+A note on reading the numbers: under ``XLA_FLAGS=--xla_force_host_
+platform_device_count=8`` all "devices" are threads of one CPU, so the
+collective tax is real but the per-device parallelism is not — the
+speedup column measures the cost of the sharded execution structure,
+not a fabric win.  On one device the mesh is degenerate (n_devices=1)
+and the comparison is pure overhead accounting.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+import jax
+
+from repro.core import compile as tc
+
+from benchmarks._workbench import Row, rate as _rate
+from benchmarks.bench_mixed_batch import (_drain, _oracle, _parity,
+                                          _post_wave, _setup)
+
+JSON_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_sharded.json")
+BATCHES = (64, 256, 1024)
+QUICK_BATCHES = (16, 64)
+MIN_SECONDS = 0.25
+ENGINES = ("mixed_single", "sharded")
+_DOORBELL = {"mixed_single": dict(mode="mixed", placement="single"),
+             "sharded": dict(mode="mixed", placement="sharded")}
+
+
+def measure(quick: bool = False) -> List[dict]:
+    n_dev = min(8, len(jax.devices()))
+    batches = QUICK_BATCHES if quick else BATCHES
+    min_seconds = 0.05 if quick else MIN_SECONDS
+    ep, sessions, names, order, vas = _setup(max(batches),
+                                             n_devices=n_dev)
+    out: List[dict] = []
+    for b in batches:
+        oracle = None
+        rates = {}
+        for engine in ENGINES:
+            cs = _post_wave(sessions, names, order, vas, b,
+                            n_devices=n_dev)
+            if oracle is None:
+                oracle = _oracle(ep, cs)
+            ep.doorbell(**_DOORBELL[engine])
+            parity = _parity(ep, cs, oracle)
+            _drain(sessions)
+
+            def call(engine=engine):
+                _post_wave(sessions, names, order, vas, b,
+                           n_devices=n_dev)
+                ep.doorbell(**_DOORBELL[engine])
+                _drain(sessions)
+
+            us, rate = _rate(call, b, min_seconds)
+            rates[engine] = rate
+            plan = tc.plan_mixed_batch(
+                [c.op_id for c in cs], homes=[c.home for c in cs],
+                n_devices=n_dev)
+            out.append(dict(
+                engine=engine, batch=b, us_per_call=us, ops_per_s=rate,
+                parity_ok=bool(parity), n_devices=n_dev,
+                batch_per_device=plan.batch_per_device,
+                device_counts=plan.device_counts.tolist(),
+                subwave_ops_per_s=rate / n_dev))
+        for r in out:
+            if r["batch"] == b:
+                r["speedup_vs_single"] = \
+                    r["ops_per_s"] / rates["mixed_single"]
+    return out
+
+
+def rows(quick: bool = False) -> List[Row]:
+    data = measure(quick=quick)
+    payload = dict(
+        workload="4-tenant interleaved mix (graph_walk + ptw3 + "
+                 "paged_kv_fetch + moe_expert_gather), posts round-robin "
+                 "homes over the mesh; doorbell(placement=...)",
+        unit="ops/s",
+        acceptance="sharded placement bit-identical to the pyvm oracle "
+                   "at every batch; speedup_vs_single is the in-run-"
+                   "normalized metric the regression gate tracks "
+                   "(absolute ops/s is host-noise informational)",
+        results=data)
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+    out = []
+    for r in data:
+        flag = "" if r["parity_ok"] else "  PARITY-MISMATCH"
+        out.append(Row(
+            name=f"sharded/{r['engine']}/B={r['batch']}",
+            us_per_call=r["us_per_call"],
+            derived=r["ops_per_s"] / 1e6, unit="Mops",
+            note=f"x{r['speedup_vs_single']:.2f} vs single, "
+                 f"{r['n_devices']} dev, Bp={r['batch_per_device']}"
+                 f"{flag}"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r.csv())
+    print(f"wrote {JSON_PATH}")

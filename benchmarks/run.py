@@ -15,10 +15,12 @@ import inspect
 import json
 import sys
 import time
+import traceback
 
 from benchmarks import (bench_graph, bench_lock, bench_mixed_batch,
                         bench_moe, bench_offload, bench_paged_attention,
-                        bench_ptw, bench_table1, bench_vm_throughput)
+                        bench_ptw, bench_sharded, bench_table1,
+                        bench_vm_throughput)
 from benchmarks._workbench import fmt_table
 
 MODULES = [
@@ -34,6 +36,8 @@ MODULES = [
      bench_vm_throughput),
     ("mixed", "Multi-tenant mixed-op batching vs per-op launches",
      bench_mixed_batch),
+    ("sharded", "Sharded pool over a device mesh vs single device",
+     bench_sharded),
 ]
 
 
@@ -49,6 +53,7 @@ def main() -> None:
 
     all_rows = []
     tables = []
+    crashed = []
     for key, title, mod in MODULES:
         if args.only and args.only not in key:
             continue
@@ -56,7 +61,17 @@ def main() -> None:
         if args.quick and "quick" in inspect.signature(mod.rows).parameters:
             kwargs["quick"] = True
         t0 = time.time()
-        rows = mod.rows(**kwargs)
+        # a crashed module must not silently vanish from the report: run
+        # the remaining modules, but exit nonzero so the scheduled
+        # bench-smoke job cannot pass on a crash
+        try:
+            rows = mod.rows(**kwargs)
+        except Exception:
+            traceback.print_exc()
+            print(f"::error::benchmark module {key!r} crashed",
+                  file=sys.stderr)
+            crashed.append(key)
+            continue
         dt = time.time() - t0
         all_rows.extend(rows)
         tables.append(fmt_table(rows, f"{title}  [{dt:.1f}s]"))
@@ -84,6 +99,11 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump([r.__dict__ for r in all_rows], f, indent=1)
         print(f"wrote {args.json}", file=sys.stderr)
+
+    if crashed:
+        print(f"== {len(crashed)} benchmark module(s) crashed: "
+              f"{', '.join(crashed)} ==", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

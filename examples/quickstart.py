@@ -10,6 +10,7 @@ and the dispatch table; ``connect()`` gives each tenant a ``Session``
 ``doorbell()`` drains every session's posts as a single batched wave.
 """
 
+from repro import jaxcompat
 from repro.core import costmodel as cm
 from repro.core import simulator as sim
 from repro.core import operators as ops
@@ -22,8 +23,13 @@ def main() -> None:
     w = ops.GraphWalk(n_nodes=4096, max_depth=64)
 
     # 1. Stand up the endpoint (it owns the pool) and connect: the
-    #    tenant's regions, view, and grant are wired in one call.
-    ep, sessions = TiaraEndpoint.for_tenants([("quickstart", w.regions())])
+    #    tenant's regions, view, and grant are wired in one call.  With
+    #    more than one device row the pool can later shard over a mesh
+    #    (step 6); under XLA_FLAGS=--xla_force_host_platform_device_
+    #    count=8 the mesh is 4 real host devices wide.
+    n_dev = max(1, min(4, jaxcompat.device_count()))
+    ep, sessions = TiaraEndpoint.for_tenants(
+        [("quickstart", w.regions())], n_devices=n_dev)
     sess = sessions["quickstart"]
 
     # 2. Write the operator in the restricted source subset (paper §3.3).
@@ -74,6 +80,22 @@ def walk(start, depth):
           f"({depth} dependent round trips)")
     print(f"speedup: {cm.rdma_chain_latency_us(depth) / ts.latency_us:.2f}x"
           f"  (paper: 2.85x at depth 10)")
+
+    # 6. Sharded placement: the pool's device rows shard over a mesh and
+    #    each device executes the posts whose `home` it owns — placement
+    #    is a doorbell concern, the posts don't change.  Every wave is
+    #    bit-identical to single-chip execution (and to the pyvm
+    #    oracle), whatever the placement.
+    orders = [w.populate(sess.pool, sess.view, device=d, seed=d)
+              for d in range(n_dev)]
+    wave = [sess.post("walk", [int(orders[d][0]) * 8, 12], home=d)
+            for d in range(n_dev)]
+    ep.doorbell(placement="sharded")
+    print(f"\nsharded wave over {n_dev} device(s):")
+    for d, c in enumerate(wave):
+        expect = w.reference(orders[d], int(orders[d][0]), 12)
+        assert c.result() == expect
+        print(f"  home {d}: walk(depth=12) -> {c.ret}  (reference ok)")
 
 
 if __name__ == "__main__":

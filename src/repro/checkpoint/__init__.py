@@ -1,1 +1,3 @@
 from repro.checkpoint import manager
+
+__all__ = ["manager"]

@@ -15,7 +15,7 @@ import os
 import re
 import shutil
 import threading
-from typing import Any, Callable, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import numpy as np

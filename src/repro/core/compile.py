@@ -55,8 +55,7 @@ from jax import lax
 from repro.core import isa
 from repro.core.isa import (Alu, Instr, Op, FLAG_ASYNC, FLAG_DEV_REG,
                             FLAG_DSTDEV_REG, FLAG_IMMB, FLAG_LEN_REG,
-                            FLAG_MREG, FLAG_SRCDEV_REG, FLAG_THR_REG,
-                            DEV_LOCAL, ERR_REG)
+                            FLAG_MREG, FLAG_SRCDEV_REG, DEV_LOCAL, ERR_REG)
 from repro.core.memory import RegionTable
 from repro.core.verifier import LoopInfo, VerifiedOperator
 from repro.core import vm as _vm
@@ -170,11 +169,15 @@ def _alu_static(aop: int, a, b):
 @dataclasses.dataclass(frozen=True)
 class Segment:
     """One same-op_id run of the stable-sorted batch: requests at sorted
-    positions ``[start, end)`` all dispatch to ``op_id``."""
+    positions ``[start, end)`` all dispatch to ``op_id``.  In a
+    home-bucketed plan the run is additionally same-``home`` — the unit
+    of placement on the device mesh (the whole segment executes on
+    device ``home``)."""
 
     op_id: int
     start: int
     end: int
+    home: int = 0
 
     @property
     def size(self) -> int:
@@ -193,12 +196,25 @@ class MixedPlan:
     through ``inverse``.  Planning is pure bookkeeping — O(B log B) once
     per wave — and is exactly the batching a NIC dispatcher would do when
     filling per-MP task queues from a mixed arrival stream.
+
+    **Home-bucketed (sharded) plans**: built with ``homes=`` +
+    ``n_devices=``, the stable sort key becomes ``(home, op_id)`` —
+    device-major, so device ``d``'s sub-wave is the contiguous slice of
+    the sorted batch holding exactly the requests whose ``home`` it
+    owns, itself sorted into same-op segments (segments stay the unit of
+    placement; each carries its ``home``).  ``device_counts[d]`` is the
+    sub-wave's size, ``batch_per_device`` the padded lane count the
+    sharded engine runs, and the *same* arrival-order ``inverse``
+    permutation still does the reply scatter.
     """
 
     op_ids: np.ndarray            # i64 [B] arrival-order op ids
     order: np.ndarray             # i64 [B]: sorted position -> arrival idx
     inverse: np.ndarray           # i64 [B]: arrival idx -> sorted position
     segments: Tuple[Segment, ...]
+    homes: Optional[np.ndarray] = None   # i64 [B] arrival-order homes
+    n_devices: int = 1
+    device_counts: Optional[np.ndarray] = None   # i64 [n_devices]
 
     @property
     def batch(self) -> int:
@@ -208,28 +224,77 @@ class MixedPlan:
     def n_segments(self) -> int:
         return len(self.segments)
 
+    @property
+    def sharded(self) -> bool:
+        return self.device_counts is not None
+
+    @property
+    def batch_per_device(self) -> int:
+        """Per-device lane count of the sharded engine: every ragged
+        sub-wave padded to the largest one (>= 1 so empty devices still
+        hold a halted pad lane)."""
+        if self.device_counts is None:
+            return self.batch
+        return max(int(self.device_counts.max(initial=0)), 1)
+
     def segment_indices(self, seg: Segment) -> np.ndarray:
         """Arrival indices of the requests in ``seg`` (arrival order)."""
         return self.order[seg.start:seg.end]
 
+    def device_segments(self, device: int) -> Tuple[Segment, ...]:
+        """The placement units assigned to ``device`` (sharded plans)."""
+        return tuple(s for s in self.segments if s.home == device)
 
-def plan_mixed_batch(op_ids) -> MixedPlan:
-    """Stable-sort a batch's op_ids and segment it into same-op runs."""
+
+def plan_mixed_batch(op_ids, homes=None,
+                     n_devices: Optional[int] = None) -> MixedPlan:
+    """Stable-sort a batch's op_ids and segment it into same-op runs.
+
+    With ``homes=`` and ``n_devices=``, additionally bucket the segments
+    by ``home`` into per-device sub-waves (sort key ``(home, op_id)``,
+    arrival-stable) — the placement plan the sharded engine executes.
+    """
     ids = np.asarray(list(op_ids), dtype=np.int64)
     if ids.ndim != 1 or ids.size == 0:
         raise ValueError("op_ids must be a non-empty 1-D sequence")
-    order = np.argsort(ids, kind="stable").astype(np.int64)
+    if homes is None:
+        order = np.argsort(ids, kind="stable").astype(np.int64)
+        hsort = None
+        device_counts = None
+        n_dev = 1
+    else:
+        if n_devices is None:
+            raise ValueError("home-bucketed plans need n_devices=")
+        n_dev = int(n_devices)
+        h = np.asarray(list(homes), dtype=np.int64)
+        if h.shape != ids.shape:
+            raise ValueError(
+                f"homes shape {h.shape} does not match op_ids {ids.shape}")
+        if ids.size and (h.min() < 0 or h.max() >= n_dev):
+            raise ValueError(
+                f"homes must lie in [0, {n_dev}); got range "
+                f"[{h.min()}, {h.max()}]")
+        # np.lexsort: last key is primary; stable, so arrival order is
+        # preserved within each (home, op) bucket
+        order = np.lexsort((ids, h)).astype(np.int64)
+        hsort = h[order]
+        device_counts = np.bincount(h, minlength=n_dev).astype(np.int64)
     inverse = np.empty_like(order)
     inverse[order] = np.arange(ids.size, dtype=np.int64)
     sorted_ids = ids[order]
-    starts = np.flatnonzero(
-        np.concatenate([[True], sorted_ids[1:] != sorted_ids[:-1]]))
+    brk = sorted_ids[1:] != sorted_ids[:-1]
+    if hsort is not None:
+        brk = brk | (hsort[1:] != hsort[:-1])
+    starts = np.flatnonzero(np.concatenate([[True], brk]))
     bounds = list(starts) + [ids.size]
-    segments = tuple(Segment(op_id=int(sorted_ids[s]), start=int(s),
-                             end=int(e))
-                     for s, e in zip(bounds[:-1], bounds[1:]))
+    segments = tuple(
+        Segment(op_id=int(sorted_ids[s]), start=int(s), end=int(e),
+                home=int(hsort[s]) if hsort is not None else 0)
+        for s, e in zip(bounds[:-1], bounds[1:]))
     return MixedPlan(op_ids=ids, order=order, inverse=inverse,
-                     segments=segments)
+                     segments=segments,
+                     homes=None if homes is None else h,
+                     n_devices=n_dev, device_counts=device_counts)
 
 
 # ---------------------------------------------------------------------------

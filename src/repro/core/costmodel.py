@@ -277,6 +277,19 @@ class EngineCost:
     cstep_us: float = 3.0          # compiled trace, per position [calib]
     clane_us: float = 0.15         # compiled trace, per position-lane [calib]
     serial_lane_us: float = 12.0   # contended macro-step scan, per lane
+    # One cross-device collective group on the mesh axis (all_gather of
+    # the requests + psum routing the words back) — the sharded engine
+    # pays a fixed number of these per macro-step.  [calib: a scalar
+    # psum over 8 forced-host CPU devices measures ~50-150 us; a real
+    # NIC fabric hop is 3 orders of magnitude cheaper, so re-calibrate
+    # on hardware.]
+    collective_us: float = 80.0
+    # Collectives per conflict-free sharded macro-step, busy-step upper
+    # bound: the interval gather for the conflict sweep plus the
+    # word-read, word-write, and memcpy window routes.  The three data
+    # routes are any_lane-gated (skipped on macro-steps with no such
+    # op), so real waves average below this.
+    collectives_per_step: int = 4
     # Building an engine at a new (program, batch) shape is a full XLA
     # compile — seconds, not microseconds [calib: jit of one engine ~2 s
     # on the dev host].  A serving loop reuses each built shape across
@@ -311,6 +324,33 @@ class EngineCost:
         """One straight-line launch over the unrolled trace."""
         return self._miss(cached) + self.launch_us \
             + trace_len * (self.cstep_us + batch * self.clane_us)
+
+    def sharded_us(self, batch: int, n_devices: int, steps: int,
+                   contention_rate: float = 0.0, *,
+                   batch_per_device: Optional[int] = None,
+                   cached: bool = True) -> float:
+        """One shard_map launch over the device mesh: per-device
+        sub-waves advance in lockstep, each macro-step paying the fixed
+        collective group that routes remote LOAD/MEMCPY traffic.  The
+        lockstep lane count is the *largest* sub-wave — pass the plan's
+        ``batch_per_device`` so home-skewed waves are costed at their
+        real width (a fully skewed wave runs ``batch`` lanes on every
+        device and sharding buys nothing); without it a balanced wave
+        is assumed.  A contended macro-step replicates the wave and
+        serializes over the *global* batch with a psum-routed read per
+        lane — the term that makes contention catastrophically
+        expensive on a mesh, which is exactly the signal placement
+        decisions need."""
+        bpd = batch_per_device if batch_per_device is not None \
+            else -(-batch // max(n_devices, 1))     # balanced ceil
+        contended = min(max(contention_rate, 0.0), 1.0) * steps
+        clean = steps - contended
+        coll = self.collective_us if n_devices > 1 else 0.0
+        return (self._miss(cached) + self.launch_us
+                + clean * (self.vstep_us + bpd * self.vlane_us
+                           + self.collectives_per_step * coll)
+                + contended * (self.vstep_us
+                               + batch * (self.serial_lane_us + coll)))
 
     @classmethod
     def measured(cls, reps: int = 20) -> "EngineCost":
@@ -441,6 +481,54 @@ class DispatchCostModel:
         steps = max(s.step_bound for s in segments)
         return self.cost.batched_us(batch, steps, contention_rate,
                                     cached=cached)
+
+    # -- placement (which device(s) execute the wave) ---------------------
+
+    def choose_placement(self, *, batch: int, n_devices: int,
+                         step_bound: int, contention_rate: float = 0.0,
+                         batch_per_device: Optional[int] = None,
+                         sharded_feasible: bool = True,
+                         mixed_cached: bool = True,
+                         sharded_cached: bool = True) -> DispatchDecision:
+        """Pick where a mixed wave executes: ``"single"`` (the dense
+        one-launch mixed engine — every request against the whole pool
+        on one chip) vs ``"sharded"`` (home-bucketed per-device
+        sub-waves over the mesh, remote traffic on collectives).
+
+        Sharding divides the per-lane vector work by ``n_devices`` but
+        adds a per-macro-step collective tax, so it wins on wide waves
+        with long traces and loses on small waves — and a contended wave
+        is pinned to whichever side predicts cheaper with the serialized
+        term included (the sharded fallback serializes over the global
+        batch with a collective per lane, so contention strongly favors
+        ``"single"``).  ``step_bound`` is the wave's largest per-op
+        bound, as in :meth:`mixed_us`; ``batch_per_device`` is the
+        plan's real (largest) sub-wave width, so home skew is priced in
+        (see :meth:`EngineCost.sharded_us`).  ``sharded_feasible=False``
+        removes the sharded candidate entirely — the caller's statement
+        that no mesh of ``n_devices`` devices exists on this host (a
+        pool can model more homes than the process has devices), so
+        "auto" must degrade to "single" rather than pick a placement
+        that cannot build.
+
+        Scope: "single" is priced as the one-launch mixed engine, the
+        apples-to-apples alternative to the mesh's mixed sub-waves.  A
+        low-entropy wave whose best single-chip dispatch is *segmented*
+        (per-op compiled launches) may therefore be routed to the mesh
+        prematurely; results stay bit-identical either way.  Pricing
+        segmented sub-wave execution on both sides is the ROADMAP
+        "per-device segmented sub-wave execution" item."""
+        costs = {"single": self.cost.batched_us(batch, step_bound,
+                                                contention_rate,
+                                                cached=mixed_cached)}
+        if n_devices > 1 and sharded_feasible:
+            costs["sharded"] = self.cost.sharded_us(
+                batch, n_devices, step_bound, contention_rate,
+                batch_per_device=batch_per_device,
+                cached=sharded_cached)
+        mode = min(costs, key=costs.get)
+        return DispatchDecision(mode=mode, costs=costs,
+                                contention_rate=contention_rate)
 
     def choose_mixed(self, *, segments: Sequence[SegmentStats],
                      contention_rate: float = 0.0,

@@ -348,7 +348,8 @@ class TiaraEndpoint:
         return self._outstanding
 
     def doorbell(self, *, mode: str = "auto",
-                 contention_rate: float = 0.0) -> int:
+                 contention_rate: float = 0.0,
+                 placement: str = "single") -> int:
         """Drain every session's outstanding posts into one wave (global
         arrival order) and retire the results into per-session CQs.
 
@@ -357,11 +358,29 @@ class TiaraEndpoint:
         "compiled" for single-op waves, "interp" for a single-request
         wave — which makes the endpoint the one surface that can drive
         every engine (the benchmarks rely on this).  Returns the number
-        of completions retired."""
+        of completions retired.
+
+        ``placement`` decides *where* the wave executes — placement is a
+        doorbell concern, invisible to :meth:`Session.post` callers:
+        "single" (default) runs on one chip; "sharded" shards the pool
+        over a device mesh and buckets the wave by each post's ``home``
+        into per-device sub-waves (requires a wave mode, "auto" or
+        "mixed"); "auto" lets the dispatch cost model pick (audited via
+        ``registry.last_placement``).  Results are bit-identical across
+        placements — contended STORE/CAS waves keep the deterministic
+        arrival-order round-robin semantics on the mesh."""
         if mode not in DOORBELL_MODES:
             raise ValueError(
                 f"unknown mode {mode!r}; expected one of "
                 f"{list(DOORBELL_MODES)}")
+        if placement not in _registry._PLACEMENTS:
+            raise ValueError(
+                f"unknown placement {placement!r}; expected one of "
+                f"{list(_registry._PLACEMENTS)}")
+        if placement != "single" and mode not in ("auto", "mixed"):
+            raise EndpointError(
+                f"placement {placement!r} needs a wave mode ('auto' or "
+                f"'mixed'); got mode {mode!r}")
         wave: List[Completion] = []
         for s in self._sessions.values():
             wave.extend(s._sq)
@@ -378,7 +397,8 @@ class TiaraEndpoint:
             if mode in _WAVE_MODES:
                 res = reg._invoke_mixed(ids, self.mem, params, homes=homes,
                                         mode=mode,
-                                        contention_rate=contention_rate)
+                                        contention_rate=contention_rate,
+                                        placement=placement)
             elif mode in _SINGLE_OP_MODES:
                 if len(set(ids)) != 1:
                     raise EndpointError(
@@ -421,6 +441,12 @@ class TiaraEndpoint:
         """The wave-level dispatch decision of the most recent doorbell
         that went through the cost model (audit hook)."""
         return self.registry.last_decision
+
+    @property
+    def last_placement(self):
+        """The placement decision of the most recent
+        ``doorbell(placement="auto")`` (audit hook)."""
+        return self.registry.last_placement
 
     def dump(self) -> str:
         lines = [f"endpoint: {len(self._sessions)} sessions, "

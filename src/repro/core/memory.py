@@ -286,6 +286,29 @@ def make_pool(n_devices: int, table: RegionTable,
     return mem
 
 
+def pool_sharding(mesh, axis: str = "pool"):
+    """The pool's mesh placement: the leading ``n_devices`` axis sharded
+    over the 1-D device mesh (device ``d`` holds row ``d`` — its blade's
+    DRAM), words replicated along no other axis."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    return NamedSharding(mesh, PartitionSpec(axis, None))
+
+
+def shard_pool(mem: np.ndarray, mesh=None, axis: str = "pool"):
+    """Place a ``(n_devices, pool_words)`` pool on a device mesh with
+    :func:`pool_sharding` — shard-aware pool construction for the
+    sharded VM engine (device ``d`` owns ``mem[d]``).  With no ``mesh``
+    a 1-D mesh over the first ``n_devices`` local devices is built
+    (raises when the host exposes fewer)."""
+    import jax
+
+    from repro import jaxcompat
+    if mesh is None:
+        mesh = jaxcompat.make_device_mesh(int(mem.shape[0]), axis)
+    return jax.device_put(np.asarray(mem, dtype=np.int64),
+                          pool_sharding(mesh, axis))
+
+
 def write_region(mem: np.ndarray, table: RegionTable, device: int,
                  region: str, data: Sequence[int], offset: int = 0) -> None:
     """Host-side (control path) helper to populate a region."""

@@ -23,13 +23,13 @@ Word-level layouts:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import isa, memory
 from repro.core.isa import Alu
-from repro.core.memory import Grant, RegionTable
+from repro.core.memory import RegionTable
 from repro.core.program import OperatorBuilder, TiaraProgram
 
 NODE_WORDS = 8                 # 64-byte graph nodes

@@ -13,7 +13,7 @@ temporaries live in r8..r14; r15 is the async error-flag register.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
+from typing import List, Optional, Set, Tuple, Union
 
 import numpy as np
 

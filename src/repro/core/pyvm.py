@@ -27,7 +27,7 @@ Semantics notes (shared with the JAX VM — keep in lockstep):
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Set, Tuple
+from typing import List, Optional, Sequence, Set
 
 import numpy as np
 

@@ -51,6 +51,7 @@ from repro.core.verifier import VerifiedOperator, verify
 _SINGLE_MODES = ("auto", "interp", "compiled")
 _BATCHED_MODES = ("auto", "batched", "compiled")
 _MIXED_MODES = ("auto", "mixed", "segmented", "serial")
+_PLACEMENTS = ("single", "sharded", "auto")
 
 
 class RegistrationError(Exception):
@@ -114,6 +115,7 @@ class OperatorRegistry:
         self.max_steps = max_steps
         self.cost_model = cost_model or DispatchCostModel()
         self.last_decision: Optional[DispatchDecision] = None
+        self.last_placement: Optional[DispatchDecision] = None
         self._grants: Dict[str, Grant] = {}
         self._slots: Dict[int, Slot] = {}
         self._by_name: Dict[str, int] = {}
@@ -302,7 +304,8 @@ class OperatorRegistry:
                       homes: Union[int, Sequence[int]] = 0,
                       failed: Optional[Set[int]] = None,
                       mode: str = "auto",
-                      contention_rate: float = 0.0
+                      contention_rate: float = 0.0,
+                      placement: str = "single"
                       ) -> vm.BatchedInvokeResult:
         """Dispatch a wave whose requests carry *per-request* op_ids.
 
@@ -325,8 +328,29 @@ class OperatorRegistry:
           "auto"       single-op waves delegate to
                        :meth:`_invoke_batched`; genuinely mixed waves go
                        to the cost model.
+
+        ``placement``:
+          "single"     the wave runs on one chip against the whole pool
+                       (every mode above).
+          "sharded"    the pool's leading axis is sharded over a device
+                       mesh: the planner buckets the wave by ``home``
+                       into per-device sub-waves and the mesh executes
+                       them in lockstep, remote traffic on collectives
+                       (``vm.invoke_sharded_mixed``) — bit-identical to
+                       the "mixed" engine over the arrival-order wave.
+                       Requires ``mode`` "auto" or "mixed".
+          "auto"       :meth:`DispatchCostModel.choose_placement`
+                       decides (recorded in :attr:`last_placement`).
         """
         self._check_mode(mode, _MIXED_MODES)
+        if placement not in _PLACEMENTS:
+            raise ValueError(
+                f"unknown placement {placement!r}; expected one of "
+                f"{list(_PLACEMENTS)}")
+        if placement != "auto":
+            # no placement decision this wave: clear the audit hook so
+            # an earlier auto wave's pick cannot look current
+            self.last_placement = None
         ids = np.asarray(list(op_ids), dtype=np.int64)
         if ids.ndim != 1 or ids.size != len(params):
             raise ValueError(
@@ -335,6 +359,17 @@ class OperatorRegistry:
         for i in np.unique(ids):
             if int(i) not in self._slots:
                 raise KeyError(f"op_id {int(i)} not registered")
+        if placement != "single":
+            out = self._invoke_placed(ids, mem, params, homes=homes,
+                                      failed=failed, mode=mode,
+                                      contention_rate=contention_rate,
+                                      placement=placement)
+            if out is not None:
+                # the wave ran on the mesh: no engine-mode decision was
+                # made, so clear the audit hook rather than leave an
+                # earlier wave's pick looking current
+                self.last_decision = None
+                return out
         plan = tcompile.plan_mixed_batch(ids)
         decision = None
         if mode == "auto":
@@ -368,6 +403,47 @@ class OperatorRegistry:
             # the wave-level pick is what callers audit
             self.last_decision = decision
         return out
+
+    def _invoke_placed(self, ids: np.ndarray, mem: np.ndarray,
+                       params: Sequence[Sequence[int]], *,
+                       homes: Union[int, Sequence[int]],
+                       failed: Optional[Set[int]],
+                       mode: str, contention_rate: float,
+                       placement: str
+                       ) -> Optional[vm.BatchedInvokeResult]:
+        """Resolve a non-"single" placement: run the wave on the sharded
+        mesh engine, or return None when the cost model sends an "auto"
+        wave back to single-chip execution."""
+        if mode not in ("auto", "mixed"):
+            raise ValueError(
+                f"placement={placement!r} executes the mixed lockstep "
+                f"engine over the mesh; mode must be 'auto' or 'mixed', "
+                f"not {mode!r}")
+        from repro import jaxcompat
+        n_dev = int(mem.shape[0])
+        h = vm.homes_array(homes, len(params))
+        plan = tcompile.plan_mixed_batch(ids, homes=h, n_devices=n_dev)
+        if placement == "auto":
+            bound = max(self._slots[int(i)].verified.step_bound
+                        for i in np.unique(ids))
+            decision = self.cost_model.choose_placement(
+                batch=int(ids.size), n_devices=n_dev, step_bound=bound,
+                contention_rate=contention_rate,
+                batch_per_device=plan.batch_per_device,
+                # a pool can model more homes than the process exposes
+                # devices; "auto" must degrade to "single" there, not
+                # pick a placement whose mesh cannot build
+                sharded_feasible=jaxcompat.device_count() >= n_dev,
+                mixed_cached=vm.mixed_engine_cached(
+                    self.store_ops(), self.regions, n_dev, int(ids.size)),
+                sharded_cached=vm.sharded_engine_cached(
+                    self.store_ops(), self.regions, n_dev,
+                    plan.batch_per_device))
+            self.last_placement = decision
+            if decision.mode != "sharded":
+                return None
+        return vm.invoke_sharded_mixed(self.store_ops(), self.regions,
+                                       mem, plan, params, failed=failed)
 
     @staticmethod
     def _arrival_runs(ids: np.ndarray):

@@ -35,7 +35,7 @@ for the steady state of identical tasks: the slowest of
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 from repro.core import isa
 from repro.core.costmodel import HW, DEFAULT_HW

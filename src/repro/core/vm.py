@@ -49,6 +49,18 @@ one-program specialization (``op_sel`` pinned to slot 0);
 ``build_mixed_batched_vm`` / ``invoke_batched_mixed`` expose the full
 dispatch-table form.
 
+**Sharded execution model** (the pod-scale fabric): the same lockstep
+semantics run over a ``jax.sharding.Mesh`` with the pool's leading
+``n_devices`` axis sharded (``shard_map``).  Each device executes the
+home-bucketed sub-wave it owns; remote LOAD/MEMCPY lower to collectives
+across the mesh axis, and contended macro-steps fall back to a
+replicated serialized scan in global *arrival* order, so the
+deterministic round-robin contention semantics survive sharding
+bit-for-bit (``build_sharded_mixed_vm`` / ``invoke_sharded_mixed``).
+The step semantics themselves are emitted once (``_make_scalar_step`` /
+``_make_vector_step``) against a small memory-access interface, so the
+dense and sharded engines cannot drift apart.
+
 The *verified step bound* is the loop fuel: registration-time verification
 proves the VM can never hit it, and the property tests assert exactly that.
 
@@ -136,6 +148,710 @@ def _alu_table(a, b):
     ]
 
 
+# ---------------------------------------------------------------------------
+# Memory access objects — the one seam between instruction semantics and
+# the pool's physical layout.  The step emitters below are written
+# against this small interface, so the identical semantics drive both
+# the dense single-process pool and a mesh-sharded pool where every
+# device holds one row and remote accesses lower to collectives.
+# ---------------------------------------------------------------------------
+
+
+class _DenseOps:
+    """Direct access to the full ``(n_devices, pool_words)`` pool — the
+    single-process engines."""
+
+    def __init__(self, n_dev: int, pool_words: int):
+        self.n_dev = n_dev
+        self.P = pool_words
+
+    # -- scalar (one lane; addresses verified in range) ------------------
+    def read1(self, mem, dev, addr):
+        return mem[dev, addr]
+
+    def write1(self, mem, dev, addr, val):
+        return mem.at[dev, addr].set(val)
+
+    def read1_win(self, mem, dev, phys):
+        return mem[dev, phys]
+
+    def write1_win(self, mem, dev, idx, val):
+        return mem.at[dev, idx].set(val)
+
+    # -- vector (B lanes; dead lanes routed to drop targets) -------------
+    def readv(self, mem, dev, addr):
+        return mem[jnp.clip(dev, 0, self.n_dev - 1),
+                   jnp.clip(addr, 0, self.P - 1)]
+
+    def writev(self, mem, dev, addr, val, mask):
+        return mem.at[jnp.where(mask, dev, self.n_dev),
+                      jnp.where(mask, addr, self.P)].set(val, mode="drop")
+
+    def readv_win(self, mem, dev, phys):
+        return mem[jnp.clip(dev, 0, self.n_dev - 1)[:, None],
+                   jnp.clip(phys, 0, self.P - 1)]
+
+    def writev_win(self, mem, dev, phys, val, live):
+        return mem.at[jnp.where(live, dev[:, None], self.n_dev),
+                      jnp.where(live, phys, self.P)].set(val, mode="drop")
+
+    def any_lane(self, flag):
+        """Predicate for data-dependent ``lax.cond`` skips."""
+        return jnp.any(flag)
+
+
+class _ShardOps:
+    """Collective-routed access to one device's pool shard inside
+    ``shard_map``: ``mem`` is this device's ``(pool_words,)`` row of the
+    ``(n_devices, pool_words)`` pool.
+
+    Reads are answered by the owning shard (masked contribution +
+    ``psum`` across the mesh axis); writes are applied only by the
+    owner (non-owners route the scatter out of bounds and drop it).
+    The *vector* ops route different per-device requests: indices are
+    ``all_gather``-ed across the axis, every shard contributes the words
+    it owns, and the ``psum`` carries each answer back — the software
+    spelling of the fabric's remote-read round trip.  The *scalar* ops
+    are called only from the replicated serialized fallback, where every
+    device asks the identical question, so a masked ``psum`` suffices.
+
+    ``any_lane`` returns a globally agreed predicate so data-dependent
+    ``lax.cond`` skips take the same branch on every device (collectives
+    inside a divergent branch would deadlock the mesh).
+    """
+
+    def __init__(self, n_dev: int, pool_words: int, axis: str, me):
+        self.n_dev = n_dev
+        self.P = pool_words
+        self.axis = axis
+        self.me = me
+
+    # -- scalar (replicated callers) -------------------------------------
+    def read1(self, mem, dev, addr):
+        own = jnp.where(dev == self.me,
+                        mem[jnp.clip(addr, 0, self.P - 1)], 0)
+        return lax.psum(own, self.axis)
+
+    def write1(self, mem, dev, addr, val):
+        return mem.at[jnp.where(dev == self.me, addr, self.P)
+                      ].set(val, mode="drop")
+
+    def read1_win(self, mem, dev, phys):
+        own = jnp.where(dev == self.me,
+                        mem[jnp.clip(phys, 0, self.P - 1)], 0)
+        return lax.psum(own, self.axis)
+
+    def write1_win(self, mem, dev, idx, val):
+        return mem.at[jnp.where(dev == self.me, idx, self.P)
+                      ].set(val, mode="drop")
+
+    # -- vector (per-device sub-waves; requests differ across devices) ---
+    def readv(self, mem, dev, addr):
+        req = lax.all_gather(jnp.stack([dev, addr]), self.axis)
+        own = jnp.where(req[:, 0] == self.me,
+                        mem[jnp.clip(req[:, 1], 0, self.P - 1)], 0)
+        return jnp.take(lax.psum(own, self.axis), self.me, axis=0)
+
+    def writev(self, mem, dev, addr, val, mask):
+        pay = lax.all_gather(
+            jnp.stack([dev, addr, val, mask.astype(jnp.int64)]), self.axis)
+        d, a = pay[:, 0].reshape(-1), pay[:, 1].reshape(-1)
+        v, m = pay[:, 2].reshape(-1), pay[:, 3].reshape(-1) != 0
+        mine = m & (d == self.me)
+        return mem.at[jnp.where(mine, jnp.clip(a, 0, self.P - 1), self.P)
+                      ].set(v, mode="drop")
+
+    def readv_win(self, mem, dev, phys):
+        reqd = lax.all_gather(dev, self.axis)            # (n_dev, B)
+        reqp = lax.all_gather(phys, self.axis)           # (n_dev, B, W)
+        own = jnp.where(reqd[:, :, None] == self.me,
+                        mem[jnp.clip(reqp, 0, self.P - 1)], 0)
+        return jnp.take(lax.psum(own, self.axis), self.me, axis=0)
+
+    def writev_win(self, mem, dev, phys, val, live):
+        reqd = lax.all_gather(dev, self.axis)            # (n_dev, B)
+        pay = lax.all_gather(
+            jnp.stack([phys, val, live.astype(jnp.int64)], axis=0),
+            self.axis)                                   # (n_dev, 3, B, W)
+        a, v = pay[:, 0], pay[:, 1]
+        lv = (pay[:, 2] != 0) & (reqd[:, :, None] == self.me)
+        return mem.at[jnp.where(lv, jnp.clip(a, 0, self.P - 1), self.P)
+                      ].set(v, mode="drop")
+
+    def any_lane(self, flag):
+        return lax.psum(jnp.any(flag).astype(jnp.int32), self.axis) > 0
+
+
+# ---------------------------------------------------------------------------
+# Step emitters, shared by the dense and sharded engines
+# ---------------------------------------------------------------------------
+
+
+def _make_scalar_step(*, base_c, mask_c, failed, n_dev, max_window, depth,
+                      ops):
+    """The scalar (one-request) ``lax.switch`` interpreter — the semantic
+    reference every other step implementation must match.  Memory access
+    goes through ``ops``, so the same branches drive the dense pool and a
+    mesh shard.  Returns ``step_one(s, mem, row, home, act)``."""
+
+    def dev_of1(regs, home, field, via_reg):
+        dreg = regs[field & _REG_MASK]
+        d = jnp.where(via_reg, dreg, field)
+        return jnp.where(d == DEV_LOCAL, home, jnp.mod(d, n_dev))
+
+    def phys1(rid, off):
+        return base_c[rid] + (off & mask_c[rid])
+
+    def alu_eval1(aop, a, b):
+        return jnp.stack(_alu_table(a, b))[jnp.clip(aop, 0, 15)]
+
+    def advance(s: ReqState, **kw) -> ReqState:
+        return s._replace(ctrl=_i64(0), pc_new=s.pc + 1, **kw)
+
+    # --- one branch per opcode; (s, mem, row, home) -> (s, mem) ----------
+    def br_nop(s, mem, row, home):
+        return advance(s), mem
+
+    def br_movi(s, mem, row, home):
+        return advance(s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK]
+                       .set(row[isa.F_IMM])), mem
+
+    def br_alu(s, mem, row, home):
+        rhs = jnp.where(row[isa.F_FLAGS] & FLAG_IMMB, row[isa.F_IMM],
+                        s.regs[row[isa.F_B] & _REG_MASK])
+        val = alu_eval1(row[isa.F_D], s.regs[row[isa.F_A] & _REG_MASK],
+                        rhs)
+        return advance(s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK]
+                       .set(val)), mem
+
+    def br_load(s, mem, row, home):
+        dev = dev_of1(s.regs, home, row[isa.F_E],
+                      (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0)
+        addr = phys1(row[isa.F_A],
+                     s.regs[row[isa.F_B] & _REG_MASK] + row[isa.F_IMM])
+        val = ops.read1(mem, dev, addr)
+        return advance(s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK]
+                       .set(val)), mem
+
+    def br_store(s, mem, row, home):
+        dev = dev_of1(s.regs, home, row[isa.F_E],
+                      (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0)
+        addr = phys1(row[isa.F_A],
+                     s.regs[row[isa.F_B] & _REG_MASK] + row[isa.F_IMM])
+        val = s.regs[row[isa.F_DST] & _REG_MASK]
+        return advance(s), ops.write1(mem, dev, addr, val)
+
+    def br_memcpy(s, mem, row, home):
+        flags = row[isa.F_FLAGS]
+        ddev = dev_of1(s.regs, home, row[isa.F_DST],
+                       (flags & FLAG_DSTDEV_REG) != 0)
+        sdev = dev_of1(s.regs, home, row[isa.F_C],
+                       (flags & FLAG_SRCDEV_REG) != 0)
+        drid, srid = row[isa.F_A], row[isa.F_D]
+        cap = row[isa.F_IMM]
+        lnreg = s.regs[row[isa.F_IMM2] & _REG_MASK]
+        ln = jnp.where(flags & FLAG_LEN_REG,
+                       jnp.clip(lnreg, 0, cap), cap)
+        ln = jnp.minimum(jnp.minimum(ln, mask_c[drid] + 1),
+                         mask_c[srid] + 1)
+        fail = failed[ddev] | failed[sdev]
+        ln = jnp.where(fail, 0, ln)
+        i = jnp.arange(max_window, dtype=jnp.int64)
+        soff = s.regs[row[isa.F_E] & _REG_MASK]
+        doff = s.regs[row[isa.F_B] & _REG_MASK]
+        sphys = base_c[srid] + ((soff + i) & mask_c[srid])
+        dphys = base_c[drid] + ((doff + i) & mask_c[drid])
+        svals = ops.read1_win(mem, sdev, sphys)
+        live = i < ln
+        # Masked lanes all write the lane-0 value to the lane-0 slot so
+        # duplicate scatter indices always carry identical values.
+        val0 = jnp.where(ln > 0, svals[0], ops.read1(mem, ddev, dphys[0]))
+        w_idx = jnp.where(live, dphys, dphys[0])
+        w_val = jnp.where(live, svals, val0)
+        mem2 = ops.write1_win(mem, ddev, w_idx, w_val)
+        err = jnp.where(fail, s.regs[ERR_REG] | 1, s.regs[ERR_REG])
+        regs = s.regs.at[ERR_REG].set(err)
+        inflight = jnp.where(
+            flags & FLAG_ASYNC,
+            jnp.minimum(s.inflight + 1, isa.MAX_INFLIGHT), s.inflight)
+        return advance(s, regs=regs, inflight=inflight), mem2
+
+    def _br_casa(s, mem, row, home, is_cas):
+        dev = dev_of1(s.regs, home, row[isa.F_E],
+                      (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0)
+        addr = phys1(row[isa.F_A],
+                     s.regs[row[isa.F_B] & _REG_MASK] + row[isa.F_IMM])
+        old = ops.read1(mem, dev, addr)
+        hit = old == s.regs[row[isa.F_C] & _REG_MASK]
+        swp = s.regs[row[isa.F_D] & _REG_MASK]
+        new = jnp.where(hit, swp if is_cas else old + swp, old)
+        return advance(
+            s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK].set(old)), \
+            ops.write1(mem, dev, addr, new)
+
+    def br_cas(s, mem, row, home):
+        return _br_casa(s, mem, row, home, True)
+
+    def br_caa(s, mem, row, home):
+        return _br_casa(s, mem, row, home, False)
+
+    def br_jump(s, mem, row, home):
+        cond = row[isa.F_D]
+        lhs = s.regs[row[isa.F_A] & _REG_MASK]
+        rhs = jnp.where(row[isa.F_FLAGS] & FLAG_IMMB, row[isa.F_IMM],
+                        s.regs[row[isa.F_B] & _REG_MASK])
+        take = jnp.where(
+            cond == int(Alu.ALWAYS), True,
+            jnp.where(cond == int(Alu.EQ), lhs == rhs,
+                      jnp.where(cond == int(Alu.NE), lhs != rhs,
+                                jnp.where(cond == int(Alu.LT), lhs < rhs,
+                                          lhs >= rhs))))
+        return s._replace(
+            ctrl=jnp.where(take, _i64(1), _i64(0)),
+            pc_new=jnp.where(take, s.pc + 1 + row[isa.F_IMM2],
+                             s.pc + 1)), mem
+
+    def br_loop(s, mem, row, home):
+        cap = row[isa.F_IMM]
+        m = jnp.where(row[isa.F_FLAGS] & FLAG_MREG,
+                      jnp.clip(s.regs[row[isa.F_B] & _REG_MASK], 0, cap),
+                      cap)
+        skip = m <= 0
+        frame = jnp.stack([s.pc + 1, s.pc + row[isa.F_IMM2], m])
+        sp = jnp.clip(s.lsp, 0, depth - 1)
+        pushed = s.lstack.at[sp].set(frame)
+        return s._replace(
+            lstack=jnp.where(skip, s.lstack, pushed),
+            lsp=jnp.where(skip, s.lsp, s.lsp + 1),
+            ctrl=_i64(0),
+            pc_new=jnp.where(skip, s.pc + 1 + row[isa.F_IMM2],
+                             s.pc + 1)), mem
+
+    def br_wait(s, mem, row, home):
+        thr = jnp.where(row[isa.F_FLAGS] & FLAG_THR_REG,
+                        s.regs[row[isa.F_A] & _REG_MASK],
+                        row[isa.F_IMM])
+        return advance(s, inflight=jnp.minimum(
+            s.inflight, jnp.maximum(thr, 0))), mem
+
+    def br_ret(s, mem, row, home):
+        return advance(s, halted=jnp.asarray(True),
+                       ret=s.regs[row[isa.F_A] & _REG_MASK],
+                       status=row[isa.F_IMM]), mem
+
+    branches = [br_nop, br_movi, br_alu, br_load, br_store, br_memcpy,
+                br_cas, br_caa, br_jump, br_loop, br_wait, br_ret]
+
+    # --- post-step loop bookkeeping (scalar) -----------------------------
+    def loop_fixup1(s: ReqState) -> ReqState:
+        # taken jump: pop every frame whose body the jump escaped
+        def pop_cond(t):
+            lsp, = t
+            return (lsp > 0) & (s.lstack[jnp.maximum(lsp - 1, 0), 1]
+                                < s.pc_new)
+
+        def pop_body(t):
+            lsp, = t
+            return (lsp - 1,)
+
+        (pop_lsp,) = lax.while_loop(pop_cond, pop_body, (s.lsp,))
+
+        # normal advance: iterate / pop frames whose body just ended
+        def it_cond(t):
+            stack, lsp, pcn, done = t
+            top_end = stack[jnp.maximum(lsp - 1, 0), 1]
+            return (~done) & (lsp > 0) & (pcn == top_end + 1)
+
+        def it_body(t):
+            stack, lsp, pcn, done = t
+            idx = jnp.maximum(lsp - 1, 0)
+            rem = stack[idx, 2] - 1
+            cont = rem > 0
+            stack2 = stack.at[idx, 2].set(rem)
+            return (jnp.where(cont, stack2, stack),
+                    jnp.where(cont, lsp, lsp - 1),
+                    jnp.where(cont, stack[idx, 0], pcn),
+                    cont)
+
+        it_stack, it_lsp, it_pcn, _ = lax.while_loop(
+            it_cond, it_body,
+            (s.lstack, s.lsp, s.pc_new, jnp.asarray(False)))
+
+        is_jump = s.ctrl == 1
+        return s._replace(
+            pc=jnp.where(is_jump, s.pc_new, it_pcn),
+            lsp=jnp.where(is_jump, pop_lsp, it_lsp),
+            lstack=jnp.where(is_jump, s.lstack, it_stack))
+
+    def step_one(s: ReqState, mem, row, home, act):
+        """Execute one instruction of one request (if active)."""
+        def do(args):
+            s, mem = args
+            opc = jnp.clip(row[isa.F_OP], 0,
+                           len(branches) - 1).astype(jnp.int32)
+            s2, mem2 = lax.switch(opc, branches, s, mem, row, home)
+            s2 = s2._replace(steps=s2.steps + 1)
+            s2 = lax.cond(s2.halted, lambda t: t, loop_fixup1, s2)
+            return s2, mem2
+
+        return lax.cond(act, do, lambda a: a, (s, mem))
+
+    return step_one
+
+
+def _serial_step_fn(step_one):
+    """The contention-exact macro-step: requests 0..B-1 each execute one
+    instruction in lane order against the shared pool."""
+    def serial_step(s: ReqState, mem, rows, homes, active):
+        def body(mem, x):
+            s1, row, home, act = x
+            s2, mem2 = step_one(s1, mem, row, home, act)
+            return mem2, s2
+
+        mem2, s2 = lax.scan(body, mem, (s, rows, homes, active))
+        return s2, mem2
+
+    return serial_step
+
+
+def _sweep_conflict(r_lo, r_hi, w_lo, w_hi):
+    """Conflict existence over per-lane footprint intervals (see
+    ``lane_intervals``): does some lane's write window overlap another
+    lane's read or write window?  A sweep line over the sorted interval
+    starts with exclusive running maxima of the ends — O(L log L)."""
+    big = jnp.int64(1) << 62
+    empty_hi = -big
+    L = r_lo.shape[0]
+    lo = jnp.concatenate([r_lo, w_lo])
+    hi = jnp.concatenate([r_hi, w_hi])
+    isw = jnp.concatenate([jnp.zeros(L, bool), jnp.ones(L, bool)])
+    order = jnp.argsort(lo)
+    lo_s, hi_s, w_s = lo[order], hi[order], isw[order]
+    hi_w = jnp.where(w_s, hi_s, empty_hi)
+    neg1 = jnp.full(1, empty_hi)
+    excl_all = jnp.concatenate([neg1, lax.cummax(hi_s)[:-1]])
+    excl_w = jnp.concatenate([neg1, lax.cummax(hi_w)[:-1]])
+    return jnp.any(excl_w > lo_s) | \
+        jnp.any(w_s & (excl_all > lo_s))
+
+
+def _make_vector_step(*, base_c, mask_c, n_regions, n_dev, pool_words,
+                      max_window, depth, B, homes, failed, ops):
+    """The vectorized macro-step plus the per-lane footprint intervals
+    feeding the conflict sweep, parameterized over memory access.
+    Returns ``(vector_step, lane_intervals)``.
+
+    Every opcode path is computed for every lane and combined with
+    masks; scatters route dead lanes to out-of-bounds drop targets.
+    """
+    lane16 = jnp.arange(isa.NUM_REGS, dtype=jnp.int64)[None, :]
+    lane8 = jnp.arange(depth, dtype=jnp.int64)[None, :]
+
+    def rd(regs, idx):
+        """Vector register-file read: regs[b, idx[b] & 15]."""
+        return jnp.take_along_axis(
+            regs, (idx & _REG_MASK)[:, None], axis=1)[:, 0]
+
+    def dev_of_v(regs, field, via_reg):
+        d = jnp.where(via_reg, rd(regs, field), field)
+        return jnp.where(d == DEV_LOCAL, homes, jnp.mod(d, n_dev))
+
+    def _decode(s, rows):
+        """Shared per-lane decode of memory operands (word ops and
+        memcpy windows) used by both the vector step and the conflict
+        check."""
+        flags = rows[:, isa.F_FLAGS]
+        # word ops (LOAD/STORE/CAS/CAA) share the same addressing form
+        w_rid = jnp.clip(rows[:, isa.F_A], 0, n_regions - 1)
+        w_dev = dev_of_v(s.regs, rows[:, isa.F_E],
+                         (flags & FLAG_DEV_REG) != 0)
+        w_off = rd(s.regs, rows[:, isa.F_B]) + rows[:, isa.F_IMM]
+        w_addr = base_c[w_rid] + (w_off & mask_c[w_rid])
+        # memcpy operands
+        m_drid = jnp.clip(rows[:, isa.F_A], 0, n_regions - 1)
+        m_srid = jnp.clip(rows[:, isa.F_D], 0, n_regions - 1)
+        m_ddev = dev_of_v(s.regs, rows[:, isa.F_DST],
+                          (flags & FLAG_DSTDEV_REG) != 0)
+        m_sdev = dev_of_v(s.regs, rows[:, isa.F_C],
+                          (flags & FLAG_SRCDEV_REG) != 0)
+        cap = rows[:, isa.F_IMM]
+        lnreg = rd(s.regs, rows[:, isa.F_IMM2])
+        ln = jnp.where((flags & FLAG_LEN_REG) != 0,
+                       jnp.clip(lnreg, 0, cap), cap)
+        ln = jnp.minimum(jnp.minimum(ln, mask_c[m_drid] + 1),
+                         mask_c[m_srid] + 1)
+        m_fail = failed[m_ddev] | failed[m_sdev]
+        ln = jnp.where(m_fail, 0, ln)
+        m_soff = rd(s.regs, rows[:, isa.F_E])
+        m_doff = rd(s.regs, rows[:, isa.F_B])
+        return dict(flags=flags, w_rid=w_rid, w_dev=w_dev, w_addr=w_addr,
+                    m_drid=m_drid, m_srid=m_srid, m_ddev=m_ddev,
+                    m_sdev=m_sdev, ln=ln, m_fail=m_fail, m_soff=m_soff,
+                    m_doff=m_doff)
+
+    def lane_intervals(s, rows, active):
+        """Per-lane read/write footprint intervals in flat
+        ``dev * pool_words + addr`` coordinates.
+
+        Word ops contribute exact one-word intervals; memcpy its exact
+        window when it does not wrap the region mask, else the whole
+        region.  An atomic's read is the same word as its write, so it
+        contributes one write interval only.  The only false positive is
+        a memcpy whose *own* source and destination windows overlap
+        (memmove within one request), which merely takes the exact
+        serialized path.  Never unsound."""
+        d = _decode(s, rows)
+        opv = rows[:, isa.F_OP]
+        is_load = active & (opv == int(Op.LOAD))
+        is_store = active & (opv == int(Op.STORE))
+        is_atom = active & ((opv == int(Op.CAS)) | (opv == int(Op.CAA)))
+        is_mcpy = active & (opv == int(Op.MEMCPY))
+        P = pool_words
+        wf = d["w_dev"] * P + d["w_addr"]
+        # memcpy source span
+        s_size = mask_c[d["m_srid"]] + 1
+        s_start = d["m_soff"] & mask_c[d["m_srid"]]
+        s_wrap = (s_start + d["ln"]) > s_size
+        src_lo = d["m_sdev"] * P + base_c[d["m_srid"]] + \
+            jnp.where(s_wrap, 0, s_start)
+        src_hi = src_lo + jnp.where(s_wrap, s_size, d["ln"])
+        # memcpy destination span
+        d_size = mask_c[d["m_drid"]] + 1
+        d_start = d["m_doff"] & mask_c[d["m_drid"]]
+        d_wrap = (d_start + d["ln"]) > d_size
+        dst_lo = d["m_ddev"] * P + base_c[d["m_drid"]] + \
+            jnp.where(d_wrap, 0, d_start)
+        dst_hi = dst_lo + jnp.where(d_wrap, d_size, d["ln"])
+
+        big = jnp.int64(1) << 62
+        empty_lo, empty_hi = big, -big
+        r_lo = jnp.where(is_load, wf,
+                         jnp.where(is_mcpy, src_lo, empty_lo))
+        r_hi = jnp.where(is_load, wf + 1,
+                         jnp.where(is_mcpy, src_hi, empty_hi))
+        w_lo = jnp.where(is_store | is_atom, wf,
+                         jnp.where(is_mcpy, dst_lo, empty_lo))
+        w_hi = jnp.where(is_store | is_atom, wf + 1,
+                         jnp.where(is_mcpy, dst_hi, empty_hi))
+        # zero-length memcpy windows must be empty, not points
+        r_hi = jnp.where(r_hi <= r_lo, empty_hi, r_hi)
+        w_hi = jnp.where(w_hi <= w_lo, empty_hi, w_hi)
+        return r_lo, r_hi, w_lo, w_hi
+
+    def alu_eval_v(aop, a, b):
+        stacked = jnp.stack(_alu_table(a, b))      # (16, B)
+        return jnp.take_along_axis(
+            stacked, jnp.clip(aop, 0, 15)[None, :], axis=0)[0]
+
+    def vector_step(s: ReqState, mem, rows, active):
+        d = _decode(s, rows)
+        opv = rows[:, isa.F_OP]
+        flags = d["flags"]
+        imm = rows[:, isa.F_IMM]
+        imm2 = rows[:, isa.F_IMM2]
+
+        def is_op(o):
+            return active & (opv == int(o))
+
+        is_movi, is_alu = is_op(Op.MOVI), is_op(Op.ALU)
+        is_load, is_store = is_op(Op.LOAD), is_op(Op.STORE)
+        is_mcpy = is_op(Op.MEMCPY)
+        is_cas, is_caa = is_op(Op.CAS), is_op(Op.CAA)
+        is_jump, is_loop = is_op(Op.JUMP), is_op(Op.LOOP)
+        is_wait, is_ret = is_op(Op.WAIT), is_op(Op.RET)
+        is_atom = is_cas | is_caa
+
+        # --- ALU / MOVI --------------------------------------------
+        alu_rhs = jnp.where((flags & FLAG_IMMB) != 0, imm,
+                            rd(s.regs, rows[:, isa.F_B]))
+        alu_val = alu_eval_v(rows[:, isa.F_D],
+                             rd(s.regs, rows[:, isa.F_A]), alu_rhs)
+
+        # --- LOAD / CAS / CAA reads (step-start memory: the conflict
+        # check guarantees no same-step writer touches these words).
+        # Gated like the memcpy route: on a macro-step with no live
+        # word-memory lane the read values are fully masked out below,
+        # so skip the route entirely — in the sharded engine that is an
+        # all_gather + psum saved on every compute-only step (the
+        # predicate is globally agreed, so the mesh cannot diverge).
+        def read_words(m):
+            return ops.readv(m, d["w_dev"], d["w_addr"])
+
+        w_old = lax.cond(ops.any_lane(is_load | is_atom), read_words,
+                         lambda m: jnp.zeros(B, jnp.int64), mem)
+        hit = w_old == rd(s.regs, rows[:, isa.F_C])
+        swp = rd(s.regs, rows[:, isa.F_D])
+        atom_new = jnp.where(
+            hit, jnp.where(is_cas, swp, w_old + swp), w_old)
+
+        # --- register write channel (one per opcode at most) --------
+        err_old = s.regs[:, ERR_REG]
+        err_new = jnp.where(d["m_fail"], err_old | 1, err_old)
+        reg_w_mask = is_movi | is_alu | is_load | is_atom | is_mcpy
+        reg_w_idx = jnp.where(
+            is_mcpy, ERR_REG, rows[:, isa.F_DST] & _REG_MASK)
+        reg_w_val = jnp.where(
+            is_movi, imm,
+            jnp.where(is_alu, alu_val,
+                      jnp.where(is_load, w_old,
+                                jnp.where(is_atom, w_old, err_new))))
+        upd = (lane16 == reg_w_idx[:, None]) & reg_w_mask[:, None]
+        regs = jnp.where(upd, reg_w_val[:, None], s.regs)
+
+        # --- single-word scatter (STORE / CAS / CAA) -----------------
+        sw_mask = is_store | is_atom
+        sw_val = jnp.where(is_store, rd(s.regs, rows[:, isa.F_DST]),
+                           atom_new)
+        mem = lax.cond(
+            ops.any_lane(sw_mask),
+            lambda m: ops.writev(m, d["w_dev"], d["w_addr"], sw_val,
+                                 sw_mask),
+            lambda m: m, mem)
+
+        # --- memcpy window gather + scatter --------------------------
+        # The window machinery materializes (B, max_window) gathers —
+        # with a merged multi-tenant store max_window is the largest
+        # cap of *any* program, so skip it entirely on the (frequent)
+        # macro-steps where no live lane is copying.
+        def do_memcpy(mem):
+            iw = jnp.arange(max_window, dtype=jnp.int64)[None, :]
+            sphys = base_c[d["m_srid"]][:, None] + \
+                ((d["m_soff"][:, None] + iw)
+                 & mask_c[d["m_srid"]][:, None])
+            dphys = base_c[d["m_drid"]][:, None] + \
+                ((d["m_doff"][:, None] + iw)
+                 & mask_c[d["m_drid"]][:, None])
+            live = is_mcpy[:, None] & (iw < d["ln"][:, None])
+            svals = ops.readv_win(mem, d["m_sdev"], sphys)
+            return ops.writev_win(mem, d["m_ddev"], dphys, svals, live)
+
+        mem = lax.cond(ops.any_lane(is_mcpy), do_memcpy, lambda m: m, mem)
+
+        # --- inflight ------------------------------------------------
+        inflight = jnp.where(
+            is_mcpy & ((flags & FLAG_ASYNC) != 0),
+            jnp.minimum(s.inflight + 1, isa.MAX_INFLIGHT), s.inflight)
+        thr = jnp.where((flags & FLAG_THR_REG) != 0,
+                        rd(s.regs, rows[:, isa.F_A]), imm)
+        inflight = jnp.where(
+            is_wait, jnp.minimum(inflight, jnp.maximum(thr, 0)),
+            inflight)
+
+        # --- RET -----------------------------------------------------
+        halted = s.halted | is_ret
+        ret = jnp.where(is_ret, rd(s.regs, rows[:, isa.F_A]), s.ret)
+        status = jnp.where(is_ret, imm, s.status)
+
+        # --- control flow -------------------------------------------
+        jcond = rows[:, isa.F_D]
+        jlhs = rd(s.regs, rows[:, isa.F_A])
+        jrhs = jnp.where((flags & FLAG_IMMB) != 0, imm,
+                         rd(s.regs, rows[:, isa.F_B]))
+        take = jnp.where(
+            jcond == int(Alu.ALWAYS), True,
+            jnp.where(jcond == int(Alu.EQ), jlhs == jrhs,
+                      jnp.where(jcond == int(Alu.NE), jlhs != jrhs,
+                                jnp.where(jcond == int(Alu.LT),
+                                          jlhs < jrhs, jlhs >= jrhs))))
+        # LOOP push
+        cap = imm
+        m = jnp.where((flags & FLAG_MREG) != 0,
+                      jnp.clip(rd(s.regs, rows[:, isa.F_B]), 0, cap),
+                      cap)
+        skip = m <= 0
+        push = is_loop & ~skip
+        frame = jnp.stack([s.pc + 1, s.pc + imm2, m], axis=-1)  # (B, 3)
+        sp = jnp.clip(s.lsp, 0, depth - 1)
+        push_lane = (lane8 == sp[:, None]) & push[:, None]      # (B, 8)
+        lstack = jnp.where(push_lane[:, :, None], frame[:, None, :],
+                           s.lstack)
+        lsp = jnp.where(push, s.lsp + 1, s.lsp)
+
+        pc_new = jnp.where(
+            is_jump & take, s.pc + 1 + imm2,
+            jnp.where(is_loop & skip, s.pc + 1 + imm2, s.pc + 1))
+        ctrl = jnp.where(is_jump & take, _i64(1), _i64(0))
+
+        # --- loop fixup, vectorized over the batch -------------------
+        def top(field, stk, lsp_v):
+            idx = jnp.clip(lsp_v - 1, 0, depth - 1)
+            return jnp.take_along_axis(
+                stk[:, :, field], idx[:, None], axis=1)[:, 0]
+
+        # taken jump: pop every frame whose body the jump escaped
+        pop_lsp = lsp
+        for _ in range(depth):
+            cond = (pop_lsp > 0) & (top(1, lstack, pop_lsp) < pc_new)
+            pop_lsp = jnp.where(cond, pop_lsp - 1, pop_lsp)
+
+        # normal advance: iterate / pop frames whose body just ended
+        it_stack, it_lsp, it_pcn = lstack, lsp, pc_new
+        done = jnp.zeros(B, bool)
+        for _ in range(depth):
+            idx = jnp.clip(it_lsp - 1, 0, depth - 1)
+            t_end = top(1, it_stack, it_lsp)
+            cond = (~done) & (it_lsp > 0) & (it_pcn == t_end + 1)
+            rem = top(2, it_stack, it_lsp) - 1
+            cont = rem > 0
+            set_m = cond & cont
+            upd2 = (lane8 == idx[:, None]) & set_m[:, None]
+            it_stack = jnp.where(
+                upd2[:, :, None]
+                & (jnp.arange(3) == 2)[None, None, :],
+                rem[:, None, None], it_stack)
+            it_pcn = jnp.where(set_m, top(0, it_stack, it_lsp), it_pcn)
+            it_lsp = jnp.where(cond & ~cont, it_lsp - 1, it_lsp)
+            done = done | set_m
+
+        is_jtaken = ctrl == 1
+        fix = active & ~is_ret
+        pc = jnp.where(fix, jnp.where(is_jtaken, pc_new, it_pcn), s.pc)
+        lsp_f = jnp.where(fix, jnp.where(is_jtaken, pop_lsp, it_lsp),
+                          jnp.where(active, lsp, s.lsp))
+        lstack_f = jnp.where(
+            fix[:, None, None],
+            jnp.where(is_jtaken[:, None, None], lstack, it_stack),
+            jnp.where(active[:, None, None], lstack, s.lstack))
+
+        # --- merge, masking out inactive lanes -----------------------
+        regs = jnp.where(active[:, None], regs, s.regs)
+        s2 = ReqState(
+            pc=pc, regs=regs, lstack=lstack_f, lsp=lsp_f,
+            inflight=jnp.where(active, inflight, s.inflight),
+            halted=jnp.where(active, halted, s.halted),
+            ret=jnp.where(active, ret, s.ret),
+            status=jnp.where(active, status, s.status),
+            steps=s.steps + active.astype(jnp.int64),
+            ctrl=jnp.where(active, ctrl, s.ctrl),
+            pc_new=jnp.where(active, pc_new, s.pc_new))
+        return s2, mem
+
+    return vector_step, lane_intervals
+
+
+def _program_statics(codes, fuels):
+    """Normalize a merged instruction store: per-slot entry/end/fuel
+    vectors plus the static memcpy window — shared by the dense and
+    sharded engine builders."""
+    codes = [np.asarray(c, dtype=np.int64).reshape(-1, isa.INSTR_WIDTH)
+             for c in codes]
+    if not codes:
+        raise ValueError("engine needs at least one program")
+    code_np = np.concatenate(codes, axis=0)
+    lens_np = np.asarray([c.shape[0] for c in codes], dtype=np.int64)
+    start_np = np.concatenate(
+        [np.zeros(1, np.int64), np.cumsum(lens_np)[:-1]])
+    end_np = start_np + lens_np
+    fuel_np = np.asarray([int(f) for f in fuels], dtype=np.int64)
+    if fuel_np.shape != (len(codes),):
+        raise ValueError("one step bound per program required")
+    # Static memcpy window: the largest cap used by any merged program.
+    memcpy_caps = [int(r[isa.F_IMM]) for r in code_np
+                   if int(r[isa.F_OP]) == int(Op.MEMCPY)]
+    max_window = int(min(max(memcpy_caps, default=1), isa.MAX_MEMCPY_WORDS))
+    return code_np, start_np, end_np, fuel_np, max_window
+
+
 def _build_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
                   regions: RegionTable, n_devices: int, batch: int):
     """Build the lockstep engine over a *merged* instruction store.
@@ -155,26 +871,12 @@ def _build_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
     ``ret/status/steps`` are [batch] and ``regs`` is [batch, 16].
     Call under ``vm.x64()`` (or use the ``invoke*`` wrappers).
     """
-    codes = [np.asarray(c, dtype=np.int64).reshape(-1, isa.INSTR_WIDTH)
-             for c in codes]
-    if not codes:
-        raise ValueError("engine needs at least one program")
-    code_np = np.concatenate(codes, axis=0)
-    lens_np = np.asarray([c.shape[0] for c in codes], dtype=np.int64)
-    start_np = np.concatenate(
-        [np.zeros(1, np.int64), np.cumsum(lens_np)[:-1]])
-    end_np = start_np + lens_np
-    fuel_np = np.asarray([int(f) for f in fuels], dtype=np.int64)
-    if fuel_np.shape != (len(codes),):
-        raise ValueError("one step bound per program required")
-    n_ops = len(codes)
+    code_np, start_np, end_np, fuel_np, max_window = \
+        _program_statics(codes, fuels)
+    n_ops = int(fuel_np.shape[0])
     n_instr = int(code_np.shape[0])
     base_np, mask_np, _ = regions.as_arrays()
     n_regions = int(base_np.shape[0])
-    # Static memcpy window: the largest cap used by any merged program.
-    memcpy_caps = [int(r[isa.F_IMM]) for r in code_np
-                   if int(r[isa.F_OP]) == int(Op.MEMCPY)]
-    max_window = int(min(max(memcpy_caps, default=1), isa.MAX_MEMCPY_WORDS))
     n_dev = int(n_devices)
     B = int(batch)
     depth = isa.LOOP_STACK_DEPTH
@@ -199,523 +901,16 @@ def _build_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
         if params.shape[1]:
             regs0 = lax.dynamic_update_slice(regs0, params, (0, 0))
 
-        # ==============================================================
-        # Scalar (one-request) step — the lax.switch interpreter.  Used
-        # directly at batch=1 and as the serialized fallback under
-        # contention; its semantics are the reference for the vector step.
-        # ==============================================================
-
-        def dev_of1(regs, home, field, via_reg):
-            dreg = regs[field & _REG_MASK]
-            d = jnp.where(via_reg, dreg, field)
-            return jnp.where(d == DEV_LOCAL, home, jnp.mod(d, n_dev))
-
-        def phys1(rid, off):
-            return base_c[rid] + (off & mask_c[rid])
-
-        def alu_eval1(aop, a, b):
-            return jnp.stack(_alu_table(a, b))[jnp.clip(aop, 0, 15)]
-
-        def advance(s: ReqState, **kw) -> ReqState:
-            return s._replace(ctrl=_i64(0), pc_new=s.pc + 1, **kw)
-
-        # --- one branch per opcode; (s, mem, row, home) -> (s, mem) ----
-        def br_nop(s, mem, row, home):
-            return advance(s), mem
-
-        def br_movi(s, mem, row, home):
-            return advance(s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK]
-                           .set(row[isa.F_IMM])), mem
-
-        def br_alu(s, mem, row, home):
-            rhs = jnp.where(row[isa.F_FLAGS] & FLAG_IMMB, row[isa.F_IMM],
-                            s.regs[row[isa.F_B] & _REG_MASK])
-            val = alu_eval1(row[isa.F_D], s.regs[row[isa.F_A] & _REG_MASK],
-                            rhs)
-            return advance(s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK]
-                           .set(val)), mem
-
-        def br_load(s, mem, row, home):
-            dev = dev_of1(s.regs, home, row[isa.F_E],
-                          (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0)
-            addr = phys1(row[isa.F_A],
-                         s.regs[row[isa.F_B] & _REG_MASK] + row[isa.F_IMM])
-            val = mem[dev, addr]
-            return advance(s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK]
-                           .set(val)), mem
-
-        def br_store(s, mem, row, home):
-            dev = dev_of1(s.regs, home, row[isa.F_E],
-                          (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0)
-            addr = phys1(row[isa.F_A],
-                         s.regs[row[isa.F_B] & _REG_MASK] + row[isa.F_IMM])
-            val = s.regs[row[isa.F_DST] & _REG_MASK]
-            return advance(s), mem.at[dev, addr].set(val)
-
-        def br_memcpy(s, mem, row, home):
-            flags = row[isa.F_FLAGS]
-            ddev = dev_of1(s.regs, home, row[isa.F_DST],
-                           (flags & FLAG_DSTDEV_REG) != 0)
-            sdev = dev_of1(s.regs, home, row[isa.F_C],
-                           (flags & FLAG_SRCDEV_REG) != 0)
-            drid, srid = row[isa.F_A], row[isa.F_D]
-            cap = row[isa.F_IMM]
-            lnreg = s.regs[row[isa.F_IMM2] & _REG_MASK]
-            ln = jnp.where(flags & FLAG_LEN_REG,
-                           jnp.clip(lnreg, 0, cap), cap)
-            ln = jnp.minimum(jnp.minimum(ln, mask_c[drid] + 1),
-                             mask_c[srid] + 1)
-            fail = failed[ddev] | failed[sdev]
-            ln = jnp.where(fail, 0, ln)
-            i = jnp.arange(max_window, dtype=jnp.int64)
-            soff = s.regs[row[isa.F_E] & _REG_MASK]
-            doff = s.regs[row[isa.F_B] & _REG_MASK]
-            sphys = base_c[srid] + ((soff + i) & mask_c[srid])
-            dphys = base_c[drid] + ((doff + i) & mask_c[drid])
-            svals = mem[sdev, sphys]
-            live = i < ln
-            # Masked lanes all write the lane-0 value to the lane-0 slot so
-            # duplicate scatter indices always carry identical values.
-            val0 = jnp.where(ln > 0, svals[0], mem[ddev, dphys[0]])
-            w_idx = jnp.where(live, dphys, dphys[0])
-            w_val = jnp.where(live, svals, val0)
-            mem2 = mem.at[ddev, w_idx].set(w_val)
-            err = jnp.where(fail, s.regs[ERR_REG] | 1, s.regs[ERR_REG])
-            regs = s.regs.at[ERR_REG].set(err)
-            inflight = jnp.where(
-                flags & FLAG_ASYNC,
-                jnp.minimum(s.inflight + 1, isa.MAX_INFLIGHT), s.inflight)
-            return advance(s, regs=regs, inflight=inflight), mem2
-
-        def _br_casa(s, mem, row, home, is_cas):
-            dev = dev_of1(s.regs, home, row[isa.F_E],
-                          (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0)
-            addr = phys1(row[isa.F_A],
-                         s.regs[row[isa.F_B] & _REG_MASK] + row[isa.F_IMM])
-            old = mem[dev, addr]
-            hit = old == s.regs[row[isa.F_C] & _REG_MASK]
-            swp = s.regs[row[isa.F_D] & _REG_MASK]
-            new = jnp.where(hit, swp if is_cas else old + swp, old)
-            return advance(
-                s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK].set(old)), \
-                mem.at[dev, addr].set(new)
-
-        def br_cas(s, mem, row, home):
-            return _br_casa(s, mem, row, home, True)
-
-        def br_caa(s, mem, row, home):
-            return _br_casa(s, mem, row, home, False)
-
-        def br_jump(s, mem, row, home):
-            cond = row[isa.F_D]
-            lhs = s.regs[row[isa.F_A] & _REG_MASK]
-            rhs = jnp.where(row[isa.F_FLAGS] & FLAG_IMMB, row[isa.F_IMM],
-                            s.regs[row[isa.F_B] & _REG_MASK])
-            take = jnp.where(
-                cond == int(Alu.ALWAYS), True,
-                jnp.where(cond == int(Alu.EQ), lhs == rhs,
-                          jnp.where(cond == int(Alu.NE), lhs != rhs,
-                                    jnp.where(cond == int(Alu.LT), lhs < rhs,
-                                              lhs >= rhs))))
-            return s._replace(
-                ctrl=jnp.where(take, _i64(1), _i64(0)),
-                pc_new=jnp.where(take, s.pc + 1 + row[isa.F_IMM2],
-                                 s.pc + 1)), mem
-
-        def br_loop(s, mem, row, home):
-            cap = row[isa.F_IMM]
-            m = jnp.where(row[isa.F_FLAGS] & FLAG_MREG,
-                          jnp.clip(s.regs[row[isa.F_B] & _REG_MASK], 0, cap),
-                          cap)
-            skip = m <= 0
-            frame = jnp.stack([s.pc + 1, s.pc + row[isa.F_IMM2], m])
-            sp = jnp.clip(s.lsp, 0, depth - 1)
-            pushed = s.lstack.at[sp].set(frame)
-            return s._replace(
-                lstack=jnp.where(skip, s.lstack, pushed),
-                lsp=jnp.where(skip, s.lsp, s.lsp + 1),
-                ctrl=_i64(0),
-                pc_new=jnp.where(skip, s.pc + 1 + row[isa.F_IMM2],
-                                 s.pc + 1)), mem
-
-        def br_wait(s, mem, row, home):
-            thr = jnp.where(row[isa.F_FLAGS] & FLAG_THR_REG,
-                            s.regs[row[isa.F_A] & _REG_MASK],
-                            row[isa.F_IMM])
-            return advance(s, inflight=jnp.minimum(
-                s.inflight, jnp.maximum(thr, 0))), mem
-
-        def br_ret(s, mem, row, home):
-            return advance(s, halted=jnp.asarray(True),
-                           ret=s.regs[row[isa.F_A] & _REG_MASK],
-                           status=row[isa.F_IMM]), mem
-
-        branches = [br_nop, br_movi, br_alu, br_load, br_store, br_memcpy,
-                    br_cas, br_caa, br_jump, br_loop, br_wait, br_ret]
-
-        # --- post-step loop bookkeeping (scalar) ------------------------
-        def loop_fixup1(s: ReqState) -> ReqState:
-            # taken jump: pop every frame whose body the jump escaped
-            def pop_cond(t):
-                lsp, = t
-                return (lsp > 0) & (s.lstack[jnp.maximum(lsp - 1, 0), 1]
-                                    < s.pc_new)
-
-            def pop_body(t):
-                lsp, = t
-                return (lsp - 1,)
-
-            (pop_lsp,) = lax.while_loop(pop_cond, pop_body, (s.lsp,))
-
-            # normal advance: iterate / pop frames whose body just ended
-            def it_cond(t):
-                stack, lsp, pcn, done = t
-                top_end = stack[jnp.maximum(lsp - 1, 0), 1]
-                return (~done) & (lsp > 0) & (pcn == top_end + 1)
-
-            def it_body(t):
-                stack, lsp, pcn, done = t
-                idx = jnp.maximum(lsp - 1, 0)
-                rem = stack[idx, 2] - 1
-                cont = rem > 0
-                stack2 = stack.at[idx, 2].set(rem)
-                return (jnp.where(cont, stack2, stack),
-                        jnp.where(cont, lsp, lsp - 1),
-                        jnp.where(cont, stack[idx, 0], pcn),
-                        cont)
-
-            it_stack, it_lsp, it_pcn, _ = lax.while_loop(
-                it_cond, it_body,
-                (s.lstack, s.lsp, s.pc_new, jnp.asarray(False)))
-
-            is_jump = s.ctrl == 1
-            return s._replace(
-                pc=jnp.where(is_jump, s.pc_new, it_pcn),
-                lsp=jnp.where(is_jump, pop_lsp, it_lsp),
-                lstack=jnp.where(is_jump, s.lstack, it_stack))
-
-        def step_one(s: ReqState, mem, row, home, act):
-            """Execute one instruction of one request (if active)."""
-            def do(args):
-                s, mem = args
-                opc = jnp.clip(row[isa.F_OP], 0,
-                               len(branches) - 1).astype(jnp.int32)
-                s2, mem2 = lax.switch(opc, branches, s, mem, row, home)
-                s2 = s2._replace(steps=s2.steps + 1)
-                s2 = lax.cond(s2.halted, lambda t: t, loop_fixup1, s2)
-                return s2, mem2
-
-            return lax.cond(act, do, lambda a: a, (s, mem))
-
-        def serial_step(s: ReqState, mem, rows, active):
-            """The contention-exact macro-step: requests 0..B-1 each execute
-            one instruction in index order against the shared pool."""
-            def body(mem, x):
-                s1, row, home, act = x
-                s2, mem2 = step_one(s1, mem, row, home, act)
-                return mem2, s2
-
-            mem2, s2 = lax.scan(body, mem, (s, rows, homes, active))
-            return s2, mem2
-
-        # ==============================================================
-        # Vectorized macro-step (used when the step is conflict-free).
-        # Every opcode path is computed for every lane and combined with
-        # masks; scatters route dead lanes to out-of-bounds drop targets.
-        # ==============================================================
-
-        lane16 = jnp.arange(isa.NUM_REGS, dtype=jnp.int64)[None, :]
-        lane8 = jnp.arange(depth, dtype=jnp.int64)[None, :]
-
-        def rd(regs, idx):
-            """Vector register-file read: regs[b, idx[b] & 15]."""
-            return jnp.take_along_axis(
-                regs, (idx & _REG_MASK)[:, None], axis=1)[:, 0]
-
-        def dev_of_v(regs, field, via_reg):
-            d = jnp.where(via_reg, rd(regs, field), field)
-            return jnp.where(d == DEV_LOCAL, homes, jnp.mod(d, n_dev))
-
-        def _decode(s, rows):
-            """Shared per-lane decode of memory operands (word ops and
-            memcpy windows) used by both the vector step and the conflict
-            check."""
-            flags = rows[:, isa.F_FLAGS]
-            # word ops (LOAD/STORE/CAS/CAA) share the same addressing form
-            w_rid = jnp.clip(rows[:, isa.F_A], 0, n_regions - 1)
-            w_dev = dev_of_v(s.regs, rows[:, isa.F_E],
-                             (flags & FLAG_DEV_REG) != 0)
-            w_off = rd(s.regs, rows[:, isa.F_B]) + rows[:, isa.F_IMM]
-            w_addr = base_c[w_rid] + (w_off & mask_c[w_rid])
-            # memcpy operands
-            m_drid = jnp.clip(rows[:, isa.F_A], 0, n_regions - 1)
-            m_srid = jnp.clip(rows[:, isa.F_D], 0, n_regions - 1)
-            m_ddev = dev_of_v(s.regs, rows[:, isa.F_DST],
-                              (flags & FLAG_DSTDEV_REG) != 0)
-            m_sdev = dev_of_v(s.regs, rows[:, isa.F_C],
-                              (flags & FLAG_SRCDEV_REG) != 0)
-            cap = rows[:, isa.F_IMM]
-            lnreg = rd(s.regs, rows[:, isa.F_IMM2])
-            ln = jnp.where((flags & FLAG_LEN_REG) != 0,
-                           jnp.clip(lnreg, 0, cap), cap)
-            ln = jnp.minimum(jnp.minimum(ln, mask_c[m_drid] + 1),
-                             mask_c[m_srid] + 1)
-            m_fail = failed[m_ddev] | failed[m_sdev]
-            ln = jnp.where(m_fail, 0, ln)
-            m_soff = rd(s.regs, rows[:, isa.F_E])
-            m_doff = rd(s.regs, rows[:, isa.F_B])
-            return dict(flags=flags, w_rid=w_rid, w_dev=w_dev, w_addr=w_addr,
-                        m_drid=m_drid, m_srid=m_srid, m_ddev=m_ddev,
-                        m_sdev=m_sdev, ln=ln, m_fail=m_fail, m_soff=m_soff,
-                        m_doff=m_doff)
-
-        def detect_conflict(s, rows, active):
-            """True iff some request's write window may overlap another
-            request's read or write window this macro-step.
-
-            Word ops contribute exact one-word intervals; memcpy its exact
-            window when it does not wrap the region mask, else the whole
-            region.  An atomic's read is the same word as its write, so it
-            contributes one write interval only.  Conflict existence is a
-            sweep line over the 2B sorted interval starts with exclusive
-            running maxima of the ends — O(B log B), not O(B^2).  The only
-            false positive is a memcpy whose *own* source and destination
-            windows overlap (memmove within one request), which merely
-            takes the exact serialized path.  Never unsound."""
-            d = _decode(s, rows)
-            opv = rows[:, isa.F_OP]
-            is_load = active & (opv == int(Op.LOAD))
-            is_store = active & (opv == int(Op.STORE))
-            is_atom = active & ((opv == int(Op.CAS)) | (opv == int(Op.CAA)))
-            is_mcpy = active & (opv == int(Op.MEMCPY))
-            P = pool_words
-            wf = d["w_dev"] * P + d["w_addr"]
-            # memcpy source span
-            s_size = mask_c[d["m_srid"]] + 1
-            s_start = d["m_soff"] & mask_c[d["m_srid"]]
-            s_wrap = (s_start + d["ln"]) > s_size
-            src_lo = d["m_sdev"] * P + base_c[d["m_srid"]] + \
-                jnp.where(s_wrap, 0, s_start)
-            src_hi = src_lo + jnp.where(s_wrap, s_size, d["ln"])
-            # memcpy destination span
-            d_size = mask_c[d["m_drid"]] + 1
-            d_start = d["m_doff"] & mask_c[d["m_drid"]]
-            d_wrap = (d_start + d["ln"]) > d_size
-            dst_lo = d["m_ddev"] * P + base_c[d["m_drid"]] + \
-                jnp.where(d_wrap, 0, d_start)
-            dst_hi = dst_lo + jnp.where(d_wrap, d_size, d["ln"])
-
-            big = jnp.int64(1) << 62
-            empty_lo, empty_hi = big, -big
-            r_lo = jnp.where(is_load, wf,
-                             jnp.where(is_mcpy, src_lo, empty_lo))
-            r_hi = jnp.where(is_load, wf + 1,
-                             jnp.where(is_mcpy, src_hi, empty_hi))
-            w_lo = jnp.where(is_store | is_atom, wf,
-                             jnp.where(is_mcpy, dst_lo, empty_lo))
-            w_hi = jnp.where(is_store | is_atom, wf + 1,
-                             jnp.where(is_mcpy, dst_hi, empty_hi))
-            # zero-length memcpy windows must be empty, not points
-            r_hi = jnp.where(r_hi <= r_lo, empty_hi, r_hi)
-            w_hi = jnp.where(w_hi <= w_lo, empty_hi, w_hi)
-
-            lo = jnp.concatenate([r_lo, w_lo])
-            hi = jnp.concatenate([r_hi, w_hi])
-            isw = jnp.concatenate([jnp.zeros(B, bool), jnp.ones(B, bool)])
-            order = jnp.argsort(lo)
-            lo_s, hi_s, w_s = lo[order], hi[order], isw[order]
-            hi_w = jnp.where(w_s, hi_s, empty_hi)
-            neg1 = jnp.full(1, empty_hi)
-            excl_all = jnp.concatenate([neg1, lax.cummax(hi_s)[:-1]])
-            excl_w = jnp.concatenate([neg1, lax.cummax(hi_w)[:-1]])
-            return jnp.any(excl_w > lo_s) | \
-                jnp.any(w_s & (excl_all > lo_s))
-
-        def alu_eval_v(aop, a, b):
-            stacked = jnp.stack(_alu_table(a, b))      # (16, B)
-            return jnp.take_along_axis(
-                stacked, jnp.clip(aop, 0, 15)[None, :], axis=0)[0]
-
-        def vector_step(s: ReqState, mem, rows, active):
-            d = _decode(s, rows)
-            opv = rows[:, isa.F_OP]
-            flags = d["flags"]
-            imm = rows[:, isa.F_IMM]
-            imm2 = rows[:, isa.F_IMM2]
-
-            def is_op(o):
-                return active & (opv == int(o))
-
-            is_movi, is_alu = is_op(Op.MOVI), is_op(Op.ALU)
-            is_load, is_store = is_op(Op.LOAD), is_op(Op.STORE)
-            is_mcpy = is_op(Op.MEMCPY)
-            is_cas, is_caa = is_op(Op.CAS), is_op(Op.CAA)
-            is_jump, is_loop = is_op(Op.JUMP), is_op(Op.LOOP)
-            is_wait, is_ret = is_op(Op.WAIT), is_op(Op.RET)
-            is_atom = is_cas | is_caa
-
-            # --- ALU / MOVI --------------------------------------------
-            alu_rhs = jnp.where((flags & FLAG_IMMB) != 0, imm,
-                                rd(s.regs, rows[:, isa.F_B]))
-            alu_val = alu_eval_v(rows[:, isa.F_D],
-                                 rd(s.regs, rows[:, isa.F_A]), alu_rhs)
-
-            # --- LOAD / CAS / CAA reads (step-start memory: the conflict
-            # check guarantees no same-step writer touches these words) ---
-            g_dev = jnp.clip(d["w_dev"], 0, n_dev - 1)
-            g_addr = jnp.clip(d["w_addr"], 0, pool_words - 1)
-            w_old = mem[g_dev, g_addr]
-            hit = w_old == rd(s.regs, rows[:, isa.F_C])
-            swp = rd(s.regs, rows[:, isa.F_D])
-            atom_new = jnp.where(
-                hit, jnp.where(is_cas, swp, w_old + swp), w_old)
-
-            # --- register write channel (one per opcode at most) --------
-            err_old = s.regs[:, ERR_REG]
-            err_new = jnp.where(d["m_fail"], err_old | 1, err_old)
-            reg_w_mask = is_movi | is_alu | is_load | is_atom | is_mcpy
-            reg_w_idx = jnp.where(
-                is_mcpy, ERR_REG, rows[:, isa.F_DST] & _REG_MASK)
-            reg_w_val = jnp.where(
-                is_movi, imm,
-                jnp.where(is_alu, alu_val,
-                          jnp.where(is_load, w_old,
-                                    jnp.where(is_atom, w_old, err_new))))
-            upd = (lane16 == reg_w_idx[:, None]) & reg_w_mask[:, None]
-            regs = jnp.where(upd, reg_w_val[:, None], s.regs)
-
-            # --- single-word scatter (STORE / CAS / CAA) -----------------
-            sw_mask = is_store | is_atom
-            sw_val = jnp.where(is_store, rd(s.regs, rows[:, isa.F_DST]),
-                               atom_new)
-            mem = mem.at[jnp.where(sw_mask, d["w_dev"], n_dev),
-                         jnp.where(sw_mask, d["w_addr"], pool_words)
-                         ].set(sw_val, mode="drop")
-
-            # --- memcpy window gather + scatter --------------------------
-            # The window machinery materializes (B, max_window) gathers —
-            # with a merged multi-tenant store max_window is the largest
-            # cap of *any* program, so skip it entirely on the (frequent)
-            # macro-steps where no live lane is copying.
-            def do_memcpy(mem):
-                iw = jnp.arange(max_window, dtype=jnp.int64)[None, :]
-                sphys = base_c[d["m_srid"]][:, None] + \
-                    ((d["m_soff"][:, None] + iw)
-                     & mask_c[d["m_srid"]][:, None])
-                dphys = base_c[d["m_drid"]][:, None] + \
-                    ((d["m_doff"][:, None] + iw)
-                     & mask_c[d["m_drid"]][:, None])
-                live = is_mcpy[:, None] & (iw < d["ln"][:, None])
-                sdev_g = jnp.clip(d["m_sdev"], 0, n_dev - 1)[:, None]
-                svals = mem[sdev_g, jnp.clip(sphys, 0, pool_words - 1)]
-                return mem.at[jnp.where(live, d["m_ddev"][:, None], n_dev),
-                              jnp.where(live, dphys, pool_words)
-                              ].set(svals, mode="drop")
-
-            mem = lax.cond(jnp.any(is_mcpy), do_memcpy, lambda m: m, mem)
-
-            # --- inflight ------------------------------------------------
-            inflight = jnp.where(
-                is_mcpy & ((flags & FLAG_ASYNC) != 0),
-                jnp.minimum(s.inflight + 1, isa.MAX_INFLIGHT), s.inflight)
-            thr = jnp.where((flags & FLAG_THR_REG) != 0,
-                            rd(s.regs, rows[:, isa.F_A]), imm)
-            inflight = jnp.where(
-                is_wait, jnp.minimum(inflight, jnp.maximum(thr, 0)),
-                inflight)
-
-            # --- RET -----------------------------------------------------
-            halted = s.halted | is_ret
-            ret = jnp.where(is_ret, rd(s.regs, rows[:, isa.F_A]), s.ret)
-            status = jnp.where(is_ret, imm, s.status)
-
-            # --- control flow -------------------------------------------
-            jcond = rows[:, isa.F_D]
-            jlhs = rd(s.regs, rows[:, isa.F_A])
-            jrhs = jnp.where((flags & FLAG_IMMB) != 0, imm,
-                             rd(s.regs, rows[:, isa.F_B]))
-            take = jnp.where(
-                jcond == int(Alu.ALWAYS), True,
-                jnp.where(jcond == int(Alu.EQ), jlhs == jrhs,
-                          jnp.where(jcond == int(Alu.NE), jlhs != jrhs,
-                                    jnp.where(jcond == int(Alu.LT),
-                                              jlhs < jrhs, jlhs >= jrhs))))
-            # LOOP push
-            cap = imm
-            m = jnp.where((flags & FLAG_MREG) != 0,
-                          jnp.clip(rd(s.regs, rows[:, isa.F_B]), 0, cap),
-                          cap)
-            skip = m <= 0
-            push = is_loop & ~skip
-            frame = jnp.stack([s.pc + 1, s.pc + imm2, m], axis=-1)  # (B, 3)
-            sp = jnp.clip(s.lsp, 0, depth - 1)
-            push_lane = (lane8 == sp[:, None]) & push[:, None]      # (B, 8)
-            lstack = jnp.where(push_lane[:, :, None], frame[:, None, :],
-                               s.lstack)
-            lsp = jnp.where(push, s.lsp + 1, s.lsp)
-
-            pc_new = jnp.where(
-                is_jump & take, s.pc + 1 + imm2,
-                jnp.where(is_loop & skip, s.pc + 1 + imm2, s.pc + 1))
-            ctrl = jnp.where(is_jump & take, _i64(1), _i64(0))
-
-            # --- loop fixup, vectorized over the batch -------------------
-            def top(field, stk, lsp_v):
-                idx = jnp.clip(lsp_v - 1, 0, depth - 1)
-                return jnp.take_along_axis(
-                    stk[:, :, field], idx[:, None], axis=1)[:, 0]
-
-            # taken jump: pop every frame whose body the jump escaped
-            pop_lsp = lsp
-            for _ in range(depth):
-                cond = (pop_lsp > 0) & (top(1, lstack, pop_lsp) < pc_new)
-                pop_lsp = jnp.where(cond, pop_lsp - 1, pop_lsp)
-
-            # normal advance: iterate / pop frames whose body just ended
-            it_stack, it_lsp, it_pcn = lstack, lsp, pc_new
-            done = jnp.zeros(B, bool)
-            for _ in range(depth):
-                idx = jnp.clip(it_lsp - 1, 0, depth - 1)
-                t_end = top(1, it_stack, it_lsp)
-                cond = (~done) & (it_lsp > 0) & (it_pcn == t_end + 1)
-                rem = top(2, it_stack, it_lsp) - 1
-                cont = rem > 0
-                set_m = cond & cont
-                upd2 = (lane8 == idx[:, None]) & set_m[:, None]
-                it_stack = jnp.where(
-                    upd2[:, :, None]
-                    & (jnp.arange(3) == 2)[None, None, :],
-                    rem[:, None, None], it_stack)
-                it_pcn = jnp.where(set_m, top(0, it_stack, it_lsp), it_pcn)
-                it_lsp = jnp.where(cond & ~cont, it_lsp - 1, it_lsp)
-                done = done | set_m
-
-            is_jtaken = ctrl == 1
-            fix = active & ~is_ret
-            pc = jnp.where(fix, jnp.where(is_jtaken, pc_new, it_pcn), s.pc)
-            lsp_f = jnp.where(fix, jnp.where(is_jtaken, pop_lsp, it_lsp),
-                              jnp.where(active, lsp, s.lsp))
-            lstack_f = jnp.where(
-                fix[:, None, None],
-                jnp.where(is_jtaken[:, None, None], lstack, it_stack),
-                jnp.where(active[:, None, None], lstack, s.lstack))
-
-            # --- merge, masking out inactive lanes -----------------------
-            regs = jnp.where(active[:, None], regs, s.regs)
-            s2 = ReqState(
-                pc=pc, regs=regs, lstack=lstack_f, lsp=lsp_f,
-                inflight=jnp.where(active, inflight, s.inflight),
-                halted=jnp.where(active, halted, s.halted),
-                ret=jnp.where(active, ret, s.ret),
-                status=jnp.where(active, status, s.status),
-                steps=s.steps + active.astype(jnp.int64),
-                ctrl=jnp.where(active, ctrl, s.ctrl),
-                pc_new=jnp.where(active, pc_new, s.pc_new))
-            return s2, mem
-
-        # ==============================================================
-        # Driver
-        # ==============================================================
+        ops = _DenseOps(n_dev, int(pool_words))
+        step_one = _make_scalar_step(
+            base_c=base_c, mask_c=mask_c, failed=failed, n_dev=n_dev,
+            max_window=max_window, depth=depth, ops=ops)
+        serial_step = _serial_step_fn(step_one)
+        vector_step, lane_intervals = _make_vector_step(
+            base_c=base_c, mask_c=mask_c, n_regions=n_regions,
+            n_dev=n_dev, pool_words=int(pool_words),
+            max_window=max_window, depth=depth, B=B, homes=homes,
+            failed=failed, ops=ops)
 
         def live_mask(s: ReqState):
             return (~s.halted) & (s.pc < end_arr) & (s.steps < fuel_arr)
@@ -727,11 +922,13 @@ def _build_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
             if B == 1:
                 # single request: the scalar switch interpreter, no
                 # conflict machinery — the classic Tiara MP datapath
-                s2, mem2 = serial_step(s, mem, rows, active)
+                s2, mem2 = serial_step(s, mem, rows, homes, active)
             else:
                 s2, mem2 = lax.cond(
-                    detect_conflict(s, rows, active),
-                    serial_step, vector_step, s, mem, rows, active)
+                    _sweep_conflict(*lane_intervals(s, rows, active)),
+                    lambda s_, m_, r_, a_: serial_step(s_, m_, r_, homes,
+                                                       a_),
+                    vector_step, s, mem, rows, active)
             return s2, mem2
 
         def cond(carry):
@@ -757,6 +954,173 @@ def _build_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
                         steps=final.steps, regs=final.regs)
 
     return jax.jit(run)
+
+
+def _build_sharded_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
+                          regions: RegionTable, n_devices: int,
+                          batch_per_device: int, axis: str = "pool"):
+    """Build the mesh-sharded lockstep engine: the pool's leading
+    ``n_devices`` axis is sharded over a 1-D device mesh (``shard_map``),
+    each device executes the home-bucketed sub-wave it owns, and remote
+    LOAD/MEMCPY/STORE traffic lowers to collectives across the mesh axis
+    (``all_gather`` the requests, owning shards answer, ``psum`` routes
+    the words back — see :class:`_ShardOps`).
+
+    Semantics are *identical* to the dense mixed engine run over the
+    same wave in arrival order: macro-steps stay in lockstep across the
+    mesh (the driver condition and the conflict predicate are globally
+    agreed each step), conflict-free steps vectorize per device, and a
+    contended macro-step falls back to a replicated serialized scan in
+    **global arrival order** — the home-bucketed wave order is not the
+    arrival order, so each lane carries its arrival rank and the
+    fallback sorts by it.  That is what lets deterministic round-robin
+    STORE/CAS contention survive sharding bit-for-bit.
+
+    Returns jit-compiled
+    ``f(mem, params, homes, failed, op_sel, arrival) -> VMResult`` with
+    device-major fields: ``mem`` is ``(n_devices, pool_words)``,
+    ``ret/status/steps`` are ``(n_devices, batch_per_device)`` and
+    ``regs`` is ``(n_devices, batch_per_device, 16)``.  Lanes with
+    ``op_sel < 0`` are padding (sub-waves are ragged) and start halted.
+    Call under ``vm.x64()`` (or use :func:`invoke_sharded_mixed`).
+    """
+    from jax.sharding import PartitionSpec as _P
+
+    from repro import jaxcompat
+
+    code_np, start_np, end_np, fuel_np, max_window = \
+        _program_statics(codes, fuels)
+    n_ops = int(fuel_np.shape[0])
+    n_instr = int(code_np.shape[0])
+    base_np, mask_np, _ = regions.as_arrays()
+    n_regions = int(base_np.shape[0])
+    n_dev = int(n_devices)
+    Bp = int(batch_per_device)
+    N = n_dev * Bp
+    depth = isa.LOOP_STACK_DEPTH
+    mesh = jaxcompat.make_device_mesh(n_dev, axis)
+
+    def device_body(mem, params, homes, failed, op_sel, arrival):
+        # per-device shards: mem (1, P); params (1, Bp, w); homes /
+        # op_sel / arrival (1, Bp); failed (n_devices,) replicated
+        me = lax.axis_index(axis)
+        code = jnp.asarray(code_np)
+        base_c = jnp.asarray(base_np)
+        mask_c = jnp.asarray(mask_np)
+        shard = jnp.asarray(mem, jnp.int64)[0]
+        pool_words = shard.shape[0]
+        homes_l = jnp.asarray(homes, jnp.int64).reshape(Bp)
+        failed = jnp.asarray(failed, jnp.bool_)
+        op_sel_l = jnp.asarray(op_sel, jnp.int64).reshape(Bp)
+        arrival_l = jnp.asarray(arrival, jnp.int64).reshape(Bp)
+        pad = op_sel_l < 0
+        sel = jnp.clip(op_sel_l, 0, n_ops - 1)
+        pc0 = jnp.asarray(start_np)[sel]
+        end_arr = jnp.asarray(end_np)[sel]
+        fuel_arr = jnp.asarray(fuel_np)[sel]
+        params_l = jnp.asarray(params, jnp.int64).reshape(Bp, -1)
+        regs0 = jnp.zeros((Bp, isa.NUM_REGS), jnp.int64)
+        if params_l.shape[1]:
+            regs0 = lax.dynamic_update_slice(regs0, params_l, (0, 0))
+
+        ops = _ShardOps(n_dev, int(pool_words), axis, me)
+        step_one = _make_scalar_step(
+            base_c=base_c, mask_c=mask_c, failed=failed, n_dev=n_dev,
+            max_window=max_window, depth=depth, ops=ops)
+        vector_step, lane_intervals = _make_vector_step(
+            base_c=base_c, mask_c=mask_c, n_regions=n_regions,
+            n_dev=n_dev, pool_words=int(pool_words),
+            max_window=max_window, depth=depth, B=Bp, homes=homes_l,
+            failed=failed, ops=ops)
+
+        def gather(x):
+            return lax.all_gather(x, axis).reshape((N,) + x.shape[1:])
+
+        def serial_macro(s, mem, rows, active):
+            # Contended macro-step: replicate the whole wave's state on
+            # every device and serialize in GLOBAL ARRIVAL order (the
+            # home-bucketed wave order is not arrival order).  Register
+            # state stays replicated through the scan — reads are
+            # psum-routed, so every device computes identical values —
+            # and each device applies only its own shard's writes.
+            s_all = jax.tree_util.tree_map(gather, s)
+            rows_all = gather(rows)
+            act_all = gather(active)
+            homes_all = gather(homes_l)
+            perm = jnp.argsort(gather(arrival_l))
+
+            s_p = jax.tree_util.tree_map(lambda x: x[perm], s_all)
+
+            def body(mem, x):
+                s1, row, home, act = x
+                s2, mem2 = step_one(s1, mem, row, home, act)
+                return mem2, s2
+
+            mem2, s_scan = lax.scan(
+                body, mem,
+                (s_p, rows_all[perm], homes_all[perm], act_all[perm]))
+
+            def unperm(y):
+                return jnp.zeros_like(y).at[perm].set(y)
+
+            s_out = jax.tree_util.tree_map(unperm, s_scan)
+            s_mine = jax.tree_util.tree_map(
+                lambda x: lax.dynamic_slice_in_dim(x, me * Bp, Bp, 0),
+                s_out)
+            return s_mine, mem2
+
+        def live_mask(s: ReqState):
+            return (~s.halted) & (s.pc < end_arr) & (s.steps < fuel_arr)
+
+        def step(carry):
+            s, mem = carry
+            active = live_mask(s)
+            rows = code[jnp.clip(s.pc, 0, n_instr - 1)]
+            # conflict existence is a GLOBAL question: gather every
+            # device's footprint intervals before the sweep, so all
+            # devices agree on the branch (divergence would deadlock
+            # the collectives inside)
+            iv = lax.all_gather(
+                jnp.stack(lane_intervals(s, rows, active)), axis)
+            m = jnp.moveaxis(iv, 1, 0).reshape(4, -1)
+            conflict = _sweep_conflict(m[0], m[1], m[2], m[3])
+            return lax.cond(conflict, serial_macro, vector_step,
+                            s, mem, rows, active)
+
+        def cond(carry):
+            s, _ = carry
+            live = jnp.any(live_mask(s)).astype(jnp.int32)
+            return lax.psum(live, axis) > 0
+
+        init = ReqState(
+            pc=pc0, regs=regs0,
+            lstack=jnp.zeros((Bp, depth, 3), jnp.int64),
+            lsp=jnp.zeros(Bp, jnp.int64),
+            inflight=jnp.zeros(Bp, jnp.int64),
+            halted=pad,                       # padding lanes never run
+            ret=jnp.zeros(Bp, jnp.int64),
+            status=jnp.full(Bp, isa.STATUS_FELL_OFF, jnp.int64),
+            steps=jnp.zeros(Bp, jnp.int64),
+            ctrl=jnp.zeros(Bp, jnp.int64),
+            pc_new=jnp.zeros(Bp, jnp.int64))
+
+        final, mem_f = lax.while_loop(cond, step, (init, shard))
+        status = jnp.where(
+            final.halted, final.status,
+            jnp.where(final.steps >= fuel_arr, _i64(isa.STATUS_FUEL),
+                      _i64(isa.STATUS_FELL_OFF)))
+        return VMResult(mem=mem_f[None, :], ret=final.ret[None],
+                        status=status[None], steps=final.steps[None],
+                        regs=final.regs[None])
+
+    sharded = jaxcompat.shard_map(
+        device_body, mesh,
+        in_specs=(_P(axis, None), _P(axis, None, None), _P(axis, None),
+                  _P(None), _P(axis, None), _P(axis, None)),
+        out_specs=VMResult(mem=_P(axis, None), ret=_P(axis, None),
+                           status=_P(axis, None), steps=_P(axis, None),
+                           regs=_P(axis, None, None)))
+    return jax.jit(sharded)
 
 
 def build_batched_vm(op: VerifiedOperator, regions: RegionTable,
@@ -788,6 +1152,21 @@ def build_mixed_batched_vm(ops: Sequence[VerifiedOperator],
     return _build_engine([o.code for o in ops],
                          [o.step_bound for o in ops],
                          regions, n_devices, batch)
+
+
+def build_sharded_mixed_vm(ops: Sequence[VerifiedOperator],
+                           regions: RegionTable, n_devices: int,
+                           batch_per_device: int, axis: str = "pool"):
+    """The pod-scale engine: the pool's leading axis sharded over a 1-D
+    device mesh, one home-bucketed sub-wave per device, cross-device
+    LOAD/MEMCPY lowered to collectives (see :func:`_build_sharded_engine`
+    for the semantics contract).  Returns jit-compiled
+    ``f(mem, params, homes, failed, op_sel, arrival) -> VMResult`` with
+    device-major ``(n_devices, batch_per_device)`` result fields."""
+    return _build_sharded_engine([o.code for o in ops],
+                                 [o.step_bound for o in ops],
+                                 regions, n_devices, batch_per_device,
+                                 axis)
 
 
 def build_vm(op: VerifiedOperator, regions: RegionTable, n_devices: int):
@@ -878,6 +1257,38 @@ def _cached_mixed_engine(ops: Sequence[VerifiedOperator],
     fn = _VM_CACHE.get(key)
     if fn is None:
         fn = build_mixed_batched_vm(ops, regions, n_dev, batch)
+        _VM_CACHE[key] = fn
+    return fn
+
+
+def _sharded_engine_key(ops: Sequence[VerifiedOperator],
+                        regions: RegionTable, n_dev: int,
+                        batch_per_device: int, axis: str) -> Tuple:
+    import jax as _jax
+    dev_ids = tuple(d.id for d in _jax.devices()[:n_dev])
+    return mixed_engine_key(ops, regions, n_dev, batch_per_device,
+                            "sharded", axis, dev_ids)
+
+
+def sharded_engine_cached(ops: Sequence[VerifiedOperator],
+                          regions: RegionTable, n_dev: int,
+                          batch_per_device: int,
+                          axis: str = "pool") -> bool:
+    """True iff the sharded mesh engine for this (ops, sub-wave size) is
+    already built — a miss costs an XLA compile of the whole shard_map
+    program, which the dispatch cost model charges for."""
+    return _sharded_engine_key(ops, regions, n_dev, batch_per_device,
+                               axis) in _VM_CACHE
+
+
+def _cached_sharded_engine(ops: Sequence[VerifiedOperator],
+                           regions: RegionTable, n_dev: int,
+                           batch_per_device: int, axis: str = "pool"):
+    key = _sharded_engine_key(ops, regions, n_dev, batch_per_device, axis)
+    fn = _VM_CACHE.get(key)
+    if fn is None:
+        fn = build_sharded_mixed_vm(ops, regions, n_dev, batch_per_device,
+                                    axis)
         _VM_CACHE[key] = fn
     return fn
 
@@ -999,6 +1410,80 @@ def invoke_batched_mixed(ops: Sequence[VerifiedOperator],
         return eng(mem_j, p_j, h_j, failed_j, sel)
 
     return run_batched_fn(fn, mem, p, h, failed)
+
+
+def invoke_sharded_mixed(ops: Sequence[VerifiedOperator],
+                         regions: RegionTable, mem: np.ndarray,
+                         plan, params: Sequence[Sequence[int]], *,
+                         failed: Optional[Set[int]] = None,
+                         axis: str = "pool") -> "BatchedInvokeResult":
+    """Run a mixed wave on the mesh-sharded engine: numpy in/out.
+
+    ``plan`` is a home-bucketed :class:`~repro.core.compile.MixedPlan`
+    (built with ``plan_mixed_batch(op_ids, homes=..., n_devices=...)``):
+    its ``order`` lays the wave out device-major, each device's ragged
+    sub-wave is padded to ``plan.batch_per_device`` lanes, and results
+    scatter back to arrival order through the same permutation.  The
+    result is bit-identical to :func:`invoke_batched_mixed` over the
+    arrival-order wave (contended STORE/CAS included — the engine's
+    serialized fallback sorts by arrival rank)."""
+    if getattr(plan, "device_counts", None) is None:
+        raise ValueError(
+            "plan carries no device placement; build it with "
+            "plan_mixed_batch(op_ids, homes=..., n_devices=...)")
+    n_dev = int(mem.shape[0])
+    if plan.n_devices != n_dev:
+        raise ValueError(
+            f"plan places {plan.n_devices} devices but the pool has "
+            f"{n_dev} rows")
+    p, h = _marshal_batch(params, plan.homes)
+    B = plan.batch
+    if p.shape[0] != B:
+        raise ValueError(f"{p.shape[0]} param rows for a {B}-request plan")
+    Bp = int(plan.batch_per_device)
+    width = p.shape[1]
+    # device-major marshal: plan.order is home-bucketed, so device d's
+    # sub-wave is one contiguous slice of the sorted batch; pad lanes
+    # carry op_sel = -1 (start halted) and arrival ranks past the wave
+    sel = np.full((n_dev, Bp), -1, dtype=np.int64)
+    pz = np.zeros((n_dev, Bp, width), dtype=np.int64)
+    hz = np.zeros((n_dev, Bp), dtype=np.int64)
+    az = np.full((n_dev, Bp), B, dtype=np.int64)
+    pos = 0
+    for d in range(n_dev):
+        c = int(plan.device_counts[d])
+        lanes = plan.order[pos:pos + c]
+        sel[d, :c] = plan.op_ids[lanes]
+        pz[d, :c] = p[lanes]
+        hz[d, :c] = h[lanes]
+        hz[d, c:] = d
+        az[d, :c] = lanes            # arrival rank = arrival index
+        pos += c
+    eng = _cached_sharded_engine(tuple(ops), regions, n_dev, Bp, axis)
+    from repro.core import memory as _memory
+    with x64():
+        mem_dev = _memory.shard_pool(np.asarray(mem, dtype=np.int64),
+                                     axis=axis) \
+            if n_dev > 1 else jnp.asarray(mem, jnp.int64)
+        out = eng(mem_dev, jnp.asarray(pz), jnp.asarray(hz),
+                  jnp.asarray(_failed_mask(n_dev, failed)),
+                  jnp.asarray(sel), jnp.asarray(az))
+        out = jax.tree_util.tree_map(np.asarray, out)
+    ret = np.zeros(B, dtype=np.int64)
+    status = np.zeros(B, dtype=np.int64)
+    steps = np.zeros(B, dtype=np.int64)
+    regs = np.zeros((B, isa.NUM_REGS), dtype=np.int64)
+    pos = 0
+    for d in range(n_dev):
+        c = int(plan.device_counts[d])
+        lanes = plan.order[pos:pos + c]
+        ret[lanes] = out.ret[d, :c]
+        status[lanes] = out.status[d, :c]
+        steps[lanes] = out.steps[d, :c]
+        regs[lanes] = out.regs[d, :c]
+        pos += c
+    return BatchedInvokeResult(mem=out.mem, ret=ret, status=status,
+                               steps=steps, regs=regs)
 
 
 @dataclasses.dataclass

@@ -1,1 +1,3 @@
 from repro.data.pipeline import DataConfig, LMPipeline
+
+__all__ = ["DataConfig", "LMPipeline"]

@@ -19,10 +19,8 @@ Per layer the wire carries O(B x QH x D) floats instead of O(KV bytes).
 
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental.shard_map import shard_map

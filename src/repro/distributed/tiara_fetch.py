@@ -28,10 +28,7 @@ p // (N/P); ids (n,) per shard, any logical ids.
 
 from __future__ import annotations
 
-import functools
-from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax

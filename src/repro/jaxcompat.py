@@ -7,7 +7,9 @@ code get a portable spelling here.
 from __future__ import annotations
 
 import jax
+import numpy as np
 from jax import lax
+from jax.sharding import Mesh
 
 
 def mesh_context(mesh):
@@ -21,3 +23,45 @@ def axis_size(a):
     """``lax.axis_size`` landed after 0.4.x; ``psum(1, axis)`` is the
     portable form (valid inside shard_map/pmap collectives)."""
     return lax.axis_size(a) if hasattr(lax, "axis_size") else lax.psum(1, a)
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions: ``jax.shard_map`` where it
+    exists (>= 0.6), else ``jax.experimental.shard_map.shard_map``.
+
+    Replication checking is disabled on every path (``check_rep`` /
+    ``check_vma``, whichever the installed jax spells): the checker
+    rejects collectives under ``lax.cond`` even when the predicate is
+    replicated — exactly the sharded VM engine's conflict-fallback
+    shape."""
+    import inspect
+
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+    kwargs = {}
+    params = inspect.signature(sm).parameters
+    for flag in ("check_vma", "check_rep"):
+        if flag in params:
+            kwargs[flag] = False
+            break
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **kwargs)
+
+
+def make_device_mesh(n_devices: int, axis: str = "pool") -> Mesh:
+    """A 1-D mesh over the first ``n_devices`` local devices.  Raises
+    with a actionable message when the host exposes fewer devices (on
+    CPU: relaunch under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    devs = jax.devices()
+    if len(devs) < n_devices:
+        raise RuntimeError(
+            f"sharded execution needs {n_devices} devices but this "
+            f"process sees {len(devs)}; on CPU relaunch with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_devices}")
+    return Mesh(np.asarray(devs[:n_devices]), (axis,))
+
+
+def device_count() -> int:
+    return len(jax.devices())

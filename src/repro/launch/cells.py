@@ -9,11 +9,10 @@ is a pure ``.lower().compile()``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -22,7 +21,6 @@ from repro.models import transformer as tf
 from repro.models.attention import PagedKV
 from repro.models.blocks import BlockCache
 from repro.models.mamba import MambaCache
-from repro.models.param import spec_tree
 from repro.models.rwkv import RWKVCache
 from repro.launch.mesh import dp_axes, dp_size
 from repro.training.optimizer import AdamWConfig, AdamWState, warmup_cosine

@@ -14,7 +14,7 @@ tiara_gather kernel / the NIC operator instead of a host round trip.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -22,8 +22,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs import ArchConfig, LayerSpec
-from repro.models.blocks import (BlockCache, block_apply, block_defs,
-                                 init_block_cache)
+from repro.models.blocks import block_apply, block_defs, init_block_cache
 from repro.models.layers import (apply_norm, embed, embed_defs, norm_defs,
                                  unembed)
 from repro.models.param import (materialize, shape_tree, spec_tree,

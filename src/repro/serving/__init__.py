@@ -1,3 +1,5 @@
 from repro.serving.allocator import BlockAllocator, OutOfPages
 from repro.serving.engine import ServingEngine
 from repro.serving.sampler import sample_tokens
+
+__all__ = ["BlockAllocator", "OutOfPages", "ServingEngine", "sample_tokens"]

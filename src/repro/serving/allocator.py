@@ -8,9 +8,8 @@ example)."""
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List
 
-import numpy as np
 
 
 class OutOfPages(RuntimeError):

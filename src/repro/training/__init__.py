@@ -3,3 +3,14 @@ from repro.training.optimizer import (AdamWConfig, make_adamw,
 from repro.training.train_step import (TrainState, lm_loss,
                                        make_train_step)
 from repro.training.trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "AdamWConfig",
+    "make_adamw",
+    "warmup_cosine",
+    "TrainState",
+    "lm_loss",
+    "make_train_step",
+    "Trainer",
+    "TrainerConfig",
+]

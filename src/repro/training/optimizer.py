@@ -10,11 +10,10 @@ validated by a convergence test against fp32 Adam.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 QBLOCK = 256
 

@@ -3,7 +3,6 @@ gradient compression for the cross-pod all-reduce."""
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax

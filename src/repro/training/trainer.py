@@ -15,10 +15,9 @@ import dataclasses
 import signal
 import statistics
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import manager as ckpt
 from repro.configs import ArchConfig

@@ -121,7 +121,6 @@ def test_full_configs_match_assignment():
 
 def test_maverick_total_params_near_400b():
     """The period-2 MoE interleave should land near the public 400B."""
-    from repro.models.param import count_params
     cfg = get_config("llama4-maverick-400b-a17b")
     shapes = tf.param_shapes(cfg)
     total = sum(int(np.prod(s.shape))

@@ -12,7 +12,6 @@ import pytest
 
 from repro.core import compile as tc
 from repro.core import isa, memory, pyvm, vm
-from repro.core.isa import Alu
 from repro.core.memory import Grant, merge_tables
 from repro.core import operators as ops
 from repro.core.program import OperatorBuilder

@@ -1,6 +1,5 @@
 """Checkpoint manager + serving engine."""
 
-import os
 
 import numpy as np
 import jax

@@ -1,12 +1,11 @@
 """Restricted-Python compiler: correct lowering + subset enforcement."""
 
-import numpy as np
 import pytest
 
 from repro.core import isa, memory, pyvm, vm
 from repro.core.frontend import TiaraCompileError, compile_source
 from repro.core.memory import Grant
-from repro.core.verifier import VerificationError, verify
+from repro.core.verifier import verify
 from repro.core import operators as ops
 
 

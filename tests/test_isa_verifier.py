@@ -1,9 +1,8 @@
 """ISA encoding + static verifier unit tests."""
 
-import numpy as np
 import pytest
 
-from repro.core import isa, memory
+from repro.core import isa
 from repro.core.isa import Alu, Instr, Op
 from repro.core.memory import Grant, RegionTable, packed_table
 from repro.core.program import OperatorBuilder, TiaraProgram

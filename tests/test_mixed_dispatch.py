@@ -13,7 +13,7 @@ from repro.core import compile as tc
 from repro.core import isa, memory
 from repro.core.costmodel import (DispatchCostModel, EngineCost,
                                   SegmentStats, op_mix_entropy)
-from repro.core.memory import Grant, RegionView, merge_tables
+from repro.core.memory import Grant, merge_tables
 from repro.core import operators as ops
 from repro.core.program import OperatorBuilder
 from repro.core.registry import OperatorRegistry, RegistrationError

@@ -1,0 +1,530 @@
+"""Sharded memory pool over a device mesh: home-bucketed placement
+planning, the shard_map engine's collective-routed execution, and the
+``placement=`` doorbell surface — all against the per-request ``pyvm``
+oracle and the dense mixed engine.
+
+The invariants under test:
+
+1. ``plan_mixed_batch(op_ids, homes=, n_devices=)`` buckets the wave
+   device-major with (home, op) segments as the placement unit, and the
+   arrival-order inverse permutation still does the reply scatter.
+2. A wave dispatched with ``doorbell(placement="sharded")`` is
+   bit-identical to replaying the posts one at a time on ``pyvm`` —
+   including contended STORE/CAS posts (cross-device included) and
+   cross-``home`` MEMCPYs.
+3. Where the engines' documented round-robin macro-step semantics
+   diverge from the sequential oracle (multi-touch contention), the
+   sharded engine still matches the dense mixed engine bit-for-bit.
+
+The suite adapts to however many devices the process sees: under the
+``tier1-multidevice`` CI lane (``XLA_FLAGS=--xla_force_host_platform_
+device_count=8``) the mesh is real; on one device the sharded path runs
+degenerate but through the same code.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import compile as tc
+from repro.core import memory, pyvm, vm
+from repro.core.costmodel import DispatchCostModel
+from repro.core.endpoint import EndpointError, TiaraEndpoint
+from repro.core.memory import Grant
+from repro.core.program import OperatorBuilder
+from repro.core.verifier import verify
+
+N_DEV = len(jax.devices())
+
+eight_devices = pytest.mark.skipif(
+    N_DEV < 8,
+    reason="needs 8 devices (run under XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8)")
+
+
+# ---------------------------------------------------------------------------
+# Planner: home-bucketed sub-waves
+# ---------------------------------------------------------------------------
+
+def test_plan_home_bucketing():
+    ids = [2, 0, 1, 0, 2, 0, 1]
+    homes = [1, 0, 1, 0, 0, 1, 1]
+    plan = tc.plan_mixed_batch(ids, homes=homes, n_devices=2)
+    assert plan.sharded and plan.n_devices == 2
+    assert plan.device_counts.tolist() == [3, 4]
+    assert plan.batch_per_device == 4
+    # device-major sort: all of device 0's lanes precede device 1's
+    assert np.asarray(homes)[plan.order].tolist() == sorted(homes)
+    # within device 1: sorted by op, arrival-stable (arrivals 0/2/5/6
+    # carry ops 2/1/0/1 -> op order 5, 2, 6, 0)
+    assert plan.order[3:].tolist() == [5, 2, 6, 0]
+    # segments are same-(home, op) runs and carry their placement home
+    for seg in plan.segments:
+        for i in plan.segment_indices(seg):
+            assert homes[i] == seg.home and ids[i] == seg.op_id
+    # segments stay the unit of placement and partition the wave
+    total = sum(s.size for d in range(2) for s in plan.device_segments(d))
+    assert total == len(ids)
+    # the arrival-order inverse permutation still does the reply scatter
+    assert np.array_equal(plan.order[plan.inverse], np.arange(len(ids)))
+
+
+def test_plan_home_bucketing_validation():
+    with pytest.raises(ValueError):
+        tc.plan_mixed_batch([0, 1], homes=[0, 1])          # no n_devices
+    with pytest.raises(ValueError):
+        tc.plan_mixed_batch([0, 1], homes=[0], n_devices=2)  # shape
+    with pytest.raises(ValueError):
+        tc.plan_mixed_batch([0, 1], homes=[0, 2], n_devices=2)  # range
+    with pytest.raises(ValueError):
+        tc.plan_mixed_batch([0, 1], homes=[-1, 0], n_devices=2)
+
+
+def test_plan_without_homes_unchanged():
+    plan = tc.plan_mixed_batch([2, 0, 1, 0])
+    assert not plan.sharded
+    assert plan.device_counts is None and plan.n_devices == 1
+    assert all(s.home == 0 for s in plan.segments)
+    assert [s.op_id for s in plan.segments] == [0, 1, 2]
+
+
+def test_plan_empty_device_padding():
+    # every request on device 0 of 4: the other sub-waves are empty but
+    # still hold one padded lane each
+    plan = tc.plan_mixed_batch([0, 0, 0], homes=[0, 0, 0], n_devices=4)
+    assert plan.device_counts.tolist() == [3, 0, 0, 0]
+    assert plan.batch_per_device == 3
+    assert plan.device_segments(1) == ()
+
+
+# ---------------------------------------------------------------------------
+# Tenant workloads: every sharded failure mode in one layout — local
+# compute, contended local/remote atomics, cross-home MEMCPY.
+# ---------------------------------------------------------------------------
+
+def _layout(reply_words=64):
+    return memory.packed_table([("latch", 8), ("data", 64),
+                                ("reply", reply_words)])
+
+
+def _sum_op(rt):
+    """reply[p1] = data[p0] + data[p0+1] (home-local)."""
+    b = OperatorBuilder("sum2", n_params=2, regions=rt)
+    x, y = b.reg(), b.reg()
+    b.load(x, "data", b.param(0))
+    b.load(y, "data", b.param(0), disp=1)
+    b.add(x, x, y)
+    b.store(x, "reply", b.param(1))
+    b.ret(x)
+    return b.build()
+
+
+def _cas_op(rt):
+    """CAS latch[0] of the post's home: 0 -> p0 (single-touch)."""
+    b = OperatorBuilder("cas_latch", n_params=1, regions=rt)
+    zero = b.const(0)
+    old = b.reg()
+    b.cas(old, "latch", zero, cmp=zero, swap=b.param(0))
+    b.ret(old)
+    return b.build()
+
+
+def _store_op(rt):
+    """Blind store latch[1] = p0 on the post's home (single-touch)."""
+    b = OperatorBuilder("store_latch", n_params=1, regions=rt)
+    one = b.const(1)
+    b.store(b.param(0), "latch", one)
+    b.ret(b.param(0))
+    return b.build()
+
+
+def _rcpy_op(rt):
+    """Cross-home MEMCPY: reply[p1..p1+4) <- device p2's data[p0..p0+4)."""
+    b = OperatorBuilder("rcpy", n_params=3, regions=rt)
+    b.memcpy(dst_region="reply", dst_off=b.param(1),
+             src_region="data", src_off=b.param(0), n_words=4,
+             src_dev=b.param(2))
+    b.ret(b.param(1))
+    return b.build()
+
+
+def _rcas_op(rt):
+    """Cross-home CAS on device p1's latch[2]: 0 -> p0 — cross-device
+    contention (single-touch)."""
+    b = OperatorBuilder("rcas", n_params=2, regions=rt)
+    zero = b.const(0)
+    old = b.reg()
+    b.cas(old, "latch", zero, cmp=zero, swap=b.param(0), disp=2,
+          dev=b.param(1))
+    b.ret(old)
+    return b.build()
+
+
+_BUILDERS = (_sum_op, _cas_op, _store_op, _rcpy_op, _rcas_op)
+
+
+def _connect(n_tenants=3, n_devices=N_DEV, reply_words=64, **kwargs):
+    named = [(f"t{i}", _layout(reply_words)) for i in range(n_tenants)]
+    ep, sessions = TiaraEndpoint.for_tenants(named, n_devices=n_devices,
+                                             **kwargs)
+    for s in sessions.values():
+        for build in _BUILDERS:
+            s.register(build(s.view))
+        for d in range(n_devices):
+            s.write_region("data",
+                           np.arange(10, 74, dtype=np.int64) * (d + 1),
+                           device=d)
+    return ep, [sessions[f"t{i}"] for i in range(n_tenants)]
+
+
+def _oracle_replay(ep, completions):
+    vops = ep.registry.store_ops()
+    seq = ep.mem.copy()
+    expect = {}
+    for c in sorted(completions, key=lambda c: c.seq):
+        r = pyvm.run(vops[c.op_id], ep.regions, seq, list(c.params),
+                     home=c.home)
+        expect[c.seq] = (r.ret, r.status, r.steps)
+    return seq, expect
+
+
+def oracle_then_doorbell(ep, completions, **doorbell_kwargs):
+    seq, expect = _oracle_replay(ep, completions)
+    ep.doorbell(**doorbell_kwargs)
+    assert np.array_equal(ep.mem, seq)
+    for c in completions:
+        assert c.done
+        assert (c.ret, c.status, c.steps) == expect[c.seq], c
+    return seq
+
+
+# ---------------------------------------------------------------------------
+# Sharded doorbell vs the pyvm oracle
+# ---------------------------------------------------------------------------
+
+def test_sharded_doorbell_matches_oracle():
+    # sum2 replies land in reply[0..16), rcpy windows in reply[16..64):
+    # cross-op overlap would hit the documented cross-macro-step
+    # round-robin divergence from the sequential oracle (different ops
+    # touch the word at different lockstep positions), which is an
+    # engine property, not a sharding one — keep the op slot spaces
+    # disjoint here, same-op contention is covered below
+    ep, sessions = _connect()
+    cs = []
+    for i in range(13):
+        s = sessions[i % 3]
+        home = i % N_DEV
+        kind = i % 4
+        if kind == 0:
+            cs.append(s.post("sum2", [2 * (i % 5), i % 16], home=home))
+        elif kind == 1:
+            cs.append(s.post("cas_latch", [100 + i], home=home))
+        elif kind == 2:
+            cs.append(s.post("store_latch", [200 + i], home=home))
+        else:
+            cs.append(s.post("rcpy",
+                             [i % 32, 16 + 4 * (i % 12), (i * 3) % N_DEV],
+                             home=home))
+    oracle_then_doorbell(ep, cs, placement="sharded")
+
+
+def test_sharded_contended_cas_store_wave():
+    """Contended STORE/CAS across posts AND across homes: arrival-order
+    deterministic round-robin semantics must survive sharding."""
+    ep, sessions = _connect()
+    cs = []
+    for i in range(12):
+        s = sessions[i % 3]
+        home = i % N_DEV
+        if i % 2 == 0:
+            # every tenant's rcas posts race on DEVICE 0's latch[2]
+            cs.append(s.post("rcas", [1000 + i, 0], home=home))
+        else:
+            cs.append(s.post("store_latch", [2000 + i], home=home))
+    oracle_then_doorbell(ep, cs, placement="sharded")
+    # per tenant, the first-arriving rcas saw the free latch and won
+    for t, s in enumerate(sessions):
+        winner = next(c for c in cs
+                      if c.session is s and c.op_name == "rcas")
+        assert winner.ret == 0
+        assert s.read_region("latch", device=0, offset=2, count=1)[0] \
+            == winner.params[0]
+
+
+def test_sharded_cross_home_memcpy_reads_remote_data():
+    """The collective-routed MEMCPY really moves another device's words."""
+    ep, (s0, *_) = _connect()
+    src_dev = (N_DEV - 1) % N_DEV
+    c = s0.post("rcpy", [8, 0, src_dev], home=0)
+    ep.doorbell(placement="sharded")
+    want = np.arange(18, 22, dtype=np.int64) * (src_dev + 1)
+    assert np.array_equal(s0.read_region("reply", device=0, count=4), want)
+    assert c.done and c.ok
+
+
+def test_sharded_matches_mixed_engine_on_multitouch_contention():
+    """Store-then-readback on one shared word: the engines' round-robin
+    macro-step semantics (requests observe same-step neighbours) — NOT
+    the sequential oracle.  The sharded engine must reproduce the dense
+    mixed engine bit-for-bit even there, arrival order restored across
+    the home bucketing."""
+    rt = _layout()
+    b = OperatorBuilder("rmw", n_params=2, regions=rt)
+    out = b.reg()
+    b.store(b.param(0), "latch", b.const(3), dev=b.param(1))
+    b.load(out, "latch", b.const(3), dev=b.param(1))
+    b.ret(out)
+    vop = verify(b.build(), grant=Grant.all_of(rt), regions=rt)
+    mem0 = memory.make_pool(N_DEV, rt)
+    B = 9
+    ids = [0] * B
+    homes = [i % N_DEV for i in range(B)]
+    params = [[100 + i, 0] for i in range(B)]   # all hit device 0 latch[3]
+    dense = vm.invoke_batched_mixed([vop], rt, mem0, ids, params,
+                                    homes=homes)
+    plan = tc.plan_mixed_batch(ids, homes=homes, n_devices=N_DEV)
+    sh = vm.invoke_sharded_mixed([vop], rt, mem0, plan, params)
+    assert np.array_equal(dense.mem, sh.mem)
+    assert np.array_equal(dense.ret, sh.ret)
+    assert np.array_equal(dense.status, sh.status)
+    assert np.array_equal(dense.steps, sh.steps)
+    assert np.array_equal(dense.regs, sh.regs)
+    # and it IS the engine semantics: every request reads the macro-step
+    # winner (the last-arriving store), not its own value
+    assert sh.ret.tolist() == [100 + B - 1] * B
+
+
+def test_sharded_per_session_fifo_and_repeat_doorbells():
+    ep, sessions = _connect()
+    posted = {s.tenant: [] for s in sessions}
+    rng = np.random.default_rng(1)
+    for round_ in range(3):
+        for i in range(6):
+            s = sessions[int(rng.integers(0, 3))]
+            c = s.post("sum2", [int(rng.integers(0, 30)), i],
+                       home=int(rng.integers(0, N_DEV)))
+            posted[s.tenant].append(c)
+        oracle_then_doorbell(ep, [c for cs in posted.values() for c in cs
+                                  if not c.done],
+                             placement="sharded")
+    for s in sessions:
+        assert s.poll_cq() == posted[s.tenant]
+
+
+# ---------------------------------------------------------------------------
+# Placement decision + validation
+# ---------------------------------------------------------------------------
+
+def test_choose_placement_cost_shape():
+    cm = DispatchCostModel()
+    small = cm.choose_placement(batch=4, n_devices=8, step_bound=10)
+    assert small.mode == "single"
+    wide = cm.choose_placement(batch=2048, n_devices=8, step_bound=64)
+    assert wide.mode == "sharded"
+    assert wide.costs["sharded"] < wide.costs["single"]
+    # contention pins the wave to the single chip: the sharded fallback
+    # serializes the global batch with a collective per lane
+    hot = cm.choose_placement(batch=2048, n_devices=8, step_bound=64,
+                              contention_rate=0.5)
+    assert hot.mode == "single"
+    # home skew is priced at the real lockstep width: a fully skewed
+    # wave (every post on one device) gains nothing from the mesh
+    skew = cm.choose_placement(batch=2048, n_devices=8, step_bound=64,
+                               batch_per_device=2048)
+    assert skew.mode == "single"
+    solo = cm.choose_placement(batch=2048, n_devices=1, step_bound=64)
+    assert solo.mode == "single" and "sharded" not in solo.costs
+    # a pool can model more homes than the host has devices: an
+    # infeasible mesh must not even be a candidate
+    nofit = cm.choose_placement(batch=2048, n_devices=8, step_bound=64,
+                                sharded_feasible=False)
+    assert nofit.mode == "single" and "sharded" not in nofit.costs
+
+
+def test_placement_auto_degrades_when_mesh_infeasible():
+    """An endpoint whose pool models more homes than the process has
+    devices (the long-standing simulated-homes configuration) must run
+    placement='auto' on the single chip, not crash building a mesh."""
+    ep, (s0, *_) = _connect(n_devices=N_DEV + 1)
+    cs = [s0.post("sum2", [i, i], home=i % (N_DEV + 1)) for i in range(6)]
+    oracle_then_doorbell(ep, cs, placement="auto")
+    assert ep.last_placement.mode == "single"
+    assert "sharded" not in ep.last_placement.costs
+
+
+def test_sharded_doorbell_clears_engine_decision_audit():
+    """A mesh-placed wave makes no engine-mode decision: the audit hook
+    must not keep showing an earlier wave's pick as current."""
+    ep, (s0, *_) = _connect()
+    s0.post("sum2", [0, 0])
+    s0.post("cas_latch", [1])
+    ep.doorbell(mode="auto")
+    assert ep.last_decision is not None
+    s0.post("sum2", [1, 1])
+    ep.doorbell(placement="sharded")
+    assert ep.last_decision is None
+
+
+def test_explicit_placement_clears_placement_audit():
+    """last_placement mirrors last_decision: an explicitly placed wave
+    made no cost-model placement decision, so the hook must not keep an
+    earlier auto wave's pick."""
+    ep, (s0, *_) = _connect()
+    s0.post("sum2", [0, 0])
+    ep.doorbell(placement="auto")
+    assert ep.last_placement is not None
+    s0.post("sum2", [1, 1])
+    ep.doorbell(placement="sharded")
+    assert ep.last_placement is None
+    s0.post("sum2", [2, 2])
+    ep.doorbell(placement="auto")
+    assert ep.last_placement is not None
+    s0.post("sum2", [3, 3])
+    ep.doorbell(placement="single")
+    assert ep.last_placement is None
+
+
+def test_doorbell_placement_auto_records_decision():
+    ep, (s0, *_) = _connect()
+    s0.post("sum2", [1, 1])
+    ep.doorbell(placement="auto")
+    assert ep.last_placement is not None
+    assert ep.last_placement.mode in ("single", "sharded")
+    assert "single" in ep.last_placement.costs
+
+
+def test_doorbell_placement_validation_and_requeue():
+    ep, (s0, *_) = _connect()
+    with pytest.raises(ValueError):
+        ep.doorbell(placement="everywhere")
+    c = s0.post("sum2", [0, 0])
+    with pytest.raises(EndpointError):
+        ep.doorbell(mode="segmented", placement="sharded")
+    # the rejected ring left the post queued; a valid one retires it
+    assert ep.outstanding == 1 and not c.done
+    ep.doorbell(placement="sharded")
+    assert c.done
+
+
+def test_invoke_sharded_requires_placed_plan():
+    ep, (s0, *_) = _connect()
+    vops = ep.registry.store_ops()
+    flat = tc.plan_mixed_batch([0])
+    with pytest.raises(ValueError):
+        vm.invoke_sharded_mixed(vops, ep.regions, ep.mem, flat, [[0, 0]])
+    placed = tc.plan_mixed_batch([0], homes=[0], n_devices=N_DEV + 1)
+    with pytest.raises((ValueError, RuntimeError)):
+        vm.invoke_sharded_mixed(vops, ep.regions, ep.mem, placed,
+                                [[0, 0]])
+
+
+# ---------------------------------------------------------------------------
+# Property: random multi-tenant waves with cross-home MEMCPYs — sharded
+# placement bit-identical to the per-request pyvm oracle.  Deterministic
+# seeded sweep first; hypothesis (if installed) explores adversarial
+# interleavings (matching tests/test_endpoint.py conventions).
+# ---------------------------------------------------------------------------
+
+_PROP_OPS = ("sum2", "cas_latch", "store_latch", "rcpy", "rcas")
+
+
+def _run_sharded_wave(choices):
+    """choices: per-post (session, op, arg, home) ints, any range."""
+    ep, sessions = _connect()
+    cs = []
+    for i, (si, oi, arg, home) in enumerate(choices):
+        s = sessions[si % 3]
+        name = _PROP_OPS[oi % len(_PROP_OPS)]
+        home = home % N_DEV
+        if name == "sum2":
+            # sum2 words in reply[0..16), rcpy windows in [16..64): the
+            # op slot spaces stay disjoint (same-op overlap is fine —
+            # same lockstep position — cross-op overlap would hit the
+            # engines' documented cross-macro-step divergence from the
+            # sequential oracle)
+            params = [arg % 32, i % 16]
+        elif name == "rcpy":
+            params = [arg % 32, 16 + (i % 12) * 4, (arg // 7) % N_DEV]
+        elif name == "rcas":
+            params = [arg % (2**31), (arg // 3) % N_DEV]
+        else:
+            params = [arg % (2**31)]
+        cs.append(s.post(name, params, home=home))
+    oracle_then_doorbell(ep, cs, placement="sharded")
+    for s in sessions:
+        got = s.poll_cq()
+        assert [c.seq for c in got] == sorted(c.seq for c in got)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_random_sharded_waves_seeded(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 13))
+    choices = [tuple(int(x) for x in rng.integers(0, 1000, size=4))
+               for _ in range(n)]
+    _run_sharded_wave(choices)
+
+
+def test_sharded_wave_property_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    post = st.tuples(st.integers(0, 2), st.integers(0, 4),
+                     st.integers(0, 2**31 - 1), st.integers(0, 63))
+
+    # the sharded engine compiles per distinct sub-wave width, cached
+    # across examples — keep the wave sizes small so the example budget
+    # goes to interleavings, not XLA compiles
+    @settings(max_examples=10, deadline=None)
+    @given(choices=st.lists(post, min_size=1, max_size=8))
+    def prop(choices):
+        _run_sharded_wave(choices)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: 4-tenant B=1024 wave on a real 8-device mesh
+# ---------------------------------------------------------------------------
+
+@eight_devices
+def test_sharded_4tenant_b1024_bit_identical():
+    """The ISSUE-4 acceptance wave: 4 tenants, B=1024 mixed posts spread
+    over all 8 homes with cross-home MEMCPYs and contended STORE/CAS,
+    dispatched with sharded placement — bit-identical to the
+    per-request pyvm oracle.
+
+    Reply placement: per-tenant counters keep sum2 words in
+    reply[0..512) and rcpy windows in reply[512..1024) — disjoint op
+    slot spaces (the serving configuration); contention lives on the
+    latch words, where same-op posts collide at the same lockstep
+    position and the arrival-order serialization is oracle-exact."""
+    ep, sessions = _connect(n_tenants=4, reply_words=1024)
+    rng = np.random.default_rng(7)
+    cs = []
+    n_sum = [0] * 4
+    n_cpy = [0] * 4
+    for i in range(1024):
+        t = i % 4
+        s = sessions[t]
+        home = int(rng.integers(0, 8))
+        kind = i % 8
+        if kind < 3:
+            cs.append(s.post("sum2",
+                             [int(rng.integers(0, 60)), n_sum[t]],
+                             home=home))
+            n_sum[t] += 1
+        elif kind < 5:
+            cs.append(s.post("rcpy",
+                             [int(rng.integers(0, 60)),
+                              512 + 4 * n_cpy[t],
+                              int(rng.integers(0, 8))], home=home))
+            n_cpy[t] += 1
+        elif kind == 5:
+            cs.append(s.post("cas_latch", [10_000 + i], home=home))
+        elif kind == 6:
+            cs.append(s.post("store_latch", [20_000 + i], home=home))
+        else:
+            cs.append(s.post("rcas", [30_000 + i,
+                                      int(rng.integers(0, 8))], home=home))
+    oracle_then_doorbell(ep, cs, placement="sharded")

@@ -1,7 +1,6 @@
 """Cycle simulator + benchmark harness sanity and paper-anchor checks."""
 
 import numpy as np
-import pytest
 
 from repro.core import costmodel as cm
 from repro.core import memory, pyvm

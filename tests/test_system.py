@@ -8,7 +8,6 @@ same verified operator path (the disaggregated-KV migration scenario)."""
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.core import isa, memory, pyvm, vm
 from repro.core.memory import Grant

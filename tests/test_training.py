@@ -1,11 +1,9 @@
 """Training substrate: trainer loop, fault tolerance, optimizers, accum."""
 
-import os
 
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import get_config, reduce_config
 from repro.checkpoint import manager as ckpt
