@@ -29,7 +29,11 @@ import sys
 from typing import Dict, List, Tuple
 
 # measurement fields: never part of a record's identity
-_MEASURED = ("us_per_call", "ops_per_s", "subwave_ops_per_s", "parity_ok")
+_MEASURED = ("us_per_call", "ops_per_s", "subwave_ops_per_s", "parity_ok",
+             # bench_async_overlap: simulated NIC residencies (inputs to
+             # the gated speedup_overlap_sim ratio) and the cost model's
+             # learned overlap term — measurements, not identity
+             "nic_us_async", "nic_us_serialized", "learned_overlap")
 
 # per-metric thresholds overriding --threshold: some normalizers are
 # noisier than the in-run serial baseline the 30% default was designed

@@ -17,10 +17,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_graph, bench_lock, bench_mixed_batch,
-                        bench_moe, bench_offload, bench_paged_attention,
-                        bench_ptw, bench_sharded, bench_table1,
-                        bench_vm_throughput)
+from benchmarks import (bench_async_overlap, bench_graph, bench_lock,
+                        bench_mixed_batch, bench_moe, bench_offload,
+                        bench_paged_attention, bench_ptw, bench_sharded,
+                        bench_table1, bench_vm_throughput)
 from benchmarks._workbench import fmt_table
 
 MODULES = [
@@ -38,6 +38,8 @@ MODULES = [
      bench_mixed_batch),
     ("sharded", "Sharded pool over a device mesh vs single device",
      bench_sharded),
+    ("async_overlap", "Async MEMCPY overlap: split-phase vs serialized",
+     bench_async_overlap),
 ]
 
 

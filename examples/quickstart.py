@@ -97,6 +97,25 @@ def walk(start, depth):
         assert c.result() == expect
         print(f"  home {d}: walk(depth=12) -> {c.ret}  (reference ok)")
 
+    # 7. Split-phase pipelining: doorbell(wait=False) *launches* a wave
+    #    and returns an in-flight WaveHandle immediately — post the next
+    #    wave while the first is still computing (the pool dependency
+    #    chains through XLA's async dispatch), then retire both with one
+    #    wait_all().  Completions still arrive per-session FIFO, and
+    #    each carries a CompletionEvent with its retire timestamp.
+    wave1 = [sess.post("walk", [start, d]) for d in (6, 18)]
+    h1 = ep.doorbell(wait=False)              # launched, NOT retired
+    wave2 = [sess.post("walk", [start, d]) for d in (30, 42)]
+    ep.doorbell(wait=False)                   # pipelined behind wave 1
+    assert not wave1[0].done and ep.in_flight == 4
+    n = ep.wait_all()                         # retires both, wave order
+    print(f"\npipelined two-wave step: {n} completions retired "
+          f"(wave {h1.wave_id} first)")
+    for c, d in zip(wave1 + wave2, (6, 18, 30, 42)):
+        assert c.result() == w.reference(orders[0], int(orders[0][0]), d)
+        print(f"  walk(depth={d}) -> {c.ret}  "
+              f"(wave {c.event.wave}, retired at {c.event.retired_at:.3f})")
+
 
 if __name__ == "__main__":
     main()

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core import costmodel as _costmodel
 from repro.core import isa
 from repro.core.isa import (Alu, Instr, Op, FLAG_ASYNC, FLAG_DEV_REG,
                             FLAG_DSTDEV_REG, FLAG_IMMB, FLAG_LEN_REG,
@@ -63,6 +64,14 @@ from repro.core import vm as _vm
 _REG_MASK = isa.NUM_REGS - 1
 
 DEFAULT_UNROLL_LIMIT = 4096
+
+# Iterations per double-buffered gather-chain chunk: small enough that
+# chunk k+1's row gather overlaps a meaningful fraction of chunk k's
+# scatter, large enough that per-chunk scatter setup amortizes.  Single
+# source of truth is the cost model's ``dbuf_chunk_iters`` — the auto
+# dispatch prices chunk counts and the overlap-eligibility threshold
+# with it, so the engine must chunk identically.
+DBUF_CHUNK = _costmodel.EngineCost().dbuf_chunk_iters
 
 
 class CompileError(Exception):
@@ -399,7 +408,8 @@ class _Tracer:
     """
 
     def __init__(self, *, instrs, loops, base, mask, n_dev, pool_words,
-                 batch, homes, failed, mem_flat, regs, impl, superops):
+                 batch, homes, failed, mem_flat, regs, impl, superops,
+                 double_buffer=False):
         self.instrs = instrs
         self.loops = loops                  # pc -> LoopInfo
         self.base = base                    # static np arrays
@@ -413,6 +423,7 @@ class _Tracer:
         self.regs = regs                    # list of 16 (B,) traced lanes
         self.impl = impl
         self.superops = superops
+        self.double_buffer = double_buffer
         zero = jnp.zeros(batch, jnp.int64)
         self.halted = jnp.zeros(batch, bool)
         self.ret = zero
@@ -515,7 +526,17 @@ class _Tracer:
     def _fused_gather_chain(self, g: GatherChain, m, p) -> None:
         """One two-level batched gather for the whole loop: ids -> table ->
         pool rows -> destination window.  Commit order is (iteration,
-        request) — identical to the lockstep engine."""
+        request) — identical to the lockstep engine.
+
+        With ``double_buffer`` the iteration axis is split into
+        ``DBUF_CHUNK``-sized chunks scheduled split-phase, the way the
+        operator's *async* Memcpy issues on hardware: chunk ``k+1``'s
+        row gather is emitted before chunk ``k``'s scatter, and every
+        gather reads the pre-chain memory snapshot, so the two carry no
+        data dependency and XLA is free to overlap transfer (scatter
+        commit) with resolution (the next gather).  Bit-identical to the
+        monolithic path by construction — the monolithic path *also*
+        reads all rows pre-scatter."""
         B, P = self.B, self.P
         cap, W = g.cap, g.row_words
         jj = jnp.arange(cap, dtype=jnp.int64)[None, :]          # (1, cap)
@@ -539,35 +560,60 @@ class _Tracer:
         pool_base = int(self.base[g.pool_rid])
         pool_mask = int(self.mask[g.pool_rid])
         iw = jnp.arange(W, dtype=jnp.int64)
-        if self.impl in ("kernel", "kernel_interpret") and self.n_dev == 1 \
-                and (pool_mask + 1) % W == 0:
-            # Route the row gather through the Pallas double-indirection
-            # kernel: rows must be W-aligned in the pool region (true for
-            # every translation table the workloads build).
-            from repro.kernels.tiara_gather.kernel import tiara_gather_kernel
-            pool_view = lax.dynamic_slice(
-                self.memf, (pool_base,),
-                (pool_mask + 1,)).reshape(-1, W)
-            rows = tiara_gather_kernel(
-                pool_view,
-                (paddr.reshape(-1) // W).astype(jnp.int32),
-                jnp.arange(B * cap, dtype=jnp.int32),
-                interpret=(self.impl == "kernel_interpret"),
-            ).reshape(B, cap, W).astype(jnp.int64)
-        else:
+        mem0 = self.memf              # pre-chain snapshot: all rows read it
+
+        def gather_rows(pa):
             src = home[:, :, None] * P + pool_base + \
-                ((paddr[:, :, None] + iw) & pool_mask)          # (B, cap, W)
-            rows = self.memf[src]
+                ((pa[:, :, None] + iw) & pool_mask)     # (B, chunk, W)
+            return mem0[src]
 
         dst_addr = home[:, :, None] * P + int(self.base[g.dst_rid]) + \
             ((dst0[:, :, None] + jj[:, :, None] * W + iw)
              & int(self.mask[g.dst_rid]))
-        # commit in (iteration, request, word) order = round-robin order
         wmask = jnp.broadcast_to(live[:, :, None], dst_addr.shape)
-        self.memf = det_scatter(self.memf,
-                                jnp.transpose(dst_addr, (1, 0, 2)),
-                                jnp.transpose(rows, (1, 0, 2)),
-                                jnp.transpose(wmask, (1, 0, 2)))
+
+        if self.double_buffer and cap > DBUF_CHUNK:
+            # split-phase schedule: rows for chunk k+1 are gathered
+            # before chunk k's scatter is emitted
+            bounds = list(range(0, cap, DBUF_CHUNK)) + [cap]
+            rows_next = gather_rows(paddr[:, bounds[0]:bounds[1]])
+            for k in range(len(bounds) - 1):
+                lo, hi = bounds[k], bounds[k + 1]
+                rows_k = rows_next
+                if k + 2 < len(bounds):
+                    rows_next = gather_rows(
+                        paddr[:, bounds[k + 1]:bounds[k + 2]])
+                # commit chunk k in (iteration, request, word) order
+                self.memf = det_scatter(
+                    self.memf,
+                    jnp.transpose(dst_addr[:, lo:hi], (1, 0, 2)),
+                    jnp.transpose(rows_k, (1, 0, 2)),
+                    jnp.transpose(wmask[:, lo:hi], (1, 0, 2)))
+        else:
+            if self.impl in ("kernel", "kernel_interpret") \
+                    and self.n_dev == 1 and (pool_mask + 1) % W == 0:
+                # Route the row gather through the Pallas double-
+                # indirection kernel: rows must be W-aligned in the pool
+                # region (true for every translation table the
+                # workloads build).
+                from repro.kernels.tiara_gather.kernel import \
+                    tiara_gather_kernel
+                pool_view = lax.dynamic_slice(
+                    self.memf, (pool_base,),
+                    (pool_mask + 1,)).reshape(-1, W)
+                rows = tiara_gather_kernel(
+                    pool_view,
+                    (paddr.reshape(-1) // W).astype(jnp.int32),
+                    jnp.arange(B * cap, dtype=jnp.int32),
+                    interpret=(self.impl == "kernel_interpret"),
+                ).reshape(B, cap, W).astype(jnp.int64)
+            else:
+                rows = gather_rows(paddr)                # (B, cap, W)
+            # commit in (iteration, request, word) order = round-robin
+            self.memf = det_scatter(self.memf,
+                                    jnp.transpose(dst_addr, (1, 0, 2)),
+                                    jnp.transpose(rows, (1, 0, 2)),
+                                    jnp.transpose(wmask, (1, 0, 2)))
 
         # architectural register effects of the skipped iterations
         last = jnp.clip(m - 1, 0, cap - 1)[:, None]
@@ -679,7 +725,7 @@ class _Tracer:
 
 def build_compiled(op: VerifiedOperator, regions: RegionTable,
                    n_devices: int, batch: int, *, impl: str = "xla",
-                   superops: bool = True,
+                   superops: bool = True, double_buffer: bool = False,
                    unroll_limit: int = DEFAULT_UNROLL_LIMIT):
     """Trace-compile a verified operator; returns a jit-compiled
     ``f(mem, params, homes, failed) -> vm.VMResult`` with batched fields
@@ -689,6 +735,12 @@ def build_compiled(op: VerifiedOperator, regions: RegionTable,
     gathers; "kernel" / "kernel_interpret" route row gathers through the
     ``tiara_gather`` Pallas kernel (rows must be row-aligned in the pool,
     which all stock translation tables are).
+
+    ``double_buffer``: emit gather-chain superoperators as a chunked
+    split-phase schedule (chunk k+1's row gather issued before chunk
+    k's scatter — the compiled analogue of the operator's async Memcpy
+    pipelining).  Bit-identical results; takes precedence over the
+    kernel row-gather route for the chain.
     """
     reason = why_not_compilable(op, unroll_limit)
     if reason is not None:
@@ -713,7 +765,7 @@ def build_compiled(op: VerifiedOperator, regions: RegionTable,
             instrs=instrs, loops=loops, base=base, mask=mask, n_dev=n_dev,
             pool_words=int(pool_words), batch=B, homes=homes, failed=failed,
             mem_flat=mem.reshape(-1), regs=regs, impl=impl,
-            superops=superops)
+            superops=superops, double_buffer=double_buffer)
         esc = tracer.emit_segment(0, n_instr, jnp.ones(B, bool))
         assert not esc, "verifier admitted a jump past the program end"
         return _vm.VMResult(
@@ -729,20 +781,23 @@ _COMPILED_CACHE: Dict = {}
 
 def compiled_cached(op: VerifiedOperator, regions: RegionTable,
                     n_dev: int, batch: int, impl: str = "xla",
-                    superops: bool = True) -> bool:
+                    superops: bool = True,
+                    double_buffer: bool = False) -> bool:
     """True iff the compiled trace for this (op, batch) is already
     built (see :func:`vm.engine_cached`)."""
-    return _vm.engine_key(op, regions, n_dev, batch, impl,
-                          superops) in _COMPILED_CACHE
+    return _vm.engine_key(op, regions, n_dev, batch, impl, superops,
+                          double_buffer) in _COMPILED_CACHE
 
 
 def _cached_compiled(op: VerifiedOperator, regions: RegionTable, n_dev: int,
-                     batch: int, impl: str, superops: bool):
-    key = _vm.engine_key(op, regions, n_dev, batch, impl, superops)
+                     batch: int, impl: str, superops: bool,
+                     double_buffer: bool = False):
+    key = _vm.engine_key(op, regions, n_dev, batch, impl, superops,
+                         double_buffer)
     fn = _COMPILED_CACHE.get(key)
     if fn is None:
         fn = build_compiled(op, regions, n_dev, batch, impl=impl,
-                            superops=superops)
+                            superops=superops, double_buffer=double_buffer)
         _COMPILED_CACHE[key] = fn
     return fn
 
@@ -751,10 +806,11 @@ def invoke_compiled(op: VerifiedOperator, regions: RegionTable,
                     mem: np.ndarray, params: Sequence[Sequence[int]],
                     *, homes: Union[int, Sequence[int]] = 0,
                     failed: Optional[Set[int]] = None, impl: str = "xla",
-                    superops: bool = True) -> "_vm.BatchedInvokeResult":
+                    superops: bool = True, double_buffer: bool = False,
+                    block: bool = True) -> "_vm.BatchedInvokeResult":
     """Numpy-in/numpy-out batched execution on the compiled fast path
     (same contract as :func:`vm.invoke_batched`)."""
     p, h = _vm._marshal_batch(params, homes)
     fn = _cached_compiled(op, regions, int(mem.shape[0]), p.shape[0],
-                          impl, superops)
-    return _vm.run_batched_fn(fn, mem, p, h, failed)
+                          impl, superops, double_buffer)
+    return _vm.run_batched_fn(fn, mem, p, h, failed, block=block)

@@ -277,6 +277,20 @@ class EngineCost:
     cstep_us: float = 3.0          # compiled trace, per position [calib]
     clane_us: float = 0.15         # compiled trace, per position-lane [calib]
     serial_lane_us: float = 12.0   # contended macro-step scan, per lane
+    # Double-buffered gather chains: the split-phase schedule hides this
+    # fraction of the chain's per-position cost (chunk k+1's gather
+    # overlaps chunk k's scatter) at a fixed per-chunk scheduling cost.
+    # ``dbuf_overlap`` starts at the cycle simulator's prior and is the
+    # term ``DispatchCostModel.observe_overlap`` learns online from
+    # measured serialized-vs-double-buffered pairs.
+    dbuf_overlap: float = 0.45
+    dbuf_chunk_us: float = 60.0    # per-chunk scatter setup/scheduling
+    # Chunk size contract: compile.DBUF_CHUNK reads this field's
+    # *default* once at import, so retuning means editing the default
+    # here (pricing and the emitted schedule then move together).
+    # Overriding it on an EngineCost *instance* is unsupported — it
+    # would change pricing only, not the engine's schedule.
+    dbuf_chunk_iters: int = 8
     # One cross-device collective group on the mesh axis (all_gather of
     # the requests + psum routing the words back) — the sharded engine
     # pays a fixed number of these per macro-step.  [calib: a scalar
@@ -324,6 +338,29 @@ class EngineCost:
         """One straight-line launch over the unrolled trace."""
         return self._miss(cached) + self.launch_us \
             + trace_len * (self.cstep_us + batch * self.clane_us)
+
+    def compiled_dbuf_us(self, batch: int, trace_len: int,
+                         chain_iters: int, *,
+                         cached: bool = True) -> float:
+        """The double-buffered compiled trace: the gather-chain portion
+        (5 trace positions per chain iteration) is discounted by the
+        learned overlap term, but every ``dbuf_chunk_iters`` iterations
+        pay a fixed chunk-scheduling cost — so short chains lose to the
+        monolithic trace and long chains win, which is exactly the
+        crossover ``mode="auto"`` needs to find."""
+        chain_steps = min(max(5 * chain_iters, 0), trace_len)
+        straight = trace_len - chain_steps
+        per_pos = self.cstep_us + batch * self.clane_us
+        n_chunks = -(-max(chain_iters, 0) // max(self.dbuf_chunk_iters, 1))
+        # a chain that fits in one chunk is emitted monolithically (the
+        # engine only chunks past DBUF_CHUNK iterations): no overlap to
+        # win, only the scheduling cost to lose
+        overlap = self.dbuf_overlap if chain_iters > self.dbuf_chunk_iters \
+            else 0.0
+        return (self._miss(cached) + self.launch_us
+                + straight * per_pos
+                + chain_steps * per_pos * (1.0 - overlap)
+                + n_chunks * self.dbuf_chunk_us)
 
     def sharded_us(self, batch: int, n_devices: int, steps: int,
                    contention_rate: float = 0.0, *,
@@ -430,17 +467,48 @@ class DispatchCostModel:
     def __init__(self, cost: Optional[EngineCost] = None):
         self.cost = cost or EngineCost()
 
+    # -- online overlap learning ------------------------------------------
+
+    # EWMA weight of one new overlap observation
+    OVERLAP_EWMA_ALPHA = 0.25
+
+    def observe_overlap(self, serial_us: float, dbuf_us: float, *,
+                        chain_frac: float = 1.0) -> float:
+        """Learn the double-buffer overlap term from one measured pair:
+        the same wave timed on the monolithic compiled trace
+        (``serial_us``) and on the double-buffered one (``dbuf_us``).
+        ``chain_frac`` is the fraction of the trace the gather chain
+        accounts for (the discount only applies to the chain portion, so
+        a whole-call ratio understates it when the chain is diluted).
+        Updates ``self.cost.dbuf_overlap`` by EWMA and returns the new
+        value — the "learned overlap term" future ``mode="auto"``
+        decisions price with."""
+        if serial_us <= 0 or chain_frac <= 0:
+            return self.cost.dbuf_overlap
+        hidden = (1.0 - dbuf_us / serial_us) / min(chain_frac, 1.0)
+        hidden = min(max(hidden, 0.0), 0.95)
+        a = self.OVERLAP_EWMA_ALPHA
+        new = (1 - a) * self.cost.dbuf_overlap + a * hidden
+        self.cost = dataclasses.replace(self.cost, dbuf_overlap=new)
+        return new
+
     # -- single-op waves --------------------------------------------------
 
     def choose_batched(self, *, batch: int, step_bound: int,
                        compilable: bool,
                        contention_rate: float = 0.0,
+                       chain_iters: int = 0,
                        batched_cached: bool = True,
-                       compiled_cached: bool = True) -> DispatchDecision:
+                       compiled_cached: bool = True,
+                       dbuf_cached: bool = True) -> DispatchDecision:
         """Pick the engine for a single-op wave: "batched" (the lockstep
-        interpreter; at B=1 this *is* the classic scalar MP datapath) or
-        "compiled" (the straight-line trace).  ``*_cached`` flags charge
-        the amortized XLA-compile cost for engines not yet built at this
+        interpreter; at B=1 this *is* the classic scalar MP datapath),
+        "compiled" (the straight-line trace), or "compiled_dbuf" (the
+        double-buffered gather-chain schedule — a candidate only when
+        the operator has gather chains, ``chain_iters`` > 0, and wins
+        only when they are long enough for the learned overlap term to
+        beat the chunk-scheduling cost).  ``*_cached`` flags charge the
+        amortized XLA-compile cost for engines not yet built at this
         batch size."""
         costs = {"batched": self.cost.batched_us(batch, step_bound,
                                                  contention_rate,
@@ -448,6 +516,9 @@ class DispatchCostModel:
         if compilable and contention_rate <= 0.0:
             costs["compiled"] = self.cost.compiled_us(
                 batch, step_bound, cached=compiled_cached)
+            if chain_iters > 0:
+                costs["compiled_dbuf"] = self.cost.compiled_dbuf_us(
+                    batch, step_bound, chain_iters, cached=dbuf_cached)
         mode = min(costs, key=costs.get)
         return DispatchDecision(mode=mode, costs=costs,
                                 contention_rate=contention_rate)
@@ -489,7 +560,9 @@ class DispatchCostModel:
                          batch_per_device: Optional[int] = None,
                          sharded_feasible: bool = True,
                          mixed_cached: bool = True,
-                         sharded_cached: bool = True) -> DispatchDecision:
+                         sharded_cached: bool = True,
+                         segments: Optional[Sequence[SegmentStats]] = None
+                         ) -> DispatchDecision:
         """Pick where a mixed wave executes: ``"single"`` (the dense
         one-launch mixed engine — every request against the whole pool
         on one chip) vs ``"sharded"`` (home-bucketed per-device
@@ -511,16 +584,25 @@ class DispatchCostModel:
         "auto" must degrade to "single" rather than pick a placement
         that cannot build.
 
-        Scope: "single" is priced as the one-launch mixed engine, the
-        apples-to-apples alternative to the mesh's mixed sub-waves.  A
-        low-entropy wave whose best single-chip dispatch is *segmented*
-        (per-op compiled launches) may therefore be routed to the mesh
-        prematurely; results stay bit-identical either way.  Pricing
-        segmented sub-wave execution on both sides is the ROADMAP
-        "per-device segmented sub-wave execution" item."""
+        ``segments`` (the wave's *dense* — no-homes — plan stats)
+        closes the old scope gap: "single" is priced as the best
+        single-chip dispatch, the cheaper of the one-launch mixed
+        engine and the stable-sort-and-segment path, so a low-entropy
+        wave whose best local plan is segmented (per-op compiled
+        launches) is no longer routed to the mesh prematurely.  Under
+        contention segmentation is excluded (it reorders requests
+        across ops — see :meth:`choose_mixed`), and without ``segments``
+        the mixed engine alone is priced, as before.  The audit entries
+        ``single_mixed``/``single_segmented`` record both candidates."""
         costs = {"single": self.cost.batched_us(batch, step_bound,
                                                 contention_rate,
                                                 cached=mixed_cached)}
+        if segments and contention_rate <= 0.0:
+            costs["single_mixed"] = costs["single"]
+            costs["single_segmented"] = self.segmented_us(
+                segments, contention_rate)
+            costs["single"] = min(costs["single"],
+                                  costs["single_segmented"])
         if n_devices > 1 and sharded_feasible:
             costs["sharded"] = self.cost.sharded_us(
                 batch, n_devices, step_bound, contention_rate,

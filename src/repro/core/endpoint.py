@@ -26,6 +26,19 @@ in the queues.  This module is that surface in software:
     STORE/CAS posts keep the engines' deterministic
     lowest-arrival-index-wins semantics because the wave *is* the
     arrival order.
+  * **Split-phase completion** (the paper's async MEMCPY + WAIT pair at
+    the API level): ``doorbell(wait=False)`` *launches* the wave and
+    returns an in-flight :class:`WaveHandle` immediately — XLA's async
+    dispatch keeps computing while the caller posts the next wave
+    against the in-flight pool (the device array chains the data
+    dependency), so post -> doorbell -> post -> poll pipelines.
+    Completions retire on :meth:`Session.poll_cq` (non-blocking, ready
+    waves only), :meth:`TiaraEndpoint.wait_any` (block for the oldest
+    wave), :meth:`TiaraEndpoint.wait_all`, :meth:`Completion.wait`, or
+    :meth:`WaveHandle.wait`.  Waves retire strictly in launch order, so
+    per-session FIFO survives any number of waves in flight; each
+    retired CQE carries a frozen :class:`CompletionEvent` with status,
+    return value, and retire timestamp.
   * :meth:`Session.poll_cq` / :meth:`Completion.result` are the receive
     side.  ``result()`` rings the doorbell on demand, so single-request
     control-path code stays one line.
@@ -34,14 +47,14 @@ An optional ``flush_watermark`` auto-rings the doorbell once that many
 posts are outstanding across all sessions — the NIC analogue of a
 doorbell-batching driver.
 
-The legacy ``registry.invoke*`` entry points survive one release as
-deprecated shims; everything in ``examples/`` and ``benchmarks/`` goes
-through this surface.
+The PR-3 deprecated ``registry.invoke*`` shims are gone; this surface is
+the only way to invoke operators.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -66,6 +79,25 @@ class EndpointError(Exception):
     pass
 
 
+@dataclasses.dataclass(frozen=True)
+class CompletionEvent:
+    """One retired CQE, frozen at retirement time: what completed, with
+    what result, in which wave, and when it retired (so callers can
+    attribute latency to the wave that hid it)."""
+
+    seq: int              # global arrival index of the post
+    op_name: str
+    ret: int
+    status: int
+    steps: int
+    wave: int             # doorbell wave id the post retired with
+    retired_at: float     # time.monotonic() at retirement
+
+    @property
+    def ok(self) -> bool:
+        return self.status == isa.STATUS_OK
+
+
 @dataclasses.dataclass(eq=False)
 class Completion:
     """Handle for one posted invocation (one CQE once retired).
@@ -74,9 +106,13 @@ class Completion:
     meaningless for a handle).
 
     ``seq`` is the global arrival index — the deterministic position of
-    this post in the next wave.  Until :meth:`done`, the result fields
+    this post in the next wave.  Until :attr:`done`, the result fields
     hold zeros; :meth:`result` rings the owning endpoint's doorbell on
-    demand so callers never have to flush by hand.
+    demand so callers never have to flush by hand.  Once the post is
+    *in flight* (its wave launched with ``doorbell(wait=False)``),
+    :attr:`wave_handle` points at the wave and :meth:`wait` /
+    :meth:`result` retire through it; at retirement :attr:`event` holds
+    the frozen :class:`CompletionEvent`.
     """
 
     session: "Session" = dataclasses.field(repr=False)
@@ -90,14 +126,35 @@ class Completion:
     status: int = 0
     steps: int = 0
     regs: Optional[np.ndarray] = dataclasses.field(default=None, repr=False)
+    wave_handle: Optional["WaveHandle"] = dataclasses.field(
+        default=None, repr=False)
+    event: Optional[CompletionEvent] = None
 
     @property
     def ok(self) -> bool:
         return self.done and self.status == isa.STATUS_OK
 
+    @property
+    def in_flight(self) -> bool:
+        """Launched but not yet retired."""
+        return not self.done and self.wave_handle is not None
+
+    def wait(self) -> "Completion":
+        """Block until this post retires: an in-flight post retires its
+        wave (and, FIFO, every earlier wave); a post still sitting in
+        the send queue rings the doorbell first.  Returns ``self``."""
+        if not self.done:
+            if self.wave_handle is not None:
+                self.session.endpoint._retire_through(self.wave_handle)
+            else:
+                self.session.endpoint.doorbell()
+        return self
+
     def result(self, *, flush: bool = True, check: bool = True) -> int:
         """The operator's return value, ringing the doorbell if this
-        post is still outstanding (``flush=False`` raises instead).
+        post is still outstanding (``flush=False`` raises instead; an
+        already *launched* post never needs a flush — it just retires
+        its in-flight wave).
 
         With ``check=True`` (default) a non-OK status raises — like an
         RNIC CQE error — so failures can't masquerade as values; pass
@@ -105,11 +162,14 @@ class Completion:
         for operators whose failure status is an expected outcome
         (e.g. a busy lock)."""
         if not self.done:
-            if not flush:
+            if self.wave_handle is not None:
+                self.session.endpoint._retire_through(self.wave_handle)
+            elif not flush:
                 raise EndpointError(
                     f"completion for {self.op_name!r} (seq {self.seq}) "
                     f"still outstanding; ring doorbell() first")
-            self.session.endpoint.doorbell()
+            else:
+                self.session.endpoint.doorbell()
         # result() is a consuming read: drop this CQE from the session's
         # completion queue so a later poll_cq() doesn't deliver it twice
         try:
@@ -123,6 +183,46 @@ class Completion:
                 f"result(check=False) or .ret/.status for expected "
                 f"failures")
         return self.ret
+
+
+class WaveHandle:
+    """One launched-but-unretired doorbell wave (``doorbell(wait=False)``).
+
+    The engine launch has been *issued* — XLA's async dispatch computes
+    in the background while the caller posts more work — but no CQE has
+    been delivered: per-session FIFO requires waves to retire strictly
+    in launch order, which :meth:`TiaraEndpoint._retire_through`
+    enforces.  ``completions`` lists the wave's posts in global arrival
+    order."""
+
+    def __init__(self, endpoint: "TiaraEndpoint", wave_id: int,
+                 completions: Sequence[Completion], res):
+        self.endpoint = endpoint
+        self.wave_id = wave_id
+        self.completions = tuple(completions)
+        self._res = res
+        self.done = False
+
+    def __len__(self) -> int:
+        return len(self.completions)
+
+    def __repr__(self) -> str:
+        state = "retired" if self.done else "in-flight"
+        return (f"WaveHandle(wave={self.wave_id}, "
+                f"n={len(self.completions)}, {state})")
+
+    @property
+    def ready(self) -> bool:
+        """Non-blocking: has the launch landed on device?  (Retirement
+        still only happens on a poll/wait call, and only in wave
+        order.)"""
+        return self.done or vm.result_ready(self._res)
+
+    def wait(self) -> List[Completion]:
+        """Block until this wave (and, FIFO, every earlier one) retires;
+        returns the wave's completions in arrival order."""
+        self.endpoint._retire_through(self)
+        return list(self.completions)
 
 
 class Session:
@@ -171,8 +271,9 @@ class Session:
 
     def read_region(self, region: str, *, device: int = 0, offset: int = 0,
                     count: Optional[int] = None) -> np.ndarray:
-        return memory.read_region(self.endpoint.mem, self.view, device,
-                                  region, offset=offset, count=count)
+        return memory.read_region(self.endpoint._host_view(), self.view,
+                                  device, region, offset=offset,
+                                  count=count)
 
     # -- data path ------------------------------------------------------
 
@@ -208,7 +309,13 @@ class Session:
 
     def poll_cq(self, n: Optional[int] = None) -> List[Completion]:
         """Pop up to ``n`` retired completions (all of them by default)
-        in per-session FIFO order."""
+        in per-session FIFO order.
+
+        Polling first retires any in-flight waves whose launches have
+        landed (in wave order, never blocking): the split-phase receive
+        path — post, ring ``doorbell(wait=False)``, keep working, poll
+        until the CQEs appear."""
+        self.endpoint._retire_ready()
         n = len(self._cq) if n is None else \
             max(0, min(int(n), len(self._cq)))
         out, self._cq = self._cq[:n], self._cq[n:]
@@ -254,6 +361,8 @@ class TiaraEndpoint:
         self._sessions: Dict[str, Session] = {}
         self._seq = 0
         self._outstanding = 0
+        self._inflight: List[WaveHandle] = []
+        self._wave_seq = 0
 
     @classmethod
     def for_tenants(cls, named: Sequence[Tuple[str, RegionTable]], *,
@@ -306,15 +415,26 @@ class TiaraEndpoint:
     def session(self, tenant: str) -> Session:
         return self._sessions[tenant]
 
+    def _host_view(self) -> np.ndarray:
+        """Host-side (possibly read-only) view of the pool.  While waves
+        are in flight the pool is a device future; viewing it blocks
+        until the last launched wave lands — a read must observe every
+        launched wave, in-flight or not."""
+        if not isinstance(self.mem, np.ndarray):
+            self.mem = np.asarray(self.mem)
+        return self.mem
+
     def host_mem(self) -> np.ndarray:
         """The pool, guaranteed host-writable for control-path access.
 
         After a doorbell the pool may be a read-only view of the last
-        launch's device buffer; the copy happens lazily here, so the
-        data path never pays for it."""
-        if not self.mem.flags.writeable:
-            self.mem = self.mem.copy()
-        return self.mem
+        launch's device buffer (or, split-phase, a device future not yet
+        landed); the block + copy happen lazily here, so the data path
+        never pays for them."""
+        mem = self._host_view()
+        if not mem.flags.writeable:
+            self.mem = mem = mem.copy()
+        return mem
 
     @property
     def sessions(self) -> Dict[str, Session]:
@@ -349,16 +469,29 @@ class TiaraEndpoint:
 
     def doorbell(self, *, mode: str = "auto",
                  contention_rate: float = 0.0,
-                 placement: str = "single") -> int:
+                 placement: str = "single",
+                 wait: bool = True) -> Union[int, "WaveHandle"]:
         """Drain every session's outstanding posts into one wave (global
-        arrival order) and retire the results into per-session CQs.
+        arrival order), launch it, and — with ``wait=True`` — retire the
+        results into per-session CQs, returning the number of
+        completions retired.
+
+        **Split phase**: ``wait=False`` returns an in-flight
+        :class:`WaveHandle` as soon as the launch is *issued* — before
+        any (possibly slow, async-MEMCPY-heavy) work retires.  The pool
+        binding becomes a device future, so further posts and doorbells
+        pipeline against the in-flight wave (XLA chains the data
+        dependency); completions retire later via ``poll_cq`` /
+        ``wait_any`` / ``wait_all`` / ``Completion.wait()``, always in
+        wave order so per-session FIFO holds.  Modes that cannot defer
+        (sharded placement, "interp") still compute eagerly but retire
+        on the same split-phase path.
 
         ``mode`` picks the wave engine: the mixed-dispatch set
         ("auto"/"mixed"/"segmented"/"serial") for any wave, "batched"/
-        "compiled" for single-op waves, "interp" for a single-request
-        wave — which makes the endpoint the one surface that can drive
-        every engine (the benchmarks rely on this).  Returns the number
-        of completions retired.
+        "compiled"/"compiled_dbuf" for single-op waves, "interp" for a
+        single-request wave — which makes the endpoint the one surface
+        that can drive every engine (the benchmarks rely on this).
 
         ``placement`` decides *where* the wave executes — placement is a
         doorbell concern, invisible to :meth:`Session.post` callers:
@@ -387,25 +520,33 @@ class TiaraEndpoint:
             s._sq = []
         self._outstanding = 0
         if not wave:
-            return 0
+            if wait:
+                return 0
+            empty = WaveHandle(self, self._wave_seq, (),
+                               None)  # nothing launched, nothing to wait
+            empty.done = True
+            self._wave_seq += 1
+            return empty
         wave.sort(key=lambda c: c.seq)
         ids = [c.op_id for c in wave]
         params = [list(c.params) for c in wave]
         homes = [c.home for c in wave]
         reg = self.registry
+        block = wait  # split-phase doorbells defer result retirement
         try:
             if mode in _WAVE_MODES:
                 res = reg._invoke_mixed(ids, self.mem, params, homes=homes,
                                         mode=mode,
                                         contention_rate=contention_rate,
-                                        placement=placement)
+                                        placement=placement, block=block)
             elif mode in _SINGLE_OP_MODES:
                 if len(set(ids)) != 1:
                     raise EndpointError(
                         f"mode {mode!r} needs a single-op wave; got op_ids "
                         f"{sorted(set(ids))}")
                 res = reg._invoke_batched(ids[0], self.mem, params,
-                                         homes=homes, mode=mode)
+                                          homes=homes, mode=mode,
+                                          block=block)
             else:  # "interp"
                 if len(wave) != 1:
                     raise EndpointError(
@@ -427,14 +568,99 @@ class TiaraEndpoint:
             self._outstanding = len(wave)
             raise
         self.mem = res.mem
-        for i, c in enumerate(wave):
+        handle = WaveHandle(self, self._wave_seq, wave, res)
+        self._wave_seq += 1
+        for c in wave:
+            c.wave_handle = handle
+        self._inflight.append(handle)
+        if wait:
+            self._retire_through(handle)
+            return len(wave)
+        return handle
+
+    # -- completion retirement (the receive side) -------------------------
+
+    def _retire(self, handle: WaveHandle) -> None:
+        """Deliver one wave's CQEs: materialize the (possibly deferred)
+        engine result, fill the completion handles, and append them to
+        their sessions' CQs in global arrival order.  Only
+        :meth:`_retire_through` / :meth:`_retire_ready` call this, and
+        only in wave order."""
+        res = vm.materialize_result(handle._res)
+        if self.mem is handle._res.mem:
+            # the pool still points at this wave's output: keep the
+            # materialized host view so later reads don't re-block
+            self.mem = res.mem
+        # drop the result: a user-held Completion must not pin a whole
+        # pool snapshot (the per-request fields are copied out below)
+        handle._res = None
+        now = time.monotonic()
+        for i, c in enumerate(handle.completions):
             c.ret = int(res.ret[i])
             c.status = int(res.status[i])
             c.steps = int(res.steps[i])
             c.regs = np.asarray(res.regs[i])
+            c.event = CompletionEvent(
+                seq=c.seq, op_name=c.op_name, ret=c.ret, status=c.status,
+                steps=c.steps, wave=handle.wave_id, retired_at=now)
             c.done = True
             c.session._cq.append(c)
-        return len(wave)
+        handle.done = True
+
+    def _retire_through(self, handle: WaveHandle) -> None:
+        """Retire every in-flight wave up to and including ``handle``
+        (strict launch order — per-session FIFO depends on it).  A wave
+        is only popped once its retirement succeeded, so a
+        materialization error leaves it queued for a retry instead of
+        silently losing it (and draining every later wave looking for
+        it)."""
+        if handle.done:
+            return
+        while self._inflight:
+            h = self._inflight[0]
+            self._retire(h)
+            self._inflight.pop(0)
+            if h is handle:
+                break
+
+    def _retire_ready(self) -> int:
+        """Retire in-flight waves whose launches have landed, oldest
+        first, stopping at the first one still computing (never
+        blocks).  Returns the number of completions retired."""
+        n = 0
+        while self._inflight and self._inflight[0].ready:
+            h = self._inflight[0]
+            self._retire(h)
+            self._inflight.pop(0)
+            n += len(h)
+        return n
+
+    def wait_all(self) -> int:
+        """Block until every in-flight wave retires; returns the number
+        of completions retired."""
+        n = self.in_flight
+        if self._inflight:
+            self._retire_through(self._inflight[-1])
+        return n
+
+    def wait_any(self) -> List[Completion]:
+        """Block until at least one in-flight wave retires (the oldest —
+        waves retire in launch order) and return its completions in
+        arrival order; ``[]`` when nothing is in flight."""
+        if not self._inflight:
+            return []
+        h = self._inflight[0]
+        self._retire_through(h)
+        return list(h.completions)
+
+    @property
+    def in_flight(self) -> int:
+        """Posts launched but not yet retired."""
+        return sum(len(h) for h in self._inflight)
+
+    @property
+    def in_flight_waves(self) -> int:
+        return len(self._inflight)
 
     @property
     def last_decision(self):

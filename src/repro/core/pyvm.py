@@ -90,6 +90,7 @@ class TraceEvent:
     src_remote: bool = False  # memcpy source on a non-home device
     dst_remote: bool = False  # memcpy destination on a non-home device
     dst_dev: int = -1         # memcpy destination device (for RTT counting)
+    wait_thr: int = 0         # WAIT: resolved in-flight threshold
 
 
 @dataclasses.dataclass
@@ -231,6 +232,8 @@ def run(op: VerifiedOperator, regions: RegionTable, mem: np.ndarray,
         elif o == Op.WAIT:
             thr = regs[a] if (flags & FLAG_THR_REG) else imm
             inflight = min(inflight, max(int(thr), 0))
+            if ev:
+                ev.wait_thr = max(int(thr), 0)
         elif o == Op.RET:
             halted = True
             ret_val = regs[a]

@@ -22,9 +22,10 @@ order.  All ``mode="auto"`` choices go through the analytical
 function of batch size, trace length, op-mix entropy, and the caller's
 contention-rate hint, not a hardcoded preference.
 
-The un-prefixed ``invoke``/``invoke_batched``/``invoke_mixed`` methods
-are **deprecated shims** (one release): new code posts work to a
-:class:`~repro.core.endpoint.Session` and rings
+There is no public invocation surface here: the PR-3 deprecated
+``invoke``/``invoke_batched``/``invoke_mixed`` shims have been removed
+after their one-release window.  All invocation goes through a
+:class:`~repro.core.endpoint.Session` and
 :meth:`~repro.core.endpoint.TiaraEndpoint.doorbell`, which owns the pool
 and calls the internal engines here.
 
@@ -35,7 +36,6 @@ shared store and enforce the aggregate capacity.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Dict, List, Optional, Sequence, Set, Union
 
 import numpy as np
@@ -49,7 +49,7 @@ from repro.core.program import TiaraProgram
 from repro.core.verifier import VerifiedOperator, verify
 
 _SINGLE_MODES = ("auto", "interp", "compiled")
-_BATCHED_MODES = ("auto", "batched", "compiled")
+_BATCHED_MODES = ("auto", "batched", "compiled", "compiled_dbuf")
 _MIXED_MODES = ("auto", "mixed", "segmented", "serial")
 _PLACEMENTS = ("single", "sharded", "auto")
 
@@ -75,6 +75,12 @@ class Slot:
     regions: RegionTable
     compile_reason: Optional[str] = None
     n_gather_chains: int = 0
+    # Summed static caps of the *double-bufferable* gather chains only
+    # (cap > compile.DBUF_CHUNK — the engine chunks per chain, so a
+    # chain that fits one chunk must not count toward the overlap
+    # discount or the dbuf candidate would price a win that the emitted
+    # schedule cannot deliver).
+    chain_iters: int = 0
 
     @property
     def compilable(self) -> bool:
@@ -88,22 +94,25 @@ class Slot:
 
     def batched(self, mem: np.ndarray, params: Sequence[Sequence[int]], *,
                 homes: Union[int, Sequence[int]] = 0,
-                failed: Optional[Set[int]] = None
-                ) -> vm.BatchedInvokeResult:
+                failed: Optional[Set[int]] = None,
+                block: bool = True) -> vm.BatchedInvokeResult:
         return vm.invoke_batched(self.verified, self.regions, mem, params,
-                                 homes=homes, failed=failed)
+                                 homes=homes, failed=failed, block=block)
 
     def compiled(self, mem: np.ndarray, params: Sequence[Sequence[int]], *,
                  homes: Union[int, Sequence[int]] = 0,
                  failed: Optional[Set[int]] = None,
-                 impl: str = "xla") -> vm.BatchedInvokeResult:
+                 impl: str = "xla", double_buffer: bool = False,
+                 block: bool = True) -> vm.BatchedInvokeResult:
         if not self.compilable:
             raise ValueError(
                 f"op {self.op_id} has no compiled entry point: "
                 f"{self.compile_reason}")
         return tcompile.invoke_compiled(self.verified, self.regions, mem,
                                         params, homes=homes, failed=failed,
-                                        impl=impl)
+                                        impl=impl,
+                                        double_buffer=double_buffer,
+                                        block=block)
 
 
 class OperatorRegistry:
@@ -152,11 +161,14 @@ class OperatorRegistry:
                 f"instruction store full: {self._store_used} + "
                 f"{program.n_instr} > {isa.INSTR_STORE_SIZE}")
         op_id = len(self._slots)
+        chains = tcompile.find_gather_chains(verified)
         self._slots[op_id] = Slot(
             op_id=op_id, tenant=tenant, verified=verified,
             start_pc=self._store_used, regions=self.regions,
             compile_reason=tcompile.why_not_compilable(verified),
-            n_gather_chains=len(tcompile.find_gather_chains(verified)))
+            n_gather_chains=len(chains),
+            chain_iters=sum(g.cap for g in chains
+                            if g.cap > tcompile.DBUF_CHUNK))
         self._store_used += program.n_instr
         self._by_name[f"{tenant}/{program.name}"] = op_id
         return op_id
@@ -188,30 +200,6 @@ class OperatorRegistry:
         if mode not in allowed:
             raise ValueError(
                 f"unknown mode {mode!r}; expected one of {list(allowed)}")
-
-    _DEPRECATION = (
-        "registry.{name}() is deprecated: post work to a TiaraEndpoint "
-        "Session and ring doorbell() (repro.core.endpoint); this shim "
-        "will be removed next release")
-
-    def _deprecated(self, name: str) -> None:
-        warnings.warn(self._DEPRECATION.format(name=name),
-                      DeprecationWarning, stacklevel=3)
-
-    def invoke(self, *args, **kwargs) -> vm.InvokeResult:
-        """Deprecated shim for :meth:`_invoke`."""
-        self._deprecated("invoke")
-        return self._invoke(*args, **kwargs)
-
-    def invoke_batched(self, *args, **kwargs) -> vm.BatchedInvokeResult:
-        """Deprecated shim for :meth:`_invoke_batched`."""
-        self._deprecated("invoke_batched")
-        return self._invoke_batched(*args, **kwargs)
-
-    def invoke_mixed(self, *args, **kwargs) -> vm.BatchedInvokeResult:
-        """Deprecated shim for :meth:`_invoke_mixed`."""
-        self._deprecated("invoke_mixed")
-        return self._invoke_mixed(*args, **kwargs)
 
     def _invoke(self, op_id: int, mem: np.ndarray,
                 params: Sequence[int] = (), *, home: int = 0,
@@ -246,15 +234,18 @@ class OperatorRegistry:
                         homes: Union[int, Sequence[int]] = 0,
                         failed: Optional[Set[int]] = None,
                         mode: str = "auto",
-                        contention_rate: float = 0.0
-                        ) -> vm.BatchedInvokeResult:
+                        contention_rate: float = 0.0,
+                        block: bool = True) -> vm.BatchedInvokeResult:
         """Line-rate dispatch: B requests, one XLA launch.  ``mode``:
         "auto" (cost-model pick), "batched" (force the lockstep
-        interpreter — always exact, even under contention), or
-        "compiled" (force the straight-line trace).  ``contention_rate``
+        interpreter — always exact, even under contention), "compiled"
+        (force the straight-line trace), or "compiled_dbuf" (force the
+        double-buffered gather-chain schedule).  ``contention_rate``
         is the caller's estimate of the fraction of macro-steps whose
         footprints collide; any positive value steers "auto" to the
-        interpreter, whose per-step conflict check serializes exactly."""
+        interpreter, whose per-step conflict check serializes exactly.
+        ``block=False`` defers result retirement (the endpoint's
+        split-phase doorbell)."""
         self._check_mode(mode, _BATCHED_MODES)
         slot = self._slots[op_id]
         if mode == "auto":
@@ -264,15 +255,25 @@ class OperatorRegistry:
                 batch=B, step_bound=slot.verified.step_bound,
                 compilable=slot.compilable,
                 contention_rate=contention_rate,
+                chain_iters=slot.chain_iters,
                 batched_cached=vm.engine_cached(
                     slot.verified, self.regions, n_dev, B),
                 compiled_cached=tcompile.compiled_cached(
-                    slot.verified, self.regions, n_dev, B))
+                    slot.verified, self.regions, n_dev, B),
+                # only worth a cache-key hash when the dbuf candidate
+                # can actually be priced (the op has gather chains)
+                dbuf_cached=(slot.chain_iters > 0
+                             and tcompile.compiled_cached(
+                                 slot.verified, self.regions, n_dev, B,
+                                 double_buffer=True)))
             self.last_decision = decision
             mode = decision.mode
         if mode == "batched":
-            return slot.batched(mem, params, homes=homes, failed=failed)
-        return slot.compiled(mem, params, homes=homes, failed=failed)
+            return slot.batched(mem, params, homes=homes, failed=failed,
+                                block=block)
+        return slot.compiled(mem, params, homes=homes, failed=failed,
+                             double_buffer=(mode == "compiled_dbuf"),
+                             block=block)
 
     # -- mixed-op invocation (the multi-tenant line-rate path) -------------
 
@@ -305,8 +306,8 @@ class OperatorRegistry:
                       failed: Optional[Set[int]] = None,
                       mode: str = "auto",
                       contention_rate: float = 0.0,
-                      placement: str = "single"
-                      ) -> vm.BatchedInvokeResult:
+                      placement: str = "single",
+                      block: bool = True) -> vm.BatchedInvokeResult:
         """Dispatch a wave whose requests carry *per-request* op_ids.
 
         ``mode``:
@@ -376,7 +377,8 @@ class OperatorRegistry:
             if plan.n_segments == 1:
                 return self._invoke_batched(
                     int(ids[0]), mem, params, homes=homes, failed=failed,
-                    mode="auto", contention_rate=contention_rate)
+                    mode="auto", contention_rate=contention_rate,
+                    block=block)
             n_dev = int(mem.shape[0])
             decision = self.cost_model.choose_mixed(
                 segments=self._segment_stats(plan, n_dev),
@@ -387,17 +389,18 @@ class OperatorRegistry:
         if mode == "mixed":
             out = vm.invoke_batched_mixed(
                 self.store_ops(), self.regions, mem, ids, params,
-                homes=homes, failed=failed)
+                homes=homes, failed=failed, block=block)
         elif mode == "segmented":
             out = self._invoke_groups(
                 ((seg.op_id, plan.segment_indices(seg))
                  for seg in plan.segments),
                 mem, params, homes=homes, failed=failed,
-                contention_rate=contention_rate)
+                contention_rate=contention_rate, block=block)
         else:
             out = self._invoke_groups(
                 self._arrival_runs(ids), mem, params, homes=homes,
-                failed=failed, contention_rate=contention_rate)
+                failed=failed, contention_rate=contention_rate,
+                block=block)
         if decision is not None:
             # nested per-group dispatches recorded their own decisions;
             # the wave-level pick is what callers audit
@@ -426,6 +429,11 @@ class OperatorRegistry:
         if placement == "auto":
             bound = max(self._slots[int(i)].verified.step_bound
                         for i in np.unique(ids))
+            # the dense (no-homes) plan's segment stats price the best
+            # *single-chip* dispatch — mixed or segmented — so a wave
+            # whose best local plan is segmented is no longer routed to
+            # the mesh prematurely (the old choose_placement scope gap)
+            dense_plan = tcompile.plan_mixed_batch(ids)
             decision = self.cost_model.choose_placement(
                 batch=int(ids.size), n_devices=n_dev, step_bound=bound,
                 contention_rate=contention_rate,
@@ -438,7 +446,8 @@ class OperatorRegistry:
                     self.store_ops(), self.regions, n_dev, int(ids.size)),
                 sharded_cached=vm.sharded_engine_cached(
                     self.store_ops(), self.regions, n_dev,
-                    plan.batch_per_device))
+                    plan.batch_per_device),
+                segments=self._segment_stats(dense_plan, n_dev))
             self.last_placement = decision
             if decision.mode != "sharded":
                 return None
@@ -461,11 +470,20 @@ class OperatorRegistry:
                        params: Sequence[Sequence[int]], *,
                        homes: Union[int, Sequence[int]],
                        failed: Optional[Set[int]],
-                       contention_rate: float = 0.0
-                       ) -> vm.BatchedInvokeResult:
+                       contention_rate: float = 0.0,
+                       block: bool = True) -> vm.BatchedInvokeResult:
         """Launch each ``(op_id, arrival_indices)`` group on its own
         (best-engine auto dispatch), threading the pool through in group
-        order and scattering per-request outputs back to arrival order."""
+        order and scattering per-request outputs back to arrival order.
+
+        With ``block=False`` the per-group launches stay deferred: the
+        pool threads through as device futures and the arrival-order
+        scatter happens on device, so the whole multi-launch chain
+        retires later in one materialization."""
+        import contextlib
+
+        import jax.numpy as jnp
+
         B = len(params)
         h = vm.homes_array(homes, B)
         ret = np.zeros(B, dtype=np.int64)
@@ -473,15 +491,28 @@ class OperatorRegistry:
         steps = np.zeros(B, dtype=np.int64)
         regs = np.zeros((B, isa.NUM_REGS), dtype=np.int64)
         mem_cur = mem
-        for op_id, idx in groups:
-            idx = np.asarray(idx)
-            r = self._invoke_batched(
-                int(op_id), mem_cur, [list(params[i]) for i in idx],
-                homes=[int(h[i]) for i in idx], failed=failed, mode="auto",
-                contention_rate=contention_rate)
-            mem_cur = r.mem
-            ret[idx], status[idx] = r.ret, r.status
-            steps[idx], regs[idx] = r.steps, r.regs
+        # the deferred path scatters on device: int64 conversions there
+        # need 64-bit mode, same as the engine launches themselves
+        with vm.x64() if not block else contextlib.nullcontext():
+            if not block:
+                ret, status = jnp.asarray(ret), jnp.asarray(status)
+                steps, regs = jnp.asarray(steps), jnp.asarray(regs)
+            for op_id, idx in groups:
+                idx = np.asarray(idx)
+                r = self._invoke_batched(
+                    int(op_id), mem_cur, [list(params[i]) for i in idx],
+                    homes=[int(h[i]) for i in idx], failed=failed,
+                    mode="auto", contention_rate=contention_rate,
+                    block=block)
+                mem_cur = r.mem
+                if block:
+                    ret[idx], status[idx] = r.ret, r.status
+                    steps[idx], regs[idx] = r.steps, r.regs
+                else:
+                    ret = ret.at[idx].set(r.ret)
+                    status = status.at[idx].set(r.status)
+                    steps = steps.at[idx].set(r.steps)
+                    regs = regs.at[idx].set(r.regs)
         return vm.BatchedInvokeResult(mem=mem_cur, ret=ret, status=status,
                                       steps=steps, regs=regs)
 

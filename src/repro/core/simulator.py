@@ -12,9 +12,17 @@ parameters:
     occupancy, ``pcie_dma_cycles`` of latency;
   * Memcpy moves payload at the PCIe bulk rate (local) or wire rate
     (remote, plus one RTT for the write+ack);
-  * async Memcpy returns immediately and completes in the background;
-    Wait joins all outstanding completions (our operators use Wait(0));
-  * the reply and request each cross half an RTT plus wire serialization.
+  * async Memcpy is a true split-phase transfer: issue charges only the
+    channel/wire *occupancy* (the port is busy for the transfer's
+    duration), the MP keeps executing, and the copy retires in the
+    background at its completion time;
+  * Wait(thr) blocks the MP only until the in-flight count drops to
+    ``thr`` — completions retire in completion-time order, so a
+    double-buffered chain (``Wait(1)`` between chunks) overlaps chunk
+    k+1's resolution with chunk k's transfer; completions that have
+    already landed by the time Wait executes cost nothing;
+  * the reply and request each cross half an RTT plus wire serialization
+    (any still-outstanding async copy joins implicitly before the reply).
 
 Two MP variants (DESIGN.md discusses the calibration):
   * ``pipelined=False`` — FPGA-faithful: every load stalls the FSM for the
@@ -62,16 +70,24 @@ class TaskSim:
     dma_bulk_bytes: int
     wire_bytes: int            # request + reply + remote Memcpy payload
     n_instr_executed: int
+    async_issued: int = 0      # split-phase Memcpys issued
+    wait_stall_cycles: float = 0.0   # cycles the MP blocked in WAIT /
+    #                                # the implicit pre-reply join
 
 
 def simulate_task(vop: VerifiedOperator, trace: Sequence[TraceEvent],
                   hw: HW = DEFAULT_HW, *, pipelined: bool = False,
                   serial_chain: bool = True,
-                  reply_payload_bytes: int = 0) -> TaskSim:
+                  reply_payload_bytes: int = 0,
+                  serialize_async: bool = False) -> TaskSim:
     """Charge cycle costs along one executed trace.
 
     ``reply_payload_bytes``: data returned to the caller beyond the status
     word (e.g. the gathered KV blocks), serialized onto the wire.
+
+    ``serialize_async=True`` treats every async Memcpy as synchronous —
+    the no-overlap timeline a split-phase operator is compared against
+    (``bench_async_overlap`` reports the ratio).
     """
     clk = hw.clk_ns
     dma_lat = hw.pcie_dma_cycles
@@ -90,7 +106,9 @@ def simulate_task(vop: VerifiedOperator, trace: Sequence[TraceEvent],
     small = 0
     bulk_bytes = 0
     wire_bytes = REQUEST_BYTES + REPLY_BYTES + reply_payload_bytes
-    outstanding: List[float] = []
+    outstanding: List[float] = []     # completion times of in-flight copies
+    async_issued = 0
+    wait_stall = 0.0
     seen_pcs = set()
     # serializing shared resources (per-NIC): the PCIe channel and the
     # network port — async transfers queue on them, which is what makes a
@@ -137,18 +155,30 @@ def simulate_task(vop: VerifiedOperator, trace: Sequence[TraceEvent],
                 done = start + dma_lat + occ
                 chan += occ
                 bulk_bytes += nbytes
-            if ev.is_async:
+            if ev.is_async and not serialize_async:
+                # split-phase: the port occupancy is charged above, the
+                # MP moves on; the transfer retires at `done`
                 outstanding.append(done)
+                async_issued += 1
             else:
                 t = done
         elif ev.op == Op.WAIT:
-            if outstanding:
-                t = max(t, max(outstanding))
-                outstanding = []
+            # completions retire in completion-time order; Wait(thr)
+            # blocks only until at most `thr` transfers remain in flight
+            outstanding = [d for d in outstanding if d > t]
+            thr = max(int(getattr(ev, "wait_thr", 0)), 0)
+            if len(outstanding) > thr:
+                outstanding.sort()
+                t_new = outstanding[len(outstanding) - thr - 1]
+                wait_stall += max(t_new - t, 0.0)
+                t = max(t, t_new)
+                outstanding = [d for d in outstanding if d > t]
         # NOP/MOVI/ALU/JUMP/LOOP/RET: 1 MP cycle, already charged
 
     if outstanding:                    # implicit completion before reply
-        t = max(t, max(outstanding))
+        t_new = max(outstanding)
+        wait_stall += max(t_new - t, 0.0)
+        t = max(t, t_new)
 
     nic_resident_us = t * clk / 1e3
     latency_us = (hw.rtt_us / 2                      # request flight
@@ -159,7 +189,18 @@ def simulate_task(vop: VerifiedOperator, trace: Sequence[TraceEvent],
     return TaskSim(latency_us=latency_us, nic_resident_us=nic_resident_us,
                    mp_cycles=mp_cycles, dma_channel_cycles=int(chan),
                    dma_small_reqs=small, dma_bulk_bytes=bulk_bytes,
-                   wire_bytes=wire_bytes, n_instr_executed=len(trace))
+                   wire_bytes=wire_bytes, n_instr_executed=len(trace),
+                   async_issued=async_issued, wait_stall_cycles=wait_stall)
+
+
+def overlap_speedup(vop: VerifiedOperator, trace: Sequence[TraceEvent],
+                    hw: HW = DEFAULT_HW, **kwargs) -> float:
+    """NIC-residency ratio of the serialized timeline (every Memcpy
+    synchronous) over the split-phase one — how much latency the async
+    issue + deferred retirement actually hides for this trace."""
+    asyn = simulate_task(vop, trace, hw, **kwargs)
+    sync = simulate_task(vop, trace, hw, serialize_async=True, **kwargs)
+    return sync.nic_resident_us / max(asyn.nic_resident_us, 1e-12)
 
 
 def saturated_throughput_mops(sim: TaskSim, hw: HW = DEFAULT_HW) -> float:

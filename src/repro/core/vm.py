@@ -1294,16 +1294,47 @@ def _cached_sharded_engine(ops: Sequence[VerifiedOperator],
 
 
 def run_batched_fn(fn, mem: np.ndarray, p: np.ndarray, h: np.ndarray,
-                   failed: Optional[Set[int]]) -> "BatchedInvokeResult":
+                   failed: Optional[Set[int]], *,
+                   block: bool = True) -> "BatchedInvokeResult":
     """Execute a built batched engine: numpy in, numpy out, x64 handled.
-    Shared by the interpreter and compiled wrappers."""
+    Shared by the interpreter and compiled wrappers.
+
+    With ``block=False`` the result fields are left as device arrays —
+    XLA's async dispatch keeps computing while the caller goes on
+    posting more work (the endpoint's split-phase doorbell); call
+    :func:`materialize_result` to retire them to numpy.  The launch
+    itself (tracing, validation, cache lookup) still happens eagerly,
+    so malformed waves raise here either way."""
     n_dev = int(mem.shape[0])
     with x64():
         out = fn(jnp.asarray(mem, jnp.int64), jnp.asarray(p),
                  jnp.asarray(h), jnp.asarray(_failed_mask(n_dev, failed)))
-        out = jax.tree_util.tree_map(np.asarray, out)
+        if block:
+            out = jax.tree_util.tree_map(np.asarray, out)
     return BatchedInvokeResult(mem=out.mem, ret=out.ret, status=out.status,
                                steps=out.steps, regs=out.regs)
+
+
+def materialize_result(res: "BatchedInvokeResult") -> "BatchedInvokeResult":
+    """Retire a (possibly deferred) batched result to host numpy arrays.
+    Blocks until the launch that produced it completes; a no-op on an
+    already-materialized result."""
+    return BatchedInvokeResult(
+        mem=np.asarray(res.mem), ret=np.asarray(res.ret),
+        status=np.asarray(res.status), steps=np.asarray(res.steps),
+        regs=np.asarray(res.regs))
+
+
+def result_ready(res: "BatchedInvokeResult") -> bool:
+    """Non-blocking readiness probe of a deferred batched result: True
+    once every field's device computation has landed (numpy fields are
+    trivially ready; jax arrays without ``is_ready`` report ready and
+    the subsequent materialization simply blocks)."""
+    for f in (res.mem, res.ret, res.status, res.steps, res.regs):
+        probe = getattr(f, "is_ready", None)
+        if probe is not None and not probe():
+            return False
+    return True
 
 
 def _wrap_param(v) -> np.int64:
@@ -1368,16 +1399,17 @@ def invoke(op: VerifiedOperator, regions: RegionTable, mem: np.ndarray,
 def invoke_batched(op: VerifiedOperator, regions: RegionTable,
                    mem: np.ndarray, params: Sequence[Sequence[int]],
                    *, homes: Union[int, Sequence[int]] = 0,
-                   failed: Optional[Set[int]] = None
-                   ) -> "BatchedInvokeResult":
+                   failed: Optional[Set[int]] = None,
+                   block: bool = True) -> "BatchedInvokeResult":
     """Run a batch of requests against one shared pool: numpy in/out.
 
     ``params`` is a [B][k] nested sequence (one row per request); ``homes``
     is a scalar (all requests from the same host) or a [B] sequence.
+    ``block=False`` defers retirement (see :func:`run_batched_fn`).
     """
     p, h = _marshal_batch(params, homes)
     fn = _cached_engine(op, regions, int(mem.shape[0]), p.shape[0])
-    return run_batched_fn(fn, mem, p, h, failed)
+    return run_batched_fn(fn, mem, p, h, failed, block=block)
 
 
 def invoke_batched_mixed(ops: Sequence[VerifiedOperator],
@@ -1385,15 +1417,16 @@ def invoke_batched_mixed(ops: Sequence[VerifiedOperator],
                          op_sel: Sequence[int],
                          params: Sequence[Sequence[int]], *,
                          homes: Union[int, Sequence[int]] = 0,
-                         failed: Optional[Set[int]] = None
-                         ) -> "BatchedInvokeResult":
+                         failed: Optional[Set[int]] = None,
+                         block: bool = True) -> "BatchedInvokeResult":
     """Run a *mixed* batch — request ``b`` executes ``ops[op_sel[b]]`` —
     against one shared pool in one lockstep launch: numpy in/out.
 
     Semantics are the engine's deterministic round-robin interleaving
     across programs: each macro-step, request ``i`` executes the next
     instruction *of its own operator* and observes all same-step memory
-    effects of requests ``j < i``.
+    effects of requests ``j < i``.  ``block=False`` defers retirement
+    (see :func:`run_batched_fn`).
     """
     p, h = _marshal_batch(params, homes)
     B = p.shape[0]
@@ -1409,7 +1442,7 @@ def invoke_batched_mixed(ops: Sequence[VerifiedOperator],
     def fn(mem_j, p_j, h_j, failed_j):
         return eng(mem_j, p_j, h_j, failed_j, sel)
 
-    return run_batched_fn(fn, mem, p, h, failed)
+    return run_batched_fn(fn, mem, p, h, failed, block=block)
 
 
 def invoke_sharded_mixed(ops: Sequence[VerifiedOperator],

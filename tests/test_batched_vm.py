@@ -294,6 +294,51 @@ def test_compiled_batched_matches_batched_interpreter():
     assert np.array_equal(ri.mem, rc.mem)
 
 
+def test_compiled_double_buffer_bit_parity():
+    """The double-buffered gather-chain schedule (chunked: chunk k+1's
+    gather issued before chunk k's scatter) must stay bit-identical to
+    the monolithic compiled path and to the sequential pyvm oracle —
+    the chain cap (32) exceeds DBUF_CHUNK so the chunked path really
+    runs."""
+    m = ops.MoEExpertGather(n_experts=64, max_k=32, slab_words=64,
+                            reply_slots=8)
+    rt = m.regions()
+    vop = verify(m.build(rt, reply_param=True), grant=Grant.all_of(rt),
+                 regions=rt)
+    assert len(tc.find_gather_chains(vop)) == 1
+    assert tc.find_gather_chains(vop)[0].cap > tc.DBUF_CHUNK
+    mem = memory.make_pool(1, rt)
+    m.populate(mem, rt)
+    memory.write_region(mem, rt, 0, "expert_ids",
+                        np.arange(32, dtype=np.int64) % 64)
+    B = 6
+    params = [[5 + (i % 7), i * 32 * 64] for i in range(B)]
+    seq, rets, stats, steps = sequential_oracle(vop, rt, mem, params)
+    plain = tc.invoke_compiled(vop, rt, mem.copy(), params)
+    dbuf = tc.invoke_compiled(vop, rt, mem.copy(), params,
+                              double_buffer=True)
+    assert_batch_matches(plain, seq, rets, stats, steps)
+    assert_batch_matches(dbuf, seq, rets, stats, steps)
+    # forced through the registry mode (the endpoint's "compiled_dbuf")
+    reg = OperatorRegistry(rt)
+    reg.add_tenant(Grant.all_of(rt, "t"))
+    op_id = reg.register("t", m.build(rt, reply_param=True))
+    assert reg[op_id].chain_iters == 32
+    rr = reg._invoke_batched(op_id, mem.copy(), params,
+                             mode="compiled_dbuf")
+    assert_batch_matches(rr, seq, rets, stats, steps)
+    # a chain that fits one chunk is not double-bufferable: it must
+    # not count toward the dbuf candidate (the engine would emit the
+    # monolithic schedule, so there is no overlap win to price)
+    short = ops.MoEExpertGather(n_experts=64, max_k=4, slab_words=64)
+    rt2 = short.regions()
+    reg2 = OperatorRegistry(rt2)
+    reg2.add_tenant(Grant.all_of(rt2, "t"))
+    sid = reg2.register("t", short.build(rt2))
+    assert reg2[sid].n_gather_chains == 1
+    assert reg2[sid].chain_iters == 0
+
+
 def test_compiled_gather_kernel_route_matches():
     """The tiara_gather Pallas route (interpret mode) == the XLA lowering."""
     m = ops.MoEExpertGather(n_experts=32, max_k=8)

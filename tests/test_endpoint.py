@@ -8,7 +8,12 @@ The invariants under test:
    bit-identical to replaying the posts one at a time on ``pyvm``.
 2. Completions retire into each session's CQ in per-session FIFO order,
    for any interleaving of posts across sessions and doorbells.
-3. The legacy ``registry.invoke*`` shims still work but warn.
+3. The legacy ``registry.invoke*`` shims are gone (their one-release
+   window closed with PR 5) — the endpoint is the only surface.
+
+The split-phase completion surface (``doorbell(wait=False)`` /
+``wait_any`` / ``wait_all``) has its own suite in
+``test_async_completion.py``.
 """
 
 import numpy as np
@@ -393,21 +398,20 @@ def test_multi_device_homes():
 
 
 # ---------------------------------------------------------------------------
-# Deprecated shims
+# Deprecated shims: removed after their one-release window (PR 5)
 # ---------------------------------------------------------------------------
 
-def test_registry_invoke_shims_warn_and_work():
+def test_registry_invoke_shims_removed():
+    """The PR-3 deprecation window is closed: the un-prefixed registry
+    entry points no longer exist, so stale callers fail loudly instead
+    of silently bypassing the endpoint surface."""
     ep, (s0, *_) = _connect()
-    reg, op = ep.registry, s0.op_id("sum2")
-    with pytest.warns(DeprecationWarning):
-        r = reg.invoke(op, ep.mem, [0, 0])
+    reg = ep.registry
+    for name in ("invoke", "invoke_batched", "invoke_mixed"):
+        assert not hasattr(reg, name)
+    # the internal engines are still there for the endpoint to drive
+    r = reg._invoke(s0.op_id("sum2"), ep.host_mem(), [0, 0])
     assert r.ret == 21
-    with pytest.warns(DeprecationWarning):
-        rb = reg.invoke_batched(op, ep.mem, [[0, 0], [2, 1]])
-    assert rb.ret.tolist() == [21, 25]
-    with pytest.warns(DeprecationWarning):
-        rm = reg.invoke_mixed([op, op], ep.mem, [[0, 0], [4, 1]])
-    assert rm.ret.tolist() == [21, 29]
 
 
 # ---------------------------------------------------------------------------

@@ -123,6 +123,74 @@ def test_choose_batched_charges_uncached_compile():
         warm.costs["compiled"] + amortized)
 
 
+def test_choose_batched_double_buffer_crossover():
+    """Long gather chains prefer the double-buffered compiled schedule;
+    chains that fit in one chunk (no overlap to win, scheduling cost to
+    lose) stay on the monolithic trace; contention excludes both."""
+    cm = DispatchCostModel()
+    long_ = cm.choose_batched(batch=256, step_bound=5 * 64 + 6,
+                              compilable=True, chain_iters=64)
+    assert long_.mode == "compiled_dbuf"
+    assert long_.costs["compiled_dbuf"] < long_.costs["compiled"]
+    short = cm.choose_batched(batch=256, step_bound=5 * 4 + 6,
+                              compilable=True, chain_iters=4)
+    assert short.mode == "compiled"
+    assert short.costs["compiled_dbuf"] > short.costs["compiled"]
+    no_chain = cm.choose_batched(batch=256, step_bound=40,
+                                 compilable=True)
+    assert "compiled_dbuf" not in no_chain.costs
+    contended = cm.choose_batched(batch=256, step_bound=5 * 64 + 6,
+                                  compilable=True, chain_iters=64,
+                                  contention_rate=0.5)
+    assert contended.mode == "batched"
+    assert "compiled_dbuf" not in contended.costs
+
+
+def test_observe_overlap_learns_ewma_term():
+    """The overlap term adapts online: a measured pair where double-
+    buffering hid most of the chain pulls the term up; decisions then
+    price the dbuf path cheaper than before."""
+    cm = DispatchCostModel()
+    before = cm.cost.dbuf_overlap
+    cost_before = cm.cost.compiled_dbuf_us(256, 5 * 64, 64)
+    new = cm.observe_overlap(100.0, 20.0)     # 80% hidden
+    assert new > before
+    assert cm.cost.dbuf_overlap == new
+    assert cm.cost.compiled_dbuf_us(256, 5 * 64, 64) < cost_before
+    # degenerate observations leave the term untouched
+    assert cm.observe_overlap(0.0, 10.0) == new
+    # a pessimal pair (no hiding) pulls it down, clamped at 0
+    worse = cm.observe_overlap(100.0, 100.0)
+    assert 0.0 <= worse < new
+
+
+def test_choose_placement_prices_single_as_best_local_dispatch():
+    """The PR-4 scope gap: "single" used to be priced as the mixed
+    engine only, so a low-entropy wave whose best local plan is
+    segmented (big compiled per-op launches) was routed to the mesh
+    prematurely.  With the dense plan's segment stats the single-chip
+    side is the min of mixed and segmented and keeps the wave local."""
+    cm = DispatchCostModel()
+    # 4 big compilable segments, total B=1024, long traces: segmented
+    # crushes mixed locally, and sharding (collective tax per step)
+    # beats *mixed* but not *segmented*
+    segs = [SegmentStats(size=256, step_bound=60, compilable=True)] * 4
+    kw = dict(batch=1024, n_devices=8, step_bound=60,
+              batch_per_device=128)
+    old = cm.choose_placement(**kw)                    # no segment stats
+    assert old.mode == "sharded"                       # the old mispick
+    new = cm.choose_placement(**kw, segments=segs)
+    assert new.mode == "single"
+    assert new.costs["single"] == new.costs["single_segmented"]
+    assert new.costs["single"] < new.costs["sharded"]
+    assert new.costs["single_mixed"] == old.costs["single"]
+    # under contention segmentation is excluded (it reorders across
+    # ops) and the serialized-scan terms dominate both sides
+    cont = cm.choose_placement(**kw, segments=segs, contention_rate=0.5)
+    assert "single_segmented" not in cont.costs
+    assert cont.mode == "single"
+
+
 def test_engine_cost_measured_adapts_launch_only():
     c = EngineCost.measured(reps=3)
     base = EngineCost()
