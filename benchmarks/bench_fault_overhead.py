@@ -1,0 +1,201 @@
+"""Runtime-protection overhead on the fault-free hot path.
+
+The runtime protection checks (wild-pointer containment, failed-device
+fencing — see ``core/pyvm.py``) ride every word op and MEMCPY of every
+engine.  An RNIC does this in parallel check hardware for free; a
+software engine pays real vector work, so the cost must be watched:
+this benchmark runs the B-request graph-walk wave through the batched
+and trace-compiled engines with protection on (the default every
+caller gets) vs the legacy unprotected build (``protect=False``) and
+reports the throughput ratio.
+
+Two gated metrics, one deterministic and one measured:
+
+* ``traffic_ratio`` — unprotected / protected "bytes accessed" from
+  XLA's own cost analysis of the two compiled B=1024 programs.  This
+  is a property of the lowered HLO, not of the host, so it never
+  flakes; it is the hard gate (>= ``GATE_TRAFFIC``).  Measured today:
+  ~0.90 (the checks add ~11% memory traffic — the 10% design target
+  is just missed; see the ROADMAP fault-model table for the residual:
+  predicate chains re-materialized across gather-broken fusions).
+* ``speedup_protect`` — protected / unprotected wall-clock throughput,
+  min-of-N interleaved A/B (robust to the several-×10% swings this
+  host shows between runs).  Gated only against a catastrophic floor
+  (>= ``GATE_WALL``); drift is tracked by ``check_regression.py``
+  against the committed baseline.
+
+``parity_ok`` asserts both builds produce bit-identical results on the
+clean wave — the checks may never change fault-free architectural
+behavior.  Results land in ``BENCH_fault_overhead.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import compile as tc
+from repro.core import memory, vm
+from repro.core import operators as ops
+from repro.core.memory import Grant
+from repro.core.verifier import verify
+
+from benchmarks._workbench import Row
+
+JSON_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_fault_overhead.json")
+# quick mode overlaps the committed B=64 row so the CI regression gate
+# always has a matching identity to compare
+BATCHES = (64, 1024)
+QUICK_BATCHES = (64,)
+DEPTH = 10                    # the paper's 10-hop traversal
+MAX_DEPTH = 16
+N_NODES = 4096
+REPS = 30                     # interleaved A/B rounds (full mode)
+QUICK_REPS = 8
+GATE_TRAFFIC = 0.88           # deterministic: HLO bytes-accessed ratio
+GATE_WALL = 0.70              # catastrophic floor for the measured ratio
+
+
+def _setup(max_batch: int):
+    w = ops.GraphWalk(n_nodes=N_NODES, max_depth=MAX_DEPTH,
+                      reply_words=max_batch * ops.NODE_WORDS)
+    rt = w.regions()
+    vop = verify(w.build(rt, reply_param=True), grant=Grant.all_of(rt),
+                 regions=rt)
+    mem = memory.make_pool(1, rt)
+    order = w.populate(mem, rt)
+    return vop, rt, mem, order
+
+
+def _invoke(engine: str, vop, rt, mem, params, protect: bool):
+    if engine == "batched":
+        return vm.invoke_batched(vop, rt, mem, params, protect=protect)
+    return tc.invoke_compiled(vop, rt, mem, params, protect=protect)
+
+
+def _traffic_ratio(vop, rt, B: int) -> Optional[float]:
+    """Unprotected / protected bytes-accessed of the compiled trace,
+    from XLA's cost analysis — deterministic for a given lowering."""
+    import jax.numpy as jnp
+    with vm.x64():
+        args = (jnp.asarray(memory.make_pool(1, rt), jnp.int64),
+                jnp.zeros((B, 3), jnp.int64), jnp.zeros(B, jnp.int64),
+                jnp.zeros(1, bool))
+        byts = {}
+        for protect in (True, False):
+            fn = tc.build_compiled(vop, rt, 1, B, protect=protect,
+                                   check_failed=False)
+            try:
+                ca = fn.lower(*args).compile().cost_analysis()
+            except Exception:
+                return None
+            ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+            b = (ca or {}).get("bytes accessed")
+            if not b:
+                return None
+            byts[protect] = float(b)
+    return byts[False] / byts[True]
+
+
+def _interleaved_min(call_a, call_b, reps: int):
+    """min-of-N wall clock for two calls, strictly interleaved so slow
+    host phases (GC, thermal, noisy neighbors) hit both sides alike."""
+    ta, tb = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        call_a()
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        call_b()
+        tb.append(time.perf_counter() - t0)
+    return min(ta), min(tb)
+
+
+def measure(quick: bool = False) -> dict:
+    batches = QUICK_BATCHES if quick else BATCHES
+    reps = QUICK_REPS if quick else REPS
+    vop, rt, mem, order = _setup(max(batches))
+    results: List[dict] = []
+    for engine in ("batched", "compiled"):
+        for B in batches:
+            params = [[int(order[i % N_NODES]) * 8, DEPTH,
+                       i * ops.NODE_WORDS] for i in range(B)]
+            r_p = _invoke(engine, vop, rt, mem, params, True)
+            r_n = _invoke(engine, vop, rt, mem, params, False)
+            # the checks may never perturb a fault-free wave
+            parity_ok = bool(
+                np.array_equal(r_p.ret, r_n.ret)
+                and np.array_equal(r_p.status, r_n.status)
+                and np.array_equal(r_p.steps, r_n.steps)
+                and np.array_equal(r_p.mem, r_n.mem)
+                and np.asarray(r_p.fault)[:, 0].max() < 0)
+            s_p, s_n = _interleaved_min(
+                lambda: _invoke(engine, vop, rt, mem, params, True),
+                lambda: _invoke(engine, vop, rt, mem, params, False),
+                reps)
+            results.append(dict(
+                engine=engine, batch=B,
+                us_per_call=s_p * 1e6, ops_per_s=B / s_p,
+                us_per_call_noprotect=s_n * 1e6,
+                ops_per_s_noprotect=B / s_n,
+                speedup_protect=s_n / s_p, parity_ok=parity_ok))
+    ratio = _traffic_ratio(vop, rt, max(batches)) if not quick else None
+    return dict(results=results, traffic_ratio=ratio)
+
+
+def rows(quick: bool = False) -> List[Row]:
+    m = measure(quick=quick)
+    data, ratio = m["results"], m["traffic_ratio"]
+    payload = dict(workload=f"graph_walk depth={DEPTH} n_nodes={N_NODES}: "
+                            f"protect=True vs protect=False",
+                   unit="ratio (protected/unprotected ops/s)",
+                   gate_traffic=GATE_TRAFFIC, gate_wall=GATE_WALL,
+                   traffic_ratio=ratio, results=data)
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+    out = []
+    for r in data:
+        overhead = (1.0 - r["speedup_protect"]) * 100
+        out.append(Row(
+            name=f"fault_overhead/{r['engine']}/B={r['batch']}",
+            us_per_call=r["us_per_call"],
+            derived=r["speedup_protect"], unit="ratio",
+            note=f"protection overhead {overhead:+.1f}%"
+                 + ("" if r["parity_ok"] else "  PARITY BROKEN")))
+    if ratio is not None:
+        out.append(Row(name="fault_overhead/traffic/compiled",
+                       us_per_call=0.0, derived=ratio, unit="ratio",
+                       note=f"HLO bytes-accessed, noprotect/protect "
+                            f"(gate >= {GATE_TRAFFIC})"))
+    # hard gates (full mode; quick batches are launch-overhead dominated)
+    for r in data:
+        if not r["parity_ok"]:
+            raise RuntimeError(
+                f"protect=True changed fault-free results "
+                f"({r['engine']} B={r['batch']})")
+        if (not quick and r["engine"] == "compiled"
+                and r["batch"] == max(BATCHES)
+                and r["speedup_protect"] < GATE_WALL):
+            raise RuntimeError(
+                f"runtime protection costs too much: compiled "
+                f"B={r['batch']} keeps only "
+                f"{r['speedup_protect']:.0%} of unprotected throughput "
+                f"(floor {GATE_WALL:.0%})")
+    if ratio is not None and ratio < GATE_TRAFFIC:
+        raise RuntimeError(
+            f"runtime protection traffic regressed: the protected "
+            f"compiled trace moves {1 / ratio - 1:+.1%} more bytes than "
+            f"the unprotected one (gate >= {GATE_TRAFFIC})")
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r.csv())
+    print(f"wrote {JSON_PATH}")

@@ -33,7 +33,10 @@ _MEASURED = ("us_per_call", "ops_per_s", "subwave_ops_per_s", "parity_ok",
              # bench_async_overlap: simulated NIC residencies (inputs to
              # the gated speedup_overlap_sim ratio) and the cost model's
              # learned overlap term — measurements, not identity
-             "nic_us_async", "nic_us_serialized", "learned_overlap")
+             "nic_us_async", "nic_us_serialized", "learned_overlap",
+             # bench_fault_overhead: the unprotected build's side of the
+             # gated speedup_protect ratio
+             "us_per_call_noprotect", "ops_per_s_noprotect")
 
 # per-metric thresholds overriding --threshold: some normalizers are
 # noisier than the in-run serial baseline the 30% default was designed
@@ -47,8 +50,16 @@ _MEASURED = ("us_per_call", "ops_per_s", "subwave_ops_per_s", "parity_ok",
 # drifts ~2x with host load (measured: the same commit scored 19.9x and
 # 11.1x at B=64 in two sessions of one container).  A real structural
 # regression (losing vectorization ~ 10x) still trips the wider bands.
+# speedup_protect is an in-run interleaved min-of-N A/B ratio — the most
+# stable normalization the host allows (absolute times still swing tens
+# of percent between runs; the committed baseline measured 0.83 at
+# B=1024, and bench_fault_overhead additionally hard-gates the
+# deterministic HLO traffic ratio).  0.15 tolerates quick-mode jitter at
+# B=64 while still tripping on a structural cost regression in the
+# protection checks.
 _METRIC_THRESHOLDS = {"speedup_vs_single": 0.75,
-                      "speedup_vs_interp": 0.5}
+                      "speedup_vs_interp": 0.5,
+                      "speedup_protect": 0.15}
 
 
 def _identity(rec: dict) -> Tuple:

@@ -11,17 +11,52 @@ Run:  PYTHONPATH=src python -m benchmarks.run [--only fig10] [--json out]
 from __future__ import annotations
 
 import argparse
+import contextlib
 import inspect
 import json
+import os
+import signal
 import sys
 import time
 import traceback
 
-from benchmarks import (bench_async_overlap, bench_graph, bench_lock,
-                        bench_mixed_batch, bench_moe, bench_offload,
-                        bench_paged_attention, bench_ptw, bench_sharded,
-                        bench_table1, bench_vm_throughput)
+from benchmarks import (bench_async_overlap, bench_fault_overhead,
+                        bench_graph, bench_lock, bench_mixed_batch,
+                        bench_moe, bench_offload, bench_paged_attention,
+                        bench_ptw, bench_sharded, bench_table1,
+                        bench_vm_throughput)
 from benchmarks._workbench import fmt_table
+
+# Per-module wall-clock budget: one hung bench (an XLA compile gone
+# quadratic, a deadlocked wait) must report as a module failure instead
+# of eating the CI job's whole 45-minute budget.  0 disables the alarm.
+MODULE_TIMEOUT_S = int(os.environ.get("BENCH_MODULE_TIMEOUT_S", "900"))
+
+
+class ModuleTimeout(Exception):
+    pass
+
+
+@contextlib.contextmanager
+def _deadline(seconds: int, key: str):
+    """SIGALRM-based wall-clock cap around one module (main thread,
+    POSIX only — a no-op where SIGALRM is unavailable)."""
+    if seconds <= 0 or not hasattr(signal, "SIGALRM"):
+        yield
+        return
+
+    def _fire(signum, frame):
+        raise ModuleTimeout(
+            f"benchmark module {key!r} exceeded {seconds}s "
+            f"(BENCH_MODULE_TIMEOUT_S)")
+
+    prev = signal.signal(signal.SIGALRM, _fire)
+    signal.alarm(seconds)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, prev)
 
 MODULES = [
     ("table1", "Table 1: RTT cost of indirection", bench_table1),
@@ -40,6 +75,8 @@ MODULES = [
      bench_sharded),
     ("async_overlap", "Async MEMCPY overlap: split-phase vs serialized",
      bench_async_overlap),
+    ("fault_overhead", "Runtime protection cost on the fault-free path",
+     bench_fault_overhead),
 ]
 
 
@@ -63,11 +100,12 @@ def main() -> None:
         if args.quick and "quick" in inspect.signature(mod.rows).parameters:
             kwargs["quick"] = True
         t0 = time.time()
-        # a crashed module must not silently vanish from the report: run
-        # the remaining modules, but exit nonzero so the scheduled
-        # bench-smoke job cannot pass on a crash
+        # a crashed (or hung — see _deadline) module must not silently
+        # vanish from the report: run the remaining modules, but exit
+        # nonzero so the scheduled bench-smoke job cannot pass on it
         try:
-            rows = mod.rows(**kwargs)
+            with _deadline(MODULE_TIMEOUT_S, key):
+                rows = mod.rows(**kwargs)
         except Exception:
             traceback.print_exc()
             print(f"::error::benchmark module {key!r} crashed",

@@ -12,9 +12,10 @@ and the dispatch table; ``connect()`` gives each tenant a ``Session``
 
 from repro import jaxcompat
 from repro.core import costmodel as cm
+from repro.core import faults
 from repro.core import simulator as sim
 from repro.core import operators as ops
-from repro.core.endpoint import TiaraEndpoint
+from repro.core.endpoint import EndpointError, TiaraEndpoint
 from repro.core.frontend import compile_source
 
 
@@ -115,6 +116,34 @@ def walk(start, depth):
         assert c.result() == w.reference(orders[0], int(orders[0][0]), d)
         print(f"  walk(depth={d}) -> {c.ret}  "
               f"(wave {c.event.wave}, retired at {c.event.retired_at:.3f})")
+
+    # 8. Fault model (RNIC semantics).  Every engine runs with runtime
+    #    protection on: a wild pointer, out-of-region window, or access
+    #    to a failed device halts JUST that lane with
+    #    STATUS_PROT_FAULT, suppresses all its writes, and the CQE
+    #    carries FaultInfo(pc, opcode, addr, device).  Like a QP, the
+    #    owning session enters an error state — later posts retire
+    #    STATUS_FLUSHED without executing — until reset().  Here we
+    #    tear one next-pointer via the declarative fault-injection
+    #    harness (`core/faults.py`; plans compose with `+`):
+    ep.inject(faults.corrupt_words(
+        [(0, sess.view["graph"].base + start + 1, -999_999)]))
+    torn = sess.post("walk", [start, 4])
+    ep.doorbell()
+    assert torn.faulted and sess.in_error
+    print(f"\ntorn pointer -> {torn.fault}")
+    flushed = sess.post("walk", [start, 4])     # QP in error: flushed
+    assert flushed.flushed
+    try:
+        torn.result()                           # result() surfaces it
+    except EndpointError as e:
+        print(f"result() raised: {e}")
+    sess.reset()                                # error state is sticky
+    w.populate(sess.pool, sess.view, device=0, seed=0)   # heal the ring
+    healed = sess.post("walk", [start, 12])
+    ep.doorbell()
+    assert healed.ok
+    print(f"after reset + repair: walk(depth=12) -> {healed.result()}")
 
 
 if __name__ == "__main__":

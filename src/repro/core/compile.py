@@ -63,6 +63,12 @@ from repro.core import vm as _vm
 
 _REG_MASK = isa.NUM_REGS - 1
 
+# fault-site device column sentinels (see _Tracer.sites / _finalize_fault):
+# >= 0 is a static device id, _DEV_HOME resolves to the lane's home at
+# finalization, _DEV_LATCHED reads the runtime f_dev plane
+_DEV_HOME = -1
+_DEV_LATCHED = -2
+
 DEFAULT_UNROLL_LIMIT = 4096
 
 # Iterations per double-buffered gather-chain chunk: small enough that
@@ -409,7 +415,7 @@ class _Tracer:
 
     def __init__(self, *, instrs, loops, base, mask, n_dev, pool_words,
                  batch, homes, failed, mem_flat, regs, impl, superops,
-                 double_buffer=False):
+                 double_buffer=False, protect=True, check_failed=True):
         self.instrs = instrs
         self.loops = loops                  # pc -> LoopInfo
         self.base = base                    # static np arrays
@@ -424,11 +430,22 @@ class _Tracer:
         self.impl = impl
         self.superops = superops
         self.double_buffer = double_buffer
+        self.protect = protect
+        self.check_failed = check_failed
         zero = jnp.zeros(batch, jnp.int64)
         self.halted = jnp.zeros(batch, bool)
         self.ret = zero
         self.status = jnp.full(batch, isa.STATUS_FELL_OFF, jnp.int64)
         self.steps = zero
+        # fault record: each faulting site appends its (B,) fault lanes
+        # plus the runtime address (and device / chain-step, when not
+        # static) to `pending`; a faulted lane halts, so at most one
+        # site fires per lane and the whole record reduces to one fused
+        # sum at trace finalization (`_finalize_fault`) — the hot path
+        # pays no per-site selects at all.  `sites` is the static side
+        # table the (pc, opcode, dev) columns are recovered from.
+        self.sites: List[Tuple[int, int, int, bool]] = []
+        self.pending: List[Tuple] = []
 
     # -- small helpers ---------------------------------------------------
 
@@ -454,6 +471,57 @@ class _Tracer:
         off = self.regs[ins.b & _REG_MASK] + ins.imm
         return int(self.base[rid]) + (off & int(self.mask[rid]))
 
+    # -- runtime protection ------------------------------------------------
+
+    def _latch_fault(self, p, flt, pc, opcode, addr, dev=None):
+        """Latch a protection fault on lanes ``p & flt``: halt them,
+        record the static site index plus the runtime address (and the
+        device, when it isn't statically known), and return the reduced
+        predicate for the faulting instruction's own effects.  The
+        (pc, opcode, dev) columns and STATUS_PROT_FAULT are recovered
+        once at finalization — see `_finalize_fault`.
+
+        ``dev``: None when the resolved device is statically the lane's
+        home, an int when it is a static device id, or a traced (B,)
+        array (kept live for the finalization reduction)."""
+        f = p & flt
+        self.halted = self.halted | f
+        k = len(self.sites)
+        if dev is None:
+            devcol, dtr = _DEV_HOME, None
+        elif isinstance(dev, int):
+            devcol, dtr = dev, None
+        else:
+            devcol, dtr = _DEV_LATCHED, dev
+        self.sites.append((pc, int(opcode), devcol, False))
+        self.pending.append((k, f, addr, dtr, None))
+        return p ^ f
+
+    def _word_fault(self, ins, p, pc):
+        """Fault check shared by LOAD/STORE/CAS/CAA; mirrors pyvm's
+        priority: wild device register, then out-of-region offset, then
+        failed target device."""
+        if not self.protect:
+            return p
+        via = bool(ins.flags & FLAG_DEV_REG)
+        off = self.regs[ins.b & _REG_MASK] + ins.imm
+        oob_off = off != (off & int(self.mask[ins.a]))
+        if via:
+            dev = self.dev_of(ins.e, True)
+            draw = self.regs[ins.e & _REG_MASK]
+            oob_dev = (draw != DEV_LOCAL) & ((draw < 0) | (draw >= self.n_dev))
+            fdev = jnp.where(oob_dev, draw, dev)
+            flt = oob_dev | oob_off
+            if self.check_failed:
+                flt = flt | self.failed[dev]
+            return self._latch_fault(p, flt, pc, int(ins.op), off, fdev)
+        flt = oob_off
+        if self.check_failed:
+            flt = flt | self.failed[self.dev_of(ins.e, False)]
+        dev_static = None if ins.e == DEV_LOCAL \
+            else int(ins.e) % self.n_dev
+        return self._latch_fault(p, flt, pc, int(ins.op), off, dev_static)
+
     # -- per-opcode lowering ----------------------------------------------
 
     def _movi(self, ins, p):
@@ -465,18 +533,21 @@ class _Tracer:
         self.set_reg(ins.dst, _alu_static(ins.d, self.regs[ins.a & _REG_MASK],
                                           rhs), p)
 
-    def _load(self, ins, p):
+    def _load(self, ins, p, pc):
+        p = self._word_fault(ins, p, pc)
         dev = self.dev_of(ins.e, bool(ins.flags & FLAG_DEV_REG))
         val = self.memf[dev * self.P + self.word_addr(ins)]
         self.set_reg(ins.dst, val, p)
 
-    def _store(self, ins, p):
+    def _store(self, ins, p, pc):
+        p = self._word_fault(ins, p, pc)
         dev = self.dev_of(ins.e, bool(ins.flags & FLAG_DEV_REG))
         idx = dev * self.P + self.word_addr(ins)
         self.memf = det_scatter(self.memf, idx,
                                 self.regs[ins.dst & _REG_MASK], p)
 
-    def _atomic(self, ins, p, is_cas: bool):
+    def _atomic(self, ins, p, pc, is_cas: bool):
+        p = self._word_fault(ins, p, pc)
         dev = self.dev_of(ins.e, bool(ins.flags & FLAG_DEV_REG))
         idx = dev * self.P + self.word_addr(ins)
         cmpv = self.regs[ins.c & _REG_MASK]
@@ -495,9 +566,11 @@ class _Tracer:
         self.memf, old = lax.scan(body, self.memf, (idx, cmpv, arg, p))
         self.set_reg(ins.dst, old, p)
 
-    def _memcpy(self, ins, p):
-        ddev = self.dev_of(ins.dst, bool(ins.flags & FLAG_DSTDEV_REG))
-        sdev = self.dev_of(ins.c, bool(ins.flags & FLAG_SRCDEV_REG))
+    def _memcpy(self, ins, p, pc):
+        via_d = bool(ins.flags & FLAG_DSTDEV_REG)
+        via_s = bool(ins.flags & FLAG_SRCDEV_REG)
+        ddev = self.dev_of(ins.dst, via_d)
+        sdev = self.dev_of(ins.c, via_s)
         drid, srid = ins.a, ins.d
         cap = min(int(ins.imm), isa.MAX_MEMCPY_WORDS)
         if ins.flags & FLAG_LEN_REG:
@@ -506,10 +579,34 @@ class _Tracer:
             ln = self._full(cap)
         ln = jnp.minimum(ln, min(int(self.mask[drid]) + 1,
                                  int(self.mask[srid]) + 1))
-        fail = self.failed[ddev] | self.failed[sdev]
-        err = self.regs[ERR_REG]
-        self.regs[ERR_REG] = jnp.where(p & fail, err | 1, err)
-        ln = jnp.where(fail | ~p, 0, ln)
+        if self.protect:
+            doff0 = self.regs[ins.b & _REG_MASK]
+            soff0 = self.regs[ins.e & _REG_MASK]
+            dmask, smask = int(self.mask[drid]), int(self.mask[srid])
+
+            def dev_oob(field, via):
+                if not via:
+                    return jnp.zeros(self.B, bool)
+                d = self.regs[field & _REG_MASK]
+                return (d != DEV_LOCAL) & ((d < 0) | (d >= self.n_dev))
+
+            oob_dd = dev_oob(ins.dst, via_d)
+            oob_sd = dev_oob(ins.c, via_s)
+            d_oob = (doff0 != (doff0 & dmask)) | (doff0 + ln > dmask + 1)
+            s_oob = (soff0 != (soff0 & smask)) | (soff0 + ln > smask + 1)
+            flt = (ln > 0) & (oob_dd | oob_sd | d_oob | s_oob)
+            faddr = jnp.where(oob_dd | (~oob_sd & d_oob), doff0, soff0)
+            fdev = jnp.where(oob_dd, self.regs[ins.dst & _REG_MASK],
+                             jnp.where(oob_sd, self.regs[ins.c & _REG_MASK],
+                                       jnp.where(d_oob, ddev, sdev)))
+            p = self._latch_fault(p, flt, pc, int(ins.op), faddr, fdev)
+        if self.check_failed:
+            fail = self.failed[ddev] | self.failed[sdev]
+            err = self.regs[ERR_REG]
+            self.regs[ERR_REG] = jnp.where(p & fail, err | 1, err)
+            ln = jnp.where(fail | ~p, 0, ln)
+        else:
+            ln = jnp.where(p, ln, 0)
         iw = jnp.arange(cap, dtype=jnp.int64)[None, :]
         soff = self.regs[ins.e & _REG_MASK][:, None]
         doff = self.regs[ins.b & _REG_MASK][:, None]
@@ -552,13 +649,62 @@ class _Tracer:
             (ids & int(self.mask[g.table_rid]))
         paddr = self.memf[home * P + tbl_addr]                  # (B, cap)
 
-        fail = self.failed[self.homes]                          # local copy
-        err = self.regs[ERR_REG]
-        self.regs[ERR_REG] = jnp.where(p & fail & (m > 0), err | 1, err)
-        live = valid & ~fail[:, None]
-
+        fail = self.failed[self.homes] if self.check_failed else None
         pool_base = int(self.base[g.pool_rid])
         pool_mask = int(self.mask[g.pool_rid])
+
+        if self.protect:
+            # Per-iteration fault scan: body instruction k in {1: load id,
+            # 2: load translation, 3: memcpy row} can fault at iteration j;
+            # the chain commits exactly the first j* iterations plus the
+            # k*-1 committed instructions of iteration j*, mirroring the
+            # un-fused engines instruction for instruction.
+            dmask = int(self.mask[g.dst_rid])
+            lnW = min(W, dmask + 1, pool_mask + 1)
+            ids_off = i0 + jj                                   # raw (B, cap)
+            doffs = dst0 + jj * W                               # raw (B, cap)
+            c1 = ids_off != (ids_off & int(self.mask[g.ids_rid]))
+            if fail is not None:
+                c1 = fail[:, None] | c1
+            c2 = ids != (ids & int(self.mask[g.table_rid]))
+            d_oob = (doffs != (doffs & dmask)) | (doffs + lnW > dmask + 1)
+            s_oob = (paddr != (paddr & pool_mask)) | \
+                (paddr + lnW > pool_mask + 1)
+            k_j = jnp.where(c1, 1, jnp.where(c2, 2,
+                            jnp.where(d_oob | s_oob, 3, 0)))
+            k_j = jnp.where(valid, k_j, 0)
+            has = k_j > 0
+            flt = jnp.any(has, axis=1)
+            js = jnp.argmax(has, axis=1).astype(jnp.int64)
+            jsc = js[:, None]
+            kstar = jnp.take_along_axis(k_j, jsc, axis=1)[:, 0]
+            a3 = jnp.where(jnp.take_along_axis(d_oob, jsc, axis=1)[:, 0],
+                           jnp.take_along_axis(doffs, jsc, axis=1)[:, 0],
+                           jnp.take_along_axis(paddr, jsc, axis=1)[:, 0])
+            faddr = jnp.where(
+                kstar == 1, jnp.take_along_axis(ids_off, jsc, axis=1)[:, 0],
+                jnp.where(kstar == 2,
+                          jnp.take_along_axis(ids, jsc, axis=1)[:, 0], a3))
+            self.halted = self.halted | flt
+            # body starts at pc+1, so pc of body instruction k* is
+            # loop_pc + k* — recovered at finalization from the chain's
+            # latched k* (the aux column of the pending record)
+            k_site = len(self.sites)
+            self.sites.append((g.loop_pc, 0, _DEV_HOME, True))
+            self.pending.append((k_site, flt, faddr, None, kstar))
+            m_eff = jnp.where(flt, js, m)
+            live = valid & (jj < m_eff[:, None])
+        else:
+            if fail is not None:
+                err = self.regs[ERR_REG]
+                self.regs[ERR_REG] = jnp.where(p & fail & (m > 0),
+                                               err | 1, err)
+                live = valid & ~fail[:, None]
+            else:
+                live = valid
+            flt = jnp.zeros(self.B, bool)
+            js = kstar = None
+            m_eff = m
         iw = jnp.arange(W, dtype=jnp.int64)
         mem0 = self.memf              # pre-chain snapshot: all rows read it
 
@@ -603,7 +749,7 @@ class _Tracer:
                     (pool_mask + 1,)).reshape(-1, W)
                 rows = tiara_gather_kernel(
                     pool_view,
-                    (paddr.reshape(-1) // W).astype(jnp.int32),
+                    ((paddr & pool_mask).reshape(-1) // W).astype(jnp.int32),
                     jnp.arange(B * cap, dtype=jnp.int32),
                     interpret=(self.impl == "kernel_interpret"),
                 ).reshape(B, cap, W).astype(jnp.int64)
@@ -615,16 +761,26 @@ class _Tracer:
                                     jnp.transpose(rows, (1, 0, 2)),
                                     jnp.transpose(wmask, (1, 0, 2)))
 
-        # architectural register effects of the skipped iterations
-        last = jnp.clip(m - 1, 0, cap - 1)[:, None]
-        ran = p & (m > 0)
-        self.set_reg(g.i_reg, self.regs[g.i_reg] + m, p)
-        self.set_reg(g.dst_reg, self.regs[g.dst_reg] + m * W, p)
+        # architectural register effects of the executed iterations; a
+        # faulted lane commits the loads that retired before the fault
+        if self.protect:
+            n_id = jnp.where(flt, js + (kstar >= 2).astype(jnp.int64), m)
+            n_pa = jnp.where(flt, js + (kstar >= 3).astype(jnp.int64), m)
+            steps_n = jnp.where(flt, js * 5 + kstar, m * 5)
+        else:
+            n_id = n_pa = m
+            steps_n = m * 5
+        self.set_reg(g.i_reg, self.regs[g.i_reg] + m_eff, p)
+        self.set_reg(g.dst_reg, self.regs[g.dst_reg] + m_eff * W, p)
         self.set_reg(g.id_reg,
-                     jnp.take_along_axis(ids, last, axis=1)[:, 0], ran)
+                     jnp.take_along_axis(
+                         ids, jnp.clip(n_id - 1, 0, cap - 1)[:, None],
+                         axis=1)[:, 0], p & (n_id > 0))
         self.set_reg(g.paddr_reg,
-                     jnp.take_along_axis(paddr, last, axis=1)[:, 0], ran)
-        self.steps = self.steps + jnp.where(p, m * 5, 0)
+                     jnp.take_along_axis(
+                         paddr, jnp.clip(n_pa - 1, 0, cap - 1)[:, None],
+                         axis=1)[:, 0], p & (n_pa > 0))
+        self.steps = self.steps + jnp.where(p, steps_n, 0)
 
     # -- segment emission ---------------------------------------------------
 
@@ -699,15 +855,15 @@ class _Tracer:
             elif ins.op == Op.ALU:
                 self._alu(ins, p)
             elif ins.op == Op.LOAD:
-                self._load(ins, p)
+                self._load(ins, p, pc)
             elif ins.op == Op.STORE:
-                self._store(ins, p)
+                self._store(ins, p, pc)
             elif ins.op == Op.MEMCPY:
-                self._memcpy(ins, p)
+                self._memcpy(ins, p, pc)
             elif ins.op == Op.CAS:
-                self._atomic(ins, p, True)
+                self._atomic(ins, p, pc, True)
             elif ins.op == Op.CAA:
-                self._atomic(ins, p, False)
+                self._atomic(ins, p, pc, False)
             elif ins.op == Op.RET:
                 self.ret = jnp.where(p, self.regs[ins.a & _REG_MASK],
                                      self.ret)
@@ -723,9 +879,54 @@ class _Tracer:
 # Entry points
 # ---------------------------------------------------------------------------
 
+def _finalize_fault(tracer: _Tracer):
+    """Reduce the pending per-site fault lanes to (pc, opcode, addr,
+    dev) rows and apply STATUS_PROT_FAULT once.  A faulting lane halts
+    at its first fault, so the per-site lane masks are mutually
+    exclusive and every latched column is a plain masked sum — one
+    fused elementwise reduction here instead of per-site selects on
+    the hot path.  (A latched fault also implies the lane halted
+    before any RET could retire it, so the single status override is
+    equivalent to a per-site status write.)"""
+    B = tracer.B
+    if not tracer.pending:
+        none = jnp.zeros(B, jnp.int64)
+        return tracer.status, jnp.stack([none - 1, none, none, none],
+                                        axis=1)
+    zero = jnp.zeros(B, jnp.int64)
+    site, addr, devp, aux = zero, zero, zero, zero
+    for k, f, a, d, x in tracer.pending:
+        fi = f.astype(jnp.int64)
+        site = site + fi * (k + 1)
+        addr = addr + fi * a
+        if d is not None:
+            devp = devp + fi * d
+        if x is not None:
+            aux = aux + fi * x
+    site = site - 1
+    pc_t, op_t, dev_t, chain_t = (jnp.asarray(np.asarray(col, np.int64))
+                                  for col in zip(*tracer.sites))
+    sidx = jnp.maximum(site, 0)
+    pcs, opv, devc = pc_t[sidx], op_t[sidx], dev_t[sidx]
+    chain = chain_t[sidx] != 0
+    f_pc = jnp.where(chain, pcs + aux, pcs)
+    f_op = jnp.where(chain,
+                     jnp.where(aux == 3, int(Op.MEMCPY),
+                               int(Op.LOAD)), opv)
+    f_dev = jnp.where(devc == _DEV_LATCHED, devp,
+                      jnp.where(devc == _DEV_HOME, tracer.homes, devc))
+    faulted = site >= 0
+    status = jnp.where(faulted, isa.STATUS_PROT_FAULT, tracer.status)
+    fault = jnp.stack([jnp.where(faulted, f_pc, -1),
+                       jnp.where(faulted, f_op, 0), addr,
+                       jnp.where(faulted, f_dev, 0)], axis=1)
+    return status, fault
+
+
 def build_compiled(op: VerifiedOperator, regions: RegionTable,
                    n_devices: int, batch: int, *, impl: str = "xla",
                    superops: bool = True, double_buffer: bool = False,
+                   protect: bool = True, check_failed: bool = True,
                    unroll_limit: int = DEFAULT_UNROLL_LIMIT):
     """Trace-compile a verified operator; returns a jit-compiled
     ``f(mem, params, homes, failed) -> vm.VMResult`` with batched fields
@@ -741,6 +942,11 @@ def build_compiled(op: VerifiedOperator, regions: RegionTable,
     k's scatter — the compiled analogue of the operator's async Memcpy
     pipelining).  Bit-identical results; takes precedence over the
     kernel row-gather route for the chain.
+
+    ``check_failed=False`` statically elides every failed-device check
+    (the ``failed`` argument is accepted and ignored) — the variant the
+    invoke path builds for the fault-free hot path, where no device is
+    down and the per-op mask gather would be pure overhead.
     """
     reason = why_not_compilable(op, unroll_limit)
     if reason is not None:
@@ -765,13 +971,15 @@ def build_compiled(op: VerifiedOperator, regions: RegionTable,
             instrs=instrs, loops=loops, base=base, mask=mask, n_dev=n_dev,
             pool_words=int(pool_words), batch=B, homes=homes, failed=failed,
             mem_flat=mem.reshape(-1), regs=regs, impl=impl,
-            superops=superops, double_buffer=double_buffer)
+            superops=superops, double_buffer=double_buffer, protect=protect,
+            check_failed=check_failed)
         esc = tracer.emit_segment(0, n_instr, jnp.ones(B, bool))
         assert not esc, "verifier admitted a jump past the program end"
+        status, fault = _finalize_fault(tracer)
         return _vm.VMResult(
             mem=tracer.memf.reshape(n_dev, pool_words),
-            ret=tracer.ret, status=tracer.status, steps=tracer.steps,
-            regs=jnp.stack(tracer.regs, axis=1))
+            ret=tracer.ret, status=status, steps=tracer.steps,
+            regs=jnp.stack(tracer.regs, axis=1), fault=fault)
 
     return jax.jit(run)
 
@@ -781,23 +989,29 @@ _COMPILED_CACHE: Dict = {}
 
 def compiled_cached(op: VerifiedOperator, regions: RegionTable,
                     n_dev: int, batch: int, impl: str = "xla",
-                    superops: bool = True,
-                    double_buffer: bool = False) -> bool:
+                    superops: bool = True, double_buffer: bool = False,
+                    protect: bool = True,
+                    failed: Optional[Set[int]] = None) -> bool:
     """True iff the compiled trace for this (op, batch) is already
-    built (see :func:`vm.engine_cached`)."""
+    built (see :func:`vm.engine_cached`).  ``failed`` mirrors the invoke
+    argument: the fault-free hot path (``failed=None``) and the
+    degraded-mode path compile to different variants."""
     return _vm.engine_key(op, regions, n_dev, batch, impl, superops,
-                          double_buffer) in _COMPILED_CACHE
+                          double_buffer, bool(protect),
+                          failed is not None) in _COMPILED_CACHE
 
 
 def _cached_compiled(op: VerifiedOperator, regions: RegionTable, n_dev: int,
                      batch: int, impl: str, superops: bool,
-                     double_buffer: bool = False):
+                     double_buffer: bool = False, protect: bool = True,
+                     check_failed: bool = True):
     key = _vm.engine_key(op, regions, n_dev, batch, impl, superops,
-                         double_buffer)
+                         double_buffer, bool(protect), bool(check_failed))
     fn = _COMPILED_CACHE.get(key)
     if fn is None:
         fn = build_compiled(op, regions, n_dev, batch, impl=impl,
-                            superops=superops, double_buffer=double_buffer)
+                            superops=superops, double_buffer=double_buffer,
+                            protect=protect, check_failed=check_failed)
         _COMPILED_CACHE[key] = fn
     return fn
 
@@ -807,10 +1021,14 @@ def invoke_compiled(op: VerifiedOperator, regions: RegionTable,
                     *, homes: Union[int, Sequence[int]] = 0,
                     failed: Optional[Set[int]] = None, impl: str = "xla",
                     superops: bool = True, double_buffer: bool = False,
+                    protect: bool = True,
                     block: bool = True) -> "_vm.BatchedInvokeResult":
     """Numpy-in/numpy-out batched execution on the compiled fast path
-    (same contract as :func:`vm.invoke_batched`)."""
+    (same contract as :func:`vm.invoke_batched`).  ``failed=None``
+    selects the variant with every failed-device check statically
+    elided — the fault-free hot path pays nothing for the fencing."""
     p, h = _vm._marshal_batch(params, homes)
     fn = _cached_compiled(op, regions, int(mem.shape[0]), p.shape[0],
-                          impl, superops, double_buffer)
+                          impl, superops, double_buffer, protect,
+                          check_failed=failed is not None)
     return _vm.run_batched_fn(fn, mem, p, h, failed, block=block)

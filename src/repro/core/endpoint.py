@@ -59,7 +59,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core import isa, memory, pyvm, vm
+from repro.core import faults, isa, memory, pyvm, vm
 from repro.core import registry as _registry
 from repro.core.costmodel import DispatchCostModel
 from repro.core.memory import Grant, RegionTable, RegionView
@@ -92,10 +92,19 @@ class CompletionEvent:
     steps: int
     wave: int             # doorbell wave id the post retired with
     retired_at: float     # time.monotonic() at retirement
+    fault: Optional[isa.FaultInfo] = None   # set iff STATUS_PROT_FAULT
 
     @property
     def ok(self) -> bool:
         return self.status == isa.STATUS_OK
+
+    @property
+    def faulted(self) -> bool:
+        return self.status == isa.STATUS_PROT_FAULT
+
+    @property
+    def flushed(self) -> bool:
+        return self.status == isa.STATUS_FLUSHED
 
 
 @dataclasses.dataclass(eq=False)
@@ -129,10 +138,19 @@ class Completion:
     wave_handle: Optional["WaveHandle"] = dataclasses.field(
         default=None, repr=False)
     event: Optional[CompletionEvent] = None
+    fault: Optional[isa.FaultInfo] = None   # set iff STATUS_PROT_FAULT
 
     @property
     def ok(self) -> bool:
         return self.done and self.status == isa.STATUS_OK
+
+    @property
+    def faulted(self) -> bool:
+        return self.done and self.status == isa.STATUS_PROT_FAULT
+
+    @property
+    def flushed(self) -> bool:
+        return self.done and self.status == isa.STATUS_FLUSHED
 
     @property
     def in_flight(self) -> bool:
@@ -171,15 +189,20 @@ class Completion:
             else:
                 self.session.endpoint.doorbell()
         # result() is a consuming read: drop this CQE from the session's
-        # completion queue so a later poll_cq() doesn't deliver it twice
-        try:
-            self.session._cq.remove(self)
-        except ValueError:
-            pass
+        # completion queue so a later poll_cq() doesn't deliver it twice.
+        # Membership is identity (eq=False), so an already-polled handle
+        # is simply absent — no exception to swallow, and engine errors
+        # from the retire path above propagate untouched.
+        cq = self.session._cq
+        for i, c in enumerate(cq):
+            if c is self:
+                del cq[i]
+                break
         if check and self.status != isa.STATUS_OK:
+            detail = f" [{self.fault.describe()}]" if self.fault else ""
             raise EndpointError(
                 f"op {self.op_name!r} (seq {self.seq}) completed with "
-                f"status {self.status} (ret {self.ret}); use "
+                f"status {self.status} (ret {self.ret}){detail}; use "
                 f"result(check=False) or .ret/.status for expected "
                 f"failures")
         return self.ret
@@ -238,6 +261,30 @@ class Session:
         self._ops: Dict[str, int] = {}
         self._sq: List[Completion] = []      # posted, not yet drained
         self._cq: List[Completion] = []      # retired, not yet polled
+        self._error: Optional[isa.FaultInfo] = None   # QP error state
+
+    # -- error state (RNIC QP semantics) ---------------------------------
+
+    @property
+    def in_error(self) -> bool:
+        """True once a post of this session took a runtime protection
+        fault.  While in error, new posts (and posts still sitting in
+        the send queue at retirement time) retire immediately with
+        ``STATUS_FLUSHED`` and never execute — the RNIC QP error state.
+        Posts that were already *launched* in a wave are concurrent with
+        the faulting one and retire with their real results."""
+        return self._error is not None
+
+    @property
+    def error(self) -> Optional[isa.FaultInfo]:
+        """The fault that errored this session (None when healthy)."""
+        return self._error
+
+    def reset(self) -> "Session":
+        """Clear the error state (the QP reset->init transition); posts
+        flow again.  Flushed CQEs already delivered stay delivered."""
+        self._error = None
+        return self
 
     # -- control path ---------------------------------------------------
 
@@ -299,6 +346,10 @@ class Session:
         c = Completion(session=self, seq=self.endpoint._next_seq(),
                        op_id=op_id, op_name=name,
                        params=tuple(int(p) for p in params), home=int(home))
+        if self._error is not None:
+            # QP in error: the post is flushed, never enqueued/executed
+            self.endpoint._flush_completion(c)
+            return c
         self._sq.append(c)
         self.endpoint._posted(c)
         return c
@@ -349,6 +400,7 @@ class TiaraEndpoint:
                  flush_watermark: Optional[int] = None,
                  max_steps: Optional[int] = None,
                  cost_model: Optional[DispatchCostModel] = None,
+                 retry_limit: int = 3, retry_backoff_s: float = 0.001,
                  sep: str = "/"):
         self.regions = RegionTable(pool_words)
         self.registry = OperatorRegistry(self.regions, n_devices=n_devices,
@@ -357,12 +409,20 @@ class TiaraEndpoint:
         self.n_devices = int(n_devices)
         self.mem = memory.make_pool(n_devices, self.regions)
         self.flush_watermark = flush_watermark
+        self.retry_limit = int(retry_limit)       # transient-launch retries
+        self.retry_backoff_s = float(retry_backoff_s)
         self.sep = sep
         self._sessions: Dict[str, Session] = {}
         self._seq = 0
         self._outstanding = 0
         self._inflight: List[WaveHandle] = []
         self._wave_seq = 0
+        # fault-injection state (see core/faults.py); failed_devices is
+        # also the live health set threaded into every engine dispatch
+        self.failed_devices: set = set()
+        self._pending_corrupt: List[Tuple[int, int, int]] = []
+        self._transient_left = 0
+        self._poison_left = 0
 
     @classmethod
     def for_tenants(cls, named: Sequence[Tuple[str, RegionTable]], *,
@@ -440,6 +500,48 @@ class TiaraEndpoint:
     def sessions(self) -> Dict[str, Session]:
         return dict(self._sessions)
 
+    # -- fault injection (see core/faults.py) -----------------------------
+
+    def inject(self, plan: "faults.FaultPlan") -> None:
+        """Apply a :class:`~repro.core.faults.FaultPlan`: device
+        failures take effect on the next dispatch, corruptions before
+        the next wave, transient/poison counters accumulate."""
+        self.failed_devices |= set(plan.fail_devices)
+        for d, w, _ in plan.corrupt:
+            if not (0 <= d < self.n_devices
+                    and 0 <= w < self.regions.pool_words):
+                raise EndpointError(
+                    f"corruption target (dev {d}, word {w}) outside the "
+                    f"{self.n_devices}x{self.regions.pool_words} pool")
+        self._pending_corrupt.extend(plan.corrupt)
+        self._transient_left += plan.transient_launch_failures
+        self._poison_left += plan.poison_materialize
+
+    def revive(self, *devices: int) -> None:
+        """Bring failed devices back (all of them with no argument)."""
+        if devices:
+            self.failed_devices -= set(int(d) for d in devices)
+        else:
+            self.failed_devices.clear()
+
+    def clear_faults(self) -> None:
+        """Drop every pending injection, including device failures."""
+        self.failed_devices.clear()
+        self._pending_corrupt.clear()
+        self._transient_left = 0
+        self._poison_left = 0
+
+    def _flush_completion(self, c: Completion) -> None:
+        """Retire a post immediately with ``STATUS_FLUSHED`` (no
+        execution): the flushed-WQE path of a session in error."""
+        c.ret, c.status, c.steps = 0, isa.STATUS_FLUSHED, 0
+        c.regs = np.zeros(isa.NUM_REGS, dtype=np.int64)
+        c.event = CompletionEvent(
+            seq=c.seq, op_name=c.op_name, ret=0, status=isa.STATUS_FLUSHED,
+            steps=0, wave=-1, retired_at=time.monotonic())
+        c.done = True
+        c.session._cq.append(c)
+
     # -- doorbell (the data path) ----------------------------------------
 
     def _next_seq(self) -> int:
@@ -514,6 +616,13 @@ class TiaraEndpoint:
             raise EndpointError(
                 f"placement {placement!r} needs a wave mode ('auto' or "
                 f"'mixed'); got mode {mode!r}")
+        if self._pending_corrupt:
+            # injected pre-wave corruption (stale translations, torn
+            # pointers) lands in the pool before any request sees it
+            mem = self.host_mem()
+            for d, w, v in self._pending_corrupt:
+                mem[d, w] = v
+            self._pending_corrupt = []
         wave: List[Completion] = []
         for s in self._sessions.values():
             wave.extend(s._sq)
@@ -533,40 +642,65 @@ class TiaraEndpoint:
         homes = [c.home for c in wave]
         reg = self.registry
         block = wait  # split-phase doorbells defer result retirement
-        try:
-            if mode in _WAVE_MODES:
-                res = reg._invoke_mixed(ids, self.mem, params, homes=homes,
-                                        mode=mode,
-                                        contention_rate=contention_rate,
-                                        placement=placement, block=block)
-            elif mode in _SINGLE_OP_MODES:
-                if len(set(ids)) != 1:
-                    raise EndpointError(
-                        f"mode {mode!r} needs a single-op wave; got op_ids "
-                        f"{sorted(set(ids))}")
-                res = reg._invoke_batched(ids[0], self.mem, params,
-                                          homes=homes, mode=mode,
-                                          block=block)
-            else:  # "interp"
-                if len(wave) != 1:
-                    raise EndpointError(
-                        f"mode 'interp' needs a single-request wave; got "
-                        f"{len(wave)} posts")
-                r = reg._invoke(ids[0], self.mem, params[0], home=homes[0],
-                                mode="interp")
-                res = vm.BatchedInvokeResult(
-                    mem=r.mem, ret=np.asarray([r.ret], dtype=np.int64),
-                    status=np.asarray([r.status], dtype=np.int64),
-                    steps=np.asarray([r.steps], dtype=np.int64),
-                    regs=np.asarray(r.regs, dtype=np.int64)[None, :])
-        except BaseException:
-            # a failed doorbell must not drop the send queues: re-post
-            # the wave untouched (it is seq-sorted, and nothing can have
-            # posted concurrently), so the caller can ring again
-            for c in wave:
-                c.session._sq.append(c)
-            self._outstanding = len(wave)
-            raise
+        failed = set(self.failed_devices) or None
+        attempt = 0
+        while True:
+            try:
+                if self._transient_left > 0:
+                    self._transient_left -= 1
+                    raise faults.TransientError(
+                        "injected transient launch failure")
+                if mode in _WAVE_MODES:
+                    res = reg._invoke_mixed(ids, self.mem, params,
+                                            homes=homes, mode=mode,
+                                            contention_rate=contention_rate,
+                                            failed=failed,
+                                            placement=placement, block=block)
+                elif mode in _SINGLE_OP_MODES:
+                    if len(set(ids)) != 1:
+                        raise EndpointError(
+                            f"mode {mode!r} needs a single-op wave; got "
+                            f"op_ids {sorted(set(ids))}")
+                    res = reg._invoke_batched(ids[0], self.mem, params,
+                                              homes=homes, mode=mode,
+                                              failed=failed, block=block)
+                else:  # "interp"
+                    if len(wave) != 1:
+                        raise EndpointError(
+                            f"mode 'interp' needs a single-request wave; "
+                            f"got {len(wave)} posts")
+                    r = reg._invoke(ids[0], self.mem, params[0],
+                                    home=homes[0], failed=failed,
+                                    mode="interp")
+                    frow = (np.asarray([r.fault.pc, r.fault.opcode,
+                                        r.fault.addr, r.fault.device],
+                                       dtype=np.int64)
+                            if r.fault is not None else vm.NO_FAULT)
+                    res = vm.BatchedInvokeResult(
+                        mem=r.mem, ret=np.asarray([r.ret], dtype=np.int64),
+                        status=np.asarray([r.status], dtype=np.int64),
+                        steps=np.asarray([r.steps], dtype=np.int64),
+                        regs=np.asarray(r.regs, dtype=np.int64)[None, :],
+                        fault=np.asarray(frow, dtype=np.int64)[None, :])
+                break
+            except faults.TransientError:
+                # bounded retry-with-backoff: a lost doorbell is cured by
+                # ringing again, not by dropping the wave
+                attempt += 1
+                if attempt > self.retry_limit:
+                    for c in wave:
+                        c.session._sq.append(c)
+                    self._outstanding = len(wave)
+                    raise
+                time.sleep(self.retry_backoff_s * (1 << (attempt - 1)))
+            except BaseException:
+                # a failed doorbell must not drop the send queues: re-post
+                # the wave untouched (it is seq-sorted, and nothing can
+                # have posted concurrently), so the caller can ring again
+                for c in wave:
+                    c.session._sq.append(c)
+                self._outstanding = len(wave)
+                raise
         self.mem = res.mem
         handle = WaveHandle(self, self._wave_seq, wave, res)
         self._wave_seq += 1
@@ -586,6 +720,13 @@ class TiaraEndpoint:
         their sessions' CQs in global arrival order.  Only
         :meth:`_retire_through` / :meth:`_retire_ready` call this, and
         only in wave order."""
+        if self._poison_left > 0:
+            # injected deferred engine failure: raise BEFORE any CQE is
+            # delivered; _retire_through leaves the wave queued, so the
+            # next wait retries materialization (no lost completions)
+            self._poison_left -= 1
+            raise faults.InjectedEngineError(
+                "injected materialization failure")
         res = vm.materialize_result(handle._res)
         if self.mem is handle._res.mem:
             # the pool still points at this wave's output: keep the
@@ -595,17 +736,33 @@ class TiaraEndpoint:
         # pool snapshot (the per-request fields are copied out below)
         handle._res = None
         now = time.monotonic()
+        errored: List[Session] = []
         for i, c in enumerate(handle.completions):
             c.ret = int(res.ret[i])
             c.status = int(res.status[i])
             c.steps = int(res.steps[i])
             c.regs = np.asarray(res.regs[i])
+            if c.status == isa.STATUS_PROT_FAULT:
+                c.fault = res.fault_at(i)
+                if c.session._error is None:
+                    # RNIC QP semantics: first protection fault moves
+                    # the owning session into the error state
+                    c.session._error = c.fault
+                    errored.append(c.session)
             c.event = CompletionEvent(
                 seq=c.seq, op_name=c.op_name, ret=c.ret, status=c.status,
-                steps=c.steps, wave=handle.wave_id, retired_at=now)
+                steps=c.steps, wave=handle.wave_id, retired_at=now,
+                fault=c.fault)
             c.done = True
             c.session._cq.append(c)
         handle.done = True
+        # flush the errored sessions' not-yet-launched posts: they were
+        # posted after the faulting wave launched and must not execute
+        for s in errored:
+            flushed, s._sq = s._sq, []
+            self._outstanding -= len(flushed)
+            for c in flushed:
+                self._flush_completion(c)
 
     def _retire_through(self, handle: WaveHandle) -> None:
         """Retire every in-flight wave up to and including ``handle``

@@ -1,0 +1,106 @@
+"""Fault-injection harness — chaos plans for the endpoint and simulator.
+
+Real RNIC stacks are validated by injecting faults at every layer —
+cable pulls, CQE errors, doorbell losses — and checking that the
+*semantics* (QP error states, flushed WQEs, containment) hold.  This
+module is that harness for the software Tiara stack: a
+:class:`FaultPlan` is a declarative, composable bundle of injections
+that :meth:`~repro.core.endpoint.TiaraEndpoint.inject` applies to the
+live endpoint:
+
+  * ``fail_devices``    mark pool devices failed.  Word ops targeting a
+                        failed device take a runtime protection fault
+                        (``STATUS_PROT_FAULT``); a Memcpy touching one
+                        sets the error register and drops the copy — the
+                        paper's §3.2 degraded mode.
+  * ``corrupt``         overwrite pool words *before the next wave*
+                        (device, word, value) — stale block-table
+                        entries, torn pointers: the wild-address seeds
+                        the runtime protection checks exist to catch.
+  * ``transient_launch_failures``
+                        the next N doorbell launches raise
+                        :class:`TransientError` before dispatch — a
+                        lost doorbell / launch-queue hiccup.  The
+                        endpoint's bounded retry-with-backoff absorbs up
+                        to its ``retry_limit``.
+  * ``poison_materialize``
+                        the next N deferred-wave materializations raise
+                        :class:`InjectedEngineError` — a split-phase
+                        launch that dies *after* issue.  Retirement must
+                        leave the wave queued so a later wait retries it
+                        (no lost CQEs, no double delivery).
+
+Plans compose with ``+`` so a chaos test can pile independent failures
+into one injection.  The plan itself is immutable; the endpoint copies
+its counters/lists at injection time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import FrozenSet, Iterable, Tuple
+
+
+class TransientError(Exception):
+    """A launch-time failure that a retry may cure (lost doorbell)."""
+
+
+class InjectedEngineError(Exception):
+    """A deferred engine failure injected at materialization time."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """One composable bundle of fault injections (see module docstring).
+
+    ``corrupt`` entries are ``(device, word_index, value)`` triples
+    applied to the raw pool (absolute word index, not region-relative)
+    immediately before the next wave dispatches.
+    """
+
+    fail_devices: FrozenSet[int] = frozenset()
+    corrupt: Tuple[Tuple[int, int, int], ...] = ()
+    transient_launch_failures: int = 0
+    poison_materialize: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "fail_devices",
+                           frozenset(int(d) for d in self.fail_devices))
+        object.__setattr__(
+            self, "corrupt",
+            tuple((int(d), int(w), int(v)) for d, w, v in self.corrupt))
+        if self.transient_launch_failures < 0 or self.poison_materialize < 0:
+            raise ValueError("fault counters must be non-negative")
+
+    def __add__(self, other: "FaultPlan") -> "FaultPlan":
+        if not isinstance(other, FaultPlan):
+            return NotImplemented
+        return FaultPlan(
+            fail_devices=self.fail_devices | other.fail_devices,
+            corrupt=self.corrupt + other.corrupt,
+            transient_launch_failures=(self.transient_launch_failures
+                                       + other.transient_launch_failures),
+            poison_materialize=(self.poison_materialize
+                                + other.poison_materialize))
+
+    @property
+    def empty(self) -> bool:
+        return (not self.fail_devices and not self.corrupt
+                and self.transient_launch_failures == 0
+                and self.poison_materialize == 0)
+
+
+def fail_devices(*devices: int) -> FaultPlan:
+    return FaultPlan(fail_devices=frozenset(devices))
+
+
+def corrupt_words(entries: Iterable[Tuple[int, int, int]]) -> FaultPlan:
+    return FaultPlan(corrupt=tuple(entries))
+
+
+def drop_doorbells(n: int) -> FaultPlan:
+    return FaultPlan(transient_launch_failures=n)
+
+
+def poison_materialize(n: int = 1) -> FaultPlan:
+    return FaultPlan(poison_materialize=n)

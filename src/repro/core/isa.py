@@ -112,8 +112,36 @@ DEV_LOCAL = -1
 
 STATUS_OK = 0
 STATUS_FAIL = 1          # conventional app-level failure (e.g. lock busy)
+STATUS_FLUSHED = 124     # post flushed from an errored session's SQ (no run)
+STATUS_PROT_FAULT = 125  # runtime protection fault: data-dependent access
+                         # outside the grant/pool (lane halted, writes masked)
 STATUS_FELL_OFF = 126    # pc ran past the end without RET (verifier rejects)
 STATUS_FUEL = 127        # exceeded the static step bound (must be unreachable)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultInfo:
+    """Where a runtime protection fault hit — the CQE error payload.
+
+    ``addr`` is the *offending* value exactly as the lane computed it
+    (the raw word offset for an out-of-bounds access, before region
+    masking), and ``device`` the raw device operand (before the
+    ``% n_devices`` router) — so a wild pointer is reported as the wild
+    value, not as the clamped location it would have silently hit.
+    """
+
+    pc: int
+    opcode: int
+    addr: int
+    device: int
+
+    def describe(self) -> str:
+        try:
+            name = Op(self.opcode).name
+        except ValueError:
+            name = f"op{self.opcode}"
+        return (f"protection fault at pc {self.pc} ({name}): "
+                f"offset {self.addr}, device {self.device}")
 
 
 @dataclasses.dataclass(frozen=True)

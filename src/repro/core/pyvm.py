@@ -18,6 +18,15 @@ Semantics notes (shared with the JAX VM — keep in lockstep):
     sizes;
   * an async Memcpy touching a failed device sets the error register
     (r15 |= 1) and performs no writes; execution continues (paper §3.2);
+  * with ``protect=True`` (the default) data-dependent accesses are
+    checked at runtime: a word op or memcpy whose offset falls outside
+    its region, whose register-held device operand is neither DEV_LOCAL
+    nor a valid device id, or (word ops only) whose resolved device is
+    in the ``failed`` set, raises a *protection fault* — the lane halts
+    with ``STATUS_PROT_FAULT`` and a :class:`~repro.core.isa.FaultInfo`,
+    the faulting instruction performs no architectural effect, and no
+    further writes leak into the pool (containment).  ``protect=False``
+    restores the paper's mask-and-wrap data path exactly;
   * Wait(threshold) lowers the in-flight counter (copies are functionally
     applied at issue; *timing* of async completion is the simulator's job);
   * a taken forward jump pops loop frames it escapes (break); normal
@@ -101,16 +110,21 @@ class Result:
     regs: List[int]
     mem: np.ndarray
     trace: List[TraceEvent]
+    fault: Optional[isa.FaultInfo] = None
 
     @property
     def ok(self) -> bool:
         return self.status == isa.STATUS_OK
 
+    @property
+    def faulted(self) -> bool:
+        return self.status == isa.STATUS_PROT_FAULT
+
 
 def run(op: VerifiedOperator, regions: RegionTable, mem: np.ndarray,
         params: Sequence[int] = (), *, home: int = 0,
         failed: Optional[Set[int]] = None, record_trace: bool = False,
-        fuel: Optional[int] = None) -> Result:
+        fuel: Optional[int] = None, protect: bool = True) -> Result:
     """Execute a verified operator against ``mem`` (modified in place)."""
     code = op.code
     base, mask, _ = regions.as_arrays()
@@ -130,6 +144,7 @@ def run(op: VerifiedOperator, regions: RegionTable, mem: np.ndarray,
     halted = False
     ret_val = 0
     status = isa.STATUS_FELL_OFF
+    fault: Optional[isa.FaultInfo] = None
     trace: List[TraceEvent] = []
 
     def dev_of(field: int, via_reg: bool) -> int:
@@ -140,6 +155,37 @@ def run(op: VerifiedOperator, regions: RegionTable, mem: np.ndarray,
 
     def phys(rid: int, off: int) -> int:
         return int(base[rid]) + (wrap64(off) & int(mask[rid]))
+
+    def dev_raw(field: int, via_reg: bool) -> int:
+        return regs[field] if via_reg else field
+
+    def dev_invalid(field: int, via_reg: bool) -> bool:
+        """A register-held device operand must be DEV_LOCAL or a real
+        device id; static fields stay verifier-territory (they wrap)."""
+        if not via_reg:
+            return False
+        d = regs[field]
+        return d != DEV_LOCAL and not (0 <= d < n_dev)
+
+    def off_oob(rid: int, off: int) -> bool:
+        """In-bounds iff masking is the identity: 0 <= off < size."""
+        off = wrap64(off)
+        return off != (off & int(mask[rid]))
+
+    def word_fault(rid: int, off: int, field: int,
+                   via_reg: bool) -> Optional[isa.FaultInfo]:
+        """PROT_FAULT check shared by LOAD/STORE/CAS/CAA: wild device
+        register, out-of-region offset, or a failed blade."""
+        if not protect:
+            return None
+        if dev_invalid(field, via_reg):
+            return isa.FaultInfo(pc=pc, opcode=int(o), addr=wrap64(off),
+                                 device=regs[field])
+        dev = dev_of(field, via_reg)
+        if off_oob(rid, off) or dev in failed:
+            return isa.FaultInfo(pc=pc, opcode=int(o), addr=wrap64(off),
+                                 device=dev)
+        return None
 
     n = code.shape[0]
     while not halted and pc < n and steps < fuel:
@@ -153,6 +199,7 @@ def run(op: VerifiedOperator, regions: RegionTable, mem: np.ndarray,
         steps += 1
         jumped = False
         skipped_to: Optional[int] = None
+        flt: Optional[isa.FaultInfo] = None
         ev = TraceEvent(pc=pc, op=o) if record_trace else None
 
         if o == Op.NOP:
@@ -163,18 +210,22 @@ def run(op: VerifiedOperator, regions: RegionTable, mem: np.ndarray,
             rhs = imm if (flags & FLAG_IMMB) else regs[b]
             regs[dst] = _alu(d, regs[a], rhs)
         elif o == Op.LOAD:
-            dev = dev_of(e, bool(flags & FLAG_DEV_REG))
-            regs[dst] = int(mem[dev, phys(a, regs[b] + imm)])
-            if ev:
-                ev.remote = dev != home
+            flt = word_fault(a, regs[b] + imm, e, bool(flags & FLAG_DEV_REG))
+            if flt is None:
+                dev = dev_of(e, bool(flags & FLAG_DEV_REG))
+                regs[dst] = int(mem[dev, phys(a, regs[b] + imm)])
+                if ev:
+                    ev.remote = dev != home
         elif o == Op.STORE:
-            dev = dev_of(e, bool(flags & FLAG_DEV_REG))
-            mem[dev, phys(a, regs[b] + imm)] = np.int64(regs[dst])
-            if ev:
-                ev.remote = dev != home
+            flt = word_fault(a, regs[b] + imm, e, bool(flags & FLAG_DEV_REG))
+            if flt is None:
+                dev = dev_of(e, bool(flags & FLAG_DEV_REG))
+                mem[dev, phys(a, regs[b] + imm)] = np.int64(regs[dst])
+                if ev:
+                    ev.remote = dev != home
         elif o == Op.MEMCPY:
-            ddev = dev_of(dst, bool(flags & FLAG_DSTDEV_REG))
-            sdev = dev_of(c, bool(flags & FLAG_SRCDEV_REG))
+            via_d = bool(flags & FLAG_DSTDEV_REG)
+            via_s = bool(flags & FLAG_SRCDEV_REG)
             if flags & FLAG_LEN_REG:
                 ln = min(max(regs[imm2], 0), imm)
             else:
@@ -182,33 +233,54 @@ def run(op: VerifiedOperator, regions: RegionTable, mem: np.ndarray,
             ln = min(ln, isa.MAX_MEMCPY_WORDS,
                      int(mask[a]) + 1, int(mask[d]) + 1)
             is_async = bool(flags & FLAG_ASYNC)
-            fail = (ddev in failed) or (sdev in failed)
-            if fail:
-                regs[isa.ERR_REG] = wrap64(regs[isa.ERR_REG] | 1)
-            else:
-                doff, soff = regs[b], regs[e]
-                window = [int(mem[sdev, phys(d, soff + i)]) for i in range(ln)]
-                for i in range(ln):
-                    mem[ddev, phys(a, doff + i)] = np.int64(window[i])
-            if is_async:
-                inflight = min(inflight + 1, isa.MAX_INFLIGHT)
-            if ev:
-                ev.is_async = is_async
-                ev.n_words = ln
-                ev.src_remote = sdev != home
-                ev.dst_remote = ddev != home
-                ev.remote = ev.src_remote or ev.dst_remote
-                ev.dst_dev = ddev
+            doff, soff = wrap64(regs[b]), wrap64(regs[e])
+            if protect and ln > 0:
+                # check order is part of the semantics (engines mirror
+                # it): dst device, src device, dst window, src window
+                if dev_invalid(dst, via_d):
+                    flt = isa.FaultInfo(pc=pc, opcode=int(o), addr=doff,
+                                        device=regs[dst])
+                elif dev_invalid(c, via_s):
+                    flt = isa.FaultInfo(pc=pc, opcode=int(o), addr=soff,
+                                        device=regs[c])
+                elif off_oob(a, doff) or doff + ln > int(mask[a]) + 1:
+                    flt = isa.FaultInfo(pc=pc, opcode=int(o), addr=doff,
+                                        device=dev_of(dst, via_d))
+                elif off_oob(d, soff) or soff + ln > int(mask[d]) + 1:
+                    flt = isa.FaultInfo(pc=pc, opcode=int(o), addr=soff,
+                                        device=dev_of(c, via_s))
+            if flt is None:
+                ddev = dev_of(dst, via_d)
+                sdev = dev_of(c, via_s)
+                fail = (ddev in failed) or (sdev in failed)
+                if fail:
+                    regs[isa.ERR_REG] = wrap64(regs[isa.ERR_REG] | 1)
+                else:
+                    window = [int(mem[sdev, phys(d, soff + i)])
+                              for i in range(ln)]
+                    for i in range(ln):
+                        mem[ddev, phys(a, doff + i)] = np.int64(window[i])
+                if is_async:
+                    inflight = min(inflight + 1, isa.MAX_INFLIGHT)
+                if ev:
+                    ev.is_async = is_async
+                    ev.n_words = ln
+                    ev.src_remote = sdev != home
+                    ev.dst_remote = ddev != home
+                    ev.remote = ev.src_remote or ev.dst_remote
+                    ev.dst_dev = ddev
         elif o in (Op.CAS, Op.CAA):
-            dev = dev_of(e, bool(flags & FLAG_DEV_REG))
-            addr = phys(a, regs[b] + imm)
-            old = int(mem[dev, addr])
-            if old == regs[c]:
-                new = regs[d] if o == Op.CAS else wrap64(old + regs[d])
-                mem[dev, addr] = np.int64(new)
-            regs[dst] = old
-            if ev:
-                ev.remote = dev != home
+            flt = word_fault(a, regs[b] + imm, e, bool(flags & FLAG_DEV_REG))
+            if flt is None:
+                dev = dev_of(e, bool(flags & FLAG_DEV_REG))
+                addr = phys(a, regs[b] + imm)
+                old = int(mem[dev, addr])
+                if old == regs[c]:
+                    new = regs[d] if o == Op.CAS else wrap64(old + regs[d])
+                    mem[dev, addr] = np.int64(new)
+                regs[dst] = old
+                if ev:
+                    ev.remote = dev != home
         elif o == Op.JUMP:
             cond = int(d)
             if cond == Alu.ALWAYS:
@@ -241,6 +313,13 @@ def run(op: VerifiedOperator, regions: RegionTable, mem: np.ndarray,
         else:
             raise ValueError(f"pc {pc}: bad opcode {o}")
 
+        if flt is not None:
+            # protection fault: the lane halts with zero architectural
+            # effect from the faulting instruction (containment) — the
+            # step itself is counted (the MP fetched and killed it)
+            halted = True
+            status = isa.STATUS_PROT_FAULT
+            fault = flt
         if record_trace:
             trace.append(ev)
         if halted:
@@ -259,4 +338,4 @@ def run(op: VerifiedOperator, regions: RegionTable, mem: np.ndarray,
     if not halted and steps >= fuel:
         status = isa.STATUS_FUEL
     return Result(ret=ret_val, status=status, steps=steps, regs=regs,
-                  mem=mem, trace=trace)
+                  mem=mem, trace=trace, fault=fault)

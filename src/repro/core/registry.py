@@ -227,7 +227,8 @@ class OperatorRegistry:
         r = slot.compiled(mem, [list(params)], homes=home, failed=failed)
         return vm.InvokeResult(mem=r.mem, ret=int(r.ret[0]),
                                status=int(r.status[0]),
-                               steps=int(r.steps[0]), regs=r.regs[0])
+                               steps=int(r.steps[0]), regs=r.regs[0],
+                               fault=r.fault_at(0))
 
     def _invoke_batched(self, op_id: int, mem: np.ndarray,
                         params: Sequence[Sequence[int]], *,
@@ -440,8 +441,12 @@ class OperatorRegistry:
                 batch_per_device=plan.batch_per_device,
                 # a pool can model more homes than the process exposes
                 # devices; "auto" must degrade to "single" there, not
-                # pick a placement whose mesh cannot build
-                sharded_feasible=jaxcompat.device_count() >= n_dev,
+                # pick a placement whose mesh cannot build.  Likewise a
+                # mesh with a failed member: the single-chip engines
+                # model failed devices exactly, the mesh would compute
+                # through the dead chip
+                sharded_feasible=(jaxcompat.device_count() >= n_dev
+                                  and not failed),
                 mixed_cached=vm.mixed_engine_cached(
                     self.store_ops(), self.regions, n_dev, int(ids.size)),
                 sharded_cached=vm.sharded_engine_cached(
@@ -490,6 +495,7 @@ class OperatorRegistry:
         status = np.zeros(B, dtype=np.int64)
         steps = np.zeros(B, dtype=np.int64)
         regs = np.zeros((B, isa.NUM_REGS), dtype=np.int64)
+        fault = np.tile(vm.NO_FAULT, (B, 1))
         mem_cur = mem
         # the deferred path scatters on device: int64 conversions there
         # need 64-bit mode, same as the engine launches themselves
@@ -497,6 +503,7 @@ class OperatorRegistry:
             if not block:
                 ret, status = jnp.asarray(ret), jnp.asarray(status)
                 steps, regs = jnp.asarray(steps), jnp.asarray(regs)
+                fault = jnp.asarray(fault)
             for op_id, idx in groups:
                 idx = np.asarray(idx)
                 r = self._invoke_batched(
@@ -508,13 +515,15 @@ class OperatorRegistry:
                 if block:
                     ret[idx], status[idx] = r.ret, r.status
                     steps[idx], regs[idx] = r.steps, r.regs
+                    fault[idx] = r.fault
                 else:
                     ret = ret.at[idx].set(r.ret)
                     status = status.at[idx].set(r.status)
                     steps = steps.at[idx].set(r.steps)
                     regs = regs.at[idx].set(r.regs)
+                    fault = fault.at[idx].set(r.fault)
         return vm.BatchedInvokeResult(mem=mem_cur, ret=ret, status=status,
-                                      steps=steps, regs=regs)
+                                      steps=steps, regs=regs, fault=fault)
 
     def dump(self) -> str:
         lines = []

@@ -73,13 +73,15 @@ class TaskSim:
     async_issued: int = 0      # split-phase Memcpys issued
     wait_stall_cycles: float = 0.0   # cycles the MP blocked in WAIT /
     #                                # the implicit pre-reply join
+    failed_transfers: int = 0  # injected mid-flight Memcpy aborts
 
 
 def simulate_task(vop: VerifiedOperator, trace: Sequence[TraceEvent],
                   hw: HW = DEFAULT_HW, *, pipelined: bool = False,
                   serial_chain: bool = True,
                   reply_payload_bytes: int = 0,
-                  serialize_async: bool = False) -> TaskSim:
+                  serialize_async: bool = False,
+                  fail_memcpy_at: Sequence[int] = ()) -> TaskSim:
     """Charge cycle costs along one executed trace.
 
     ``reply_payload_bytes``: data returned to the caller beyond the status
@@ -88,6 +90,15 @@ def simulate_task(vop: VerifiedOperator, trace: Sequence[TraceEvent],
     ``serialize_async=True`` treats every async Memcpy as synchronous —
     the no-overlap timeline a split-phase operator is compared against
     (``bench_async_overlap`` reports the ratio).
+
+    ``fail_memcpy_at``: fault-injection hook — the i-th Memcpy (0-based
+    issue index, sync or async) aborts halfway through its transfer: it
+    occupies its port for half the full occupancy, delivers half the
+    payload, and retires (with an error CQE on real hardware) at the
+    abort time.  ``TaskSim.failed_transfers`` counts them; WAIT still
+    joins an aborted async copy at its abort time, so the timing of the
+    paper's degraded-mode fallback path (test ERR_REG, re-issue) can be
+    simulated against the same trace.
     """
     clk = hw.clk_ns
     dma_lat = hw.pcie_dma_cycles
@@ -115,6 +126,9 @@ def simulate_task(vop: VerifiedOperator, trace: Sequence[TraceEvent],
     # pipelined gather line-rate-bound rather than latency-bound
     chan_free = 0.0
     wire_free = 0.0
+    fail_at = set(int(i) for i in fail_memcpy_at)
+    memcpy_idx = 0
+    failed_transfers = 0
 
     for ev in trace:
         mp_cycles += 1
@@ -135,6 +149,13 @@ def simulate_task(vop: VerifiedOperator, trace: Sequence[TraceEvent],
                     seen_pcs.add(ev.pc)
         elif ev.op == Op.MEMCPY:
             nbytes = ev.n_words * isa.WORD_BYTES
+            if memcpy_idx in fail_at:
+                # mid-flight abort: half the payload crossed before the
+                # port errored; the completion (a NAK) still pays the
+                # latency leg below
+                nbytes //= 2
+                failed_transfers += 1
+            memcpy_idx += 1
             if ev.remote:
                 # one side is usually the local pool: the stream crosses
                 # PCIe *and* the wire (cut-through at the slower rate)
@@ -190,7 +211,8 @@ def simulate_task(vop: VerifiedOperator, trace: Sequence[TraceEvent],
                    mp_cycles=mp_cycles, dma_channel_cycles=int(chan),
                    dma_small_reqs=small, dma_bulk_bytes=bulk_bytes,
                    wire_bytes=wire_bytes, n_instr_executed=len(trace),
-                   async_issued=async_issued, wait_stall_cycles=wait_stall)
+                   async_issued=async_issued, wait_stall_cycles=wait_stall,
+                   failed_transfers=failed_transfers)
 
 
 def overlap_speedup(vop: VerifiedOperator, trace: Sequence[TraceEvent],

@@ -120,6 +120,7 @@ class ReqState(NamedTuple):
     steps: jnp.ndarray       # i64 [B]
     ctrl: jnp.ndarray        # i64 [B]: 0 = advance (loop-iterate), 1 = taken jump
     pc_new: jnp.ndarray      # i64 [B]
+    fault: jnp.ndarray       # i64 [B, 4]: (pc, opcode, addr, device); pc=-1 none
 
 
 class VMResult(NamedTuple):
@@ -128,6 +129,20 @@ class VMResult(NamedTuple):
     status: jnp.ndarray
     steps: jnp.ndarray
     regs: jnp.ndarray
+    fault: jnp.ndarray       # i64 [B, 4] FaultInfo rows (pc=-1 = no fault)
+
+
+# The "no fault" FaultInfo row every clean lane carries (pc = -1).
+NO_FAULT = np.asarray([-1, 0, 0, 0], dtype=np.int64)
+
+
+def fault_info(row) -> Optional[isa.FaultInfo]:
+    """Decode one [4] fault row into a FaultInfo (None when clean)."""
+    row = np.asarray(row, dtype=np.int64).reshape(4)
+    if int(row[0]) < 0:
+        return None
+    return isa.FaultInfo(pc=int(row[0]), opcode=int(row[1]),
+                         addr=int(row[2]), device=int(row[3]))
 
 
 def _i64(x) -> jnp.ndarray:
@@ -165,18 +180,19 @@ class _DenseOps:
         self.n_dev = n_dev
         self.P = pool_words
 
-    # -- scalar (one lane; addresses verified in range) ------------------
+    # -- scalar (one lane; addresses verified in range, except that a
+    # faulted lane routes dev to n_dev so the write drops) ---------------
     def read1(self, mem, dev, addr):
         return mem[dev, addr]
 
     def write1(self, mem, dev, addr, val):
-        return mem.at[dev, addr].set(val)
+        return mem.at[dev, addr].set(val, mode="drop")
 
     def read1_win(self, mem, dev, phys):
         return mem[dev, phys]
 
     def write1_win(self, mem, dev, idx, val):
-        return mem.at[dev, idx].set(val)
+        return mem.at[dev, idx].set(val, mode="drop")
 
     # -- vector (B lanes; dead lanes routed to drop targets) -------------
     def readv(self, mem, dev, addr):
@@ -288,11 +304,17 @@ class _ShardOps:
 
 
 def _make_scalar_step(*, base_c, mask_c, failed, n_dev, max_window, depth,
-                      ops):
+                      ops, protect=True):
     """The scalar (one-request) ``lax.switch`` interpreter — the semantic
     reference every other step implementation must match.  Memory access
     goes through ``ops``, so the same branches drive the dense pool and a
-    mesh shard.  Returns ``step_one(s, mem, row, home, act)``."""
+    mesh shard.  Returns ``step_one(s, mem, row, home, act)``.
+
+    ``protect`` bakes in the runtime protection checks (see pyvm): a
+    data-dependent device/offset outside the grant, or a word access to a
+    failed device, halts the lane with ``STATUS_PROT_FAULT`` and masks
+    every effect of the faulting instruction.  With ``protect=False`` the
+    checks are not traced at all (legacy wrap semantics)."""
 
     def dev_of1(regs, home, field, via_reg):
         dreg = regs[field & _REG_MASK]
@@ -307,6 +329,41 @@ def _make_scalar_step(*, base_c, mask_c, failed, n_dev, max_window, depth,
 
     def advance(s: ReqState, **kw) -> ReqState:
         return s._replace(ctrl=_i64(0), pc_new=s.pc + 1, **kw)
+
+    # --- runtime protection (scalar) -------------------------------------
+    def dev_oob1(regs, field, via_reg):
+        """Register-held device that is neither DEV_LOCAL nor a real id."""
+        d = regs[field & _REG_MASK]
+        return via_reg & (d != DEV_LOCAL) & ((d < 0) | (d >= n_dev))
+
+    def word_fault1(s, home, row):
+        """(fault?, FaultInfo row) for LOAD/STORE/CAS/CAA; (None, None)
+        when protection is compiled out."""
+        if not protect:
+            return None, None
+        via = (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0
+        draw = jnp.where(via, s.regs[row[isa.F_E] & _REG_MASK],
+                         row[isa.F_E])
+        oob_dev = dev_oob1(s.regs, row[isa.F_E], via)
+        dev = dev_of1(s.regs, home, row[isa.F_E], via)
+        off = s.regs[row[isa.F_B] & _REG_MASK] + row[isa.F_IMM]
+        oob_off = off != (off & mask_c[row[isa.F_A]])
+        flt = oob_dev | oob_off | failed[dev]
+        frow = jnp.stack([s.pc, row[isa.F_OP], off,
+                          jnp.where(oob_dev, draw, dev)])
+        return flt, frow
+
+    def prot_halt(s2: ReqState, s: ReqState, flt, frow) -> ReqState:
+        """Merge: on fault keep ``s``'s architectural state (regs come
+        pre-masked by the branch), halt with PROT_FAULT and latch the
+        fault record."""
+        if flt is None:
+            return s2
+        return s2._replace(
+            halted=s2.halted | flt,
+            status=jnp.where(flt, _i64(isa.STATUS_PROT_FAULT), s2.status),
+            inflight=jnp.where(flt, s.inflight, s2.inflight),
+            fault=jnp.where(flt, frow, s2.fault))
 
     # --- one branch per opcode; (s, mem, row, home) -> (s, mem) ----------
     def br_nop(s, mem, row, home):
@@ -325,28 +382,35 @@ def _make_scalar_step(*, base_c, mask_c, failed, n_dev, max_window, depth,
                        .set(val)), mem
 
     def br_load(s, mem, row, home):
+        flt, frow = word_fault1(s, home, row)
         dev = dev_of1(s.regs, home, row[isa.F_E],
                       (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0)
         addr = phys1(row[isa.F_A],
                      s.regs[row[isa.F_B] & _REG_MASK] + row[isa.F_IMM])
         val = ops.read1(mem, dev, addr)
-        return advance(s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK]
-                       .set(val)), mem
+        regs = s.regs.at[row[isa.F_DST] & _REG_MASK].set(val)
+        if flt is not None:
+            regs = jnp.where(flt, s.regs, regs)
+        return prot_halt(advance(s, regs=regs), s, flt, frow), mem
 
     def br_store(s, mem, row, home):
+        flt, frow = word_fault1(s, home, row)
         dev = dev_of1(s.regs, home, row[isa.F_E],
                       (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0)
         addr = phys1(row[isa.F_A],
                      s.regs[row[isa.F_B] & _REG_MASK] + row[isa.F_IMM])
         val = s.regs[row[isa.F_DST] & _REG_MASK]
-        return advance(s), ops.write1(mem, dev, addr, val)
+        if flt is not None:
+            dev = jnp.where(flt, _i64(n_dev), dev)
+        return prot_halt(advance(s), s, flt, frow), \
+            ops.write1(mem, dev, addr, val)
 
     def br_memcpy(s, mem, row, home):
         flags = row[isa.F_FLAGS]
-        ddev = dev_of1(s.regs, home, row[isa.F_DST],
-                       (flags & FLAG_DSTDEV_REG) != 0)
-        sdev = dev_of1(s.regs, home, row[isa.F_C],
-                       (flags & FLAG_SRCDEV_REG) != 0)
+        via_d = (flags & FLAG_DSTDEV_REG) != 0
+        via_s = (flags & FLAG_SRCDEV_REG) != 0
+        ddev = dev_of1(s.regs, home, row[isa.F_DST], via_d)
+        sdev = dev_of1(s.regs, home, row[isa.F_C], via_s)
         drid, srid = row[isa.F_A], row[isa.F_D]
         cap = row[isa.F_IMM]
         lnreg = s.regs[row[isa.F_IMM2] & _REG_MASK]
@@ -355,10 +419,32 @@ def _make_scalar_step(*, base_c, mask_c, failed, n_dev, max_window, depth,
         ln = jnp.minimum(jnp.minimum(ln, mask_c[drid] + 1),
                          mask_c[srid] + 1)
         fail = failed[ddev] | failed[sdev]
-        ln = jnp.where(fail, 0, ln)
-        i = jnp.arange(max_window, dtype=jnp.int64)
         soff = s.regs[row[isa.F_E] & _REG_MASK]
         doff = s.regs[row[isa.F_B] & _REG_MASK]
+        if protect:
+            # Same 4-way priority as pyvm: dst-dev, src-dev, dst window,
+            # src window.  Only a copy that would actually move words
+            # (post-clamp ln > 0) can fault.
+            oob_dd = dev_oob1(s.regs, row[isa.F_DST], via_d)
+            oob_sd = dev_oob1(s.regs, row[isa.F_C], via_s)
+            d_oob = (doff != (doff & mask_c[drid])) | \
+                (doff + ln > mask_c[drid] + 1)
+            s_oob = (soff != (soff & mask_c[srid])) | \
+                (soff + ln > mask_c[srid] + 1)
+            flt = (ln > 0) & (oob_dd | oob_sd | d_oob | s_oob)
+            faddr = jnp.where(oob_dd | (~oob_sd & d_oob), doff, soff)
+            fdev = jnp.where(
+                oob_dd, s.regs[row[isa.F_DST] & _REG_MASK],
+                jnp.where(oob_sd, s.regs[row[isa.F_C] & _REG_MASK],
+                          jnp.where(d_oob, ddev, sdev)))
+            frow = jnp.stack([s.pc, row[isa.F_OP], faddr, fdev])
+            fail = fail & ~flt
+        else:
+            flt, frow = None, None
+        ln = jnp.where(fail, 0, ln)
+        if flt is not None:
+            ln = jnp.where(flt, 0, ln)
+        i = jnp.arange(max_window, dtype=jnp.int64)
         sphys = base_c[srid] + ((soff + i) & mask_c[srid])
         dphys = base_c[drid] + ((doff + i) & mask_c[drid])
         svals = ops.read1_win(mem, sdev, sphys)
@@ -374,9 +460,11 @@ def _make_scalar_step(*, base_c, mask_c, failed, n_dev, max_window, depth,
         inflight = jnp.where(
             flags & FLAG_ASYNC,
             jnp.minimum(s.inflight + 1, isa.MAX_INFLIGHT), s.inflight)
-        return advance(s, regs=regs, inflight=inflight), mem2
+        return prot_halt(advance(s, regs=regs, inflight=inflight),
+                         s, flt, frow), mem2
 
     def _br_casa(s, mem, row, home, is_cas):
+        flt, frow = word_fault1(s, home, row)
         dev = dev_of1(s.regs, home, row[isa.F_E],
                       (row[isa.F_FLAGS] & FLAG_DEV_REG) != 0)
         addr = phys1(row[isa.F_A],
@@ -385,8 +473,11 @@ def _make_scalar_step(*, base_c, mask_c, failed, n_dev, max_window, depth,
         hit = old == s.regs[row[isa.F_C] & _REG_MASK]
         swp = s.regs[row[isa.F_D] & _REG_MASK]
         new = jnp.where(hit, swp if is_cas else old + swp, old)
-        return advance(
-            s, regs=s.regs.at[row[isa.F_DST] & _REG_MASK].set(old)), \
+        regs = s.regs.at[row[isa.F_DST] & _REG_MASK].set(old)
+        if flt is not None:
+            regs = jnp.where(flt, s.regs, regs)
+            dev = jnp.where(flt, _i64(n_dev), dev)
+        return prot_halt(advance(s, regs=regs), s, flt, frow), \
             ops.write1(mem, dev, addr, new)
 
     def br_cas(s, mem, row, home):
@@ -536,13 +627,17 @@ def _sweep_conflict(r_lo, r_hi, w_lo, w_hi):
 
 
 def _make_vector_step(*, base_c, mask_c, n_regions, n_dev, pool_words,
-                      max_window, depth, B, homes, failed, ops):
+                      max_window, depth, B, homes, failed, ops,
+                      protect=True):
     """The vectorized macro-step plus the per-lane footprint intervals
     feeding the conflict sweep, parameterized over memory access.
     Returns ``(vector_step, lane_intervals)``.
 
     Every opcode path is computed for every lane and combined with
     masks; scatters route dead lanes to out-of-bounds drop targets.
+    With ``protect`` (the default) the runtime protection checks of the
+    scalar reference are decoded per lane and a faulting lane halts with
+    ``STATUS_PROT_FAULT``, all channels masked.
     """
     lane16 = jnp.arange(isa.NUM_REGS, dtype=jnp.int64)[None, :]
     lane8 = jnp.arange(depth, dtype=jnp.int64)[None, :]
@@ -556,6 +651,10 @@ def _make_vector_step(*, base_c, mask_c, n_regions, n_dev, pool_words,
         d = jnp.where(via_reg, rd(regs, field), field)
         return jnp.where(d == DEV_LOCAL, homes, jnp.mod(d, n_dev))
 
+    def dev_oob_v(regs, field, via_reg):
+        d = rd(regs, field)
+        return via_reg & (d != DEV_LOCAL) & ((d < 0) | (d >= n_dev))
+
     def _decode(s, rows):
         """Shared per-lane decode of memory operands (word ops and
         memcpy windows) used by both the vector step and the conflict
@@ -563,17 +662,17 @@ def _make_vector_step(*, base_c, mask_c, n_regions, n_dev, pool_words,
         flags = rows[:, isa.F_FLAGS]
         # word ops (LOAD/STORE/CAS/CAA) share the same addressing form
         w_rid = jnp.clip(rows[:, isa.F_A], 0, n_regions - 1)
-        w_dev = dev_of_v(s.regs, rows[:, isa.F_E],
-                         (flags & FLAG_DEV_REG) != 0)
+        w_via = (flags & FLAG_DEV_REG) != 0
+        w_dev = dev_of_v(s.regs, rows[:, isa.F_E], w_via)
         w_off = rd(s.regs, rows[:, isa.F_B]) + rows[:, isa.F_IMM]
         w_addr = base_c[w_rid] + (w_off & mask_c[w_rid])
         # memcpy operands
         m_drid = jnp.clip(rows[:, isa.F_A], 0, n_regions - 1)
         m_srid = jnp.clip(rows[:, isa.F_D], 0, n_regions - 1)
-        m_ddev = dev_of_v(s.regs, rows[:, isa.F_DST],
-                          (flags & FLAG_DSTDEV_REG) != 0)
-        m_sdev = dev_of_v(s.regs, rows[:, isa.F_C],
-                          (flags & FLAG_SRCDEV_REG) != 0)
+        m_via_d = (flags & FLAG_DSTDEV_REG) != 0
+        m_via_s = (flags & FLAG_SRCDEV_REG) != 0
+        m_ddev = dev_of_v(s.regs, rows[:, isa.F_DST], m_via_d)
+        m_sdev = dev_of_v(s.regs, rows[:, isa.F_C], m_via_s)
         cap = rows[:, isa.F_IMM]
         lnreg = rd(s.regs, rows[:, isa.F_IMM2])
         ln = jnp.where((flags & FLAG_LEN_REG) != 0,
@@ -581,13 +680,42 @@ def _make_vector_step(*, base_c, mask_c, n_regions, n_dev, pool_words,
         ln = jnp.minimum(jnp.minimum(ln, mask_c[m_drid] + 1),
                          mask_c[m_srid] + 1)
         m_fail = failed[m_ddev] | failed[m_sdev]
-        ln = jnp.where(m_fail, 0, ln)
         m_soff = rd(s.regs, rows[:, isa.F_E])
         m_doff = rd(s.regs, rows[:, isa.F_B])
-        return dict(flags=flags, w_rid=w_rid, w_dev=w_dev, w_addr=w_addr,
-                    m_drid=m_drid, m_srid=m_srid, m_ddev=m_ddev,
-                    m_sdev=m_sdev, ln=ln, m_fail=m_fail, m_soff=m_soff,
-                    m_doff=m_doff)
+        out = dict(flags=flags, w_rid=w_rid, w_dev=w_dev, w_addr=w_addr,
+                   m_drid=m_drid, m_srid=m_srid, m_ddev=m_ddev,
+                   m_sdev=m_sdev, m_fail=m_fail, m_soff=m_soff,
+                   m_doff=m_doff)
+        if protect:
+            # word-op fault columns (mirrors the scalar word_fault1)
+            w_draw = jnp.where(w_via, rd(s.regs, rows[:, isa.F_E]),
+                               rows[:, isa.F_E])
+            w_oob_dev = dev_oob_v(s.regs, rows[:, isa.F_E], w_via)
+            w_flt = w_oob_dev | (w_off != (w_off & mask_c[w_rid])) | \
+                failed[w_dev]
+            # memcpy fault columns (4-way priority, pre-fail-zero ln)
+            oob_dd = dev_oob_v(s.regs, rows[:, isa.F_DST], m_via_d)
+            oob_sd = dev_oob_v(s.regs, rows[:, isa.F_C], m_via_s)
+            d_oob = (m_doff != (m_doff & mask_c[m_drid])) | \
+                (m_doff + ln > mask_c[m_drid] + 1)
+            s_oob = (m_soff != (m_soff & mask_c[m_srid])) | \
+                (m_soff + ln > mask_c[m_srid] + 1)
+            m_flt = (ln > 0) & (oob_dd | oob_sd | d_oob | s_oob)
+            m_faddr = jnp.where(oob_dd | (~oob_sd & d_oob), m_doff,
+                                m_soff)
+            m_fdev = jnp.where(
+                oob_dd, rd(s.regs, rows[:, isa.F_DST]),
+                jnp.where(oob_sd, rd(s.regs, rows[:, isa.F_C]),
+                          jnp.where(d_oob, m_ddev, m_sdev)))
+            m_fail = m_fail & ~m_flt
+            ln = jnp.where(m_flt, 0, ln)
+            out.update(w_flt=w_flt, w_off=w_off,
+                       w_fdev=jnp.where(w_oob_dev, w_draw, w_dev),
+                       m_flt=m_flt, m_faddr=m_faddr, m_fdev=m_fdev,
+                       m_fail=m_fail)
+        ln = jnp.where(m_fail, 0, ln)
+        out["ln"] = ln
+        return out
 
     def lane_intervals(s, rows, active):
         """Per-lane read/write footprint intervals in flat
@@ -661,6 +789,17 @@ def _make_vector_step(*, base_c, mask_c, n_regions, n_dev, pool_words,
         is_wait, is_ret = is_op(Op.WAIT), is_op(Op.RET)
         is_atom = is_cas | is_caa
 
+        # --- runtime protection faults -----------------------------
+        if protect:
+            flt = (d["w_flt"] & (is_load | is_store | is_atom)) | \
+                (d["m_flt"] & is_mcpy)
+            f_addr = jnp.where(is_mcpy, d["m_faddr"], d["w_off"])
+            f_dev = jnp.where(is_mcpy, d["m_fdev"], d["w_fdev"])
+            frows = jnp.stack(
+                [s.pc, opv, f_addr, f_dev], axis=-1)       # (B, 4)
+        else:
+            flt = jnp.zeros(B, bool)
+
         # --- ALU / MOVI --------------------------------------------
         alu_rhs = jnp.where((flags & FLAG_IMMB) != 0, imm,
                             rd(s.regs, rows[:, isa.F_B]))
@@ -687,7 +826,8 @@ def _make_vector_step(*, base_c, mask_c, n_regions, n_dev, pool_words,
         # --- register write channel (one per opcode at most) --------
         err_old = s.regs[:, ERR_REG]
         err_new = jnp.where(d["m_fail"], err_old | 1, err_old)
-        reg_w_mask = is_movi | is_alu | is_load | is_atom | is_mcpy
+        reg_w_mask = (is_movi | is_alu | is_load | is_atom | is_mcpy) \
+            & ~flt
         reg_w_idx = jnp.where(
             is_mcpy, ERR_REG, rows[:, isa.F_DST] & _REG_MASK)
         reg_w_val = jnp.where(
@@ -699,7 +839,7 @@ def _make_vector_step(*, base_c, mask_c, n_regions, n_dev, pool_words,
         regs = jnp.where(upd, reg_w_val[:, None], s.regs)
 
         # --- single-word scatter (STORE / CAS / CAA) -----------------
-        sw_mask = is_store | is_atom
+        sw_mask = (is_store | is_atom) & ~flt
         sw_val = jnp.where(is_store, rd(s.regs, rows[:, isa.F_DST]),
                            atom_new)
         mem = lax.cond(
@@ -729,7 +869,7 @@ def _make_vector_step(*, base_c, mask_c, n_regions, n_dev, pool_words,
 
         # --- inflight ------------------------------------------------
         inflight = jnp.where(
-            is_mcpy & ((flags & FLAG_ASYNC) != 0),
+            is_mcpy & ~flt & ((flags & FLAG_ASYNC) != 0),
             jnp.minimum(s.inflight + 1, isa.MAX_INFLIGHT), s.inflight)
         thr = jnp.where((flags & FLAG_THR_REG) != 0,
                         rd(s.regs, rows[:, isa.F_A]), imm)
@@ -737,10 +877,12 @@ def _make_vector_step(*, base_c, mask_c, n_regions, n_dev, pool_words,
             is_wait, jnp.minimum(inflight, jnp.maximum(thr, 0)),
             inflight)
 
-        # --- RET -----------------------------------------------------
-        halted = s.halted | is_ret
+        # --- RET / protection fault ----------------------------------
+        halted = s.halted | is_ret | flt
         ret = jnp.where(is_ret, rd(s.regs, rows[:, isa.F_A]), s.ret)
-        status = jnp.where(is_ret, imm, s.status)
+        status = jnp.where(
+            is_ret, imm,
+            jnp.where(flt, _i64(isa.STATUS_PROT_FAULT), s.status))
 
         # --- control flow -------------------------------------------
         jcond = rows[:, isa.F_D]
@@ -804,7 +946,7 @@ def _make_vector_step(*, base_c, mask_c, n_regions, n_dev, pool_words,
             done = done | set_m
 
         is_jtaken = ctrl == 1
-        fix = active & ~is_ret
+        fix = active & ~is_ret & ~flt
         pc = jnp.where(fix, jnp.where(is_jtaken, pc_new, it_pcn), s.pc)
         lsp_f = jnp.where(fix, jnp.where(is_jtaken, pop_lsp, it_lsp),
                           jnp.where(active, lsp, s.lsp))
@@ -815,6 +957,9 @@ def _make_vector_step(*, base_c, mask_c, n_regions, n_dev, pool_words,
 
         # --- merge, masking out inactive lanes -----------------------
         regs = jnp.where(active[:, None], regs, s.regs)
+        fault = s.fault
+        if protect:
+            fault = jnp.where(flt[:, None], frows, s.fault)
         s2 = ReqState(
             pc=pc, regs=regs, lstack=lstack_f, lsp=lsp_f,
             inflight=jnp.where(active, inflight, s.inflight),
@@ -823,7 +968,8 @@ def _make_vector_step(*, base_c, mask_c, n_regions, n_dev, pool_words,
             status=jnp.where(active, status, s.status),
             steps=s.steps + active.astype(jnp.int64),
             ctrl=jnp.where(active, ctrl, s.ctrl),
-            pc_new=jnp.where(active, pc_new, s.pc_new))
+            pc_new=jnp.where(active, pc_new, s.pc_new),
+            fault=fault)
         return s2, mem
 
     return vector_step, lane_intervals
@@ -853,7 +999,8 @@ def _program_statics(codes, fuels):
 
 
 def _build_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
-                  regions: RegionTable, n_devices: int, batch: int):
+                  regions: RegionTable, n_devices: int, batch: int,
+                  protect: bool = True):
     """Build the lockstep engine over a *merged* instruction store.
 
     ``codes`` holds one program per dispatch-table slot, laid out back to
@@ -904,13 +1051,13 @@ def _build_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
         ops = _DenseOps(n_dev, int(pool_words))
         step_one = _make_scalar_step(
             base_c=base_c, mask_c=mask_c, failed=failed, n_dev=n_dev,
-            max_window=max_window, depth=depth, ops=ops)
+            max_window=max_window, depth=depth, ops=ops, protect=protect)
         serial_step = _serial_step_fn(step_one)
         vector_step, lane_intervals = _make_vector_step(
             base_c=base_c, mask_c=mask_c, n_regions=n_regions,
             n_dev=n_dev, pool_words=int(pool_words),
             max_window=max_window, depth=depth, B=B, homes=homes,
-            failed=failed, ops=ops)
+            failed=failed, ops=ops, protect=protect)
 
         def live_mask(s: ReqState):
             return (~s.halted) & (s.pc < end_arr) & (s.steps < fuel_arr)
@@ -943,7 +1090,8 @@ def _build_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
             ret=jnp.zeros(B, jnp.int64),
             status=jnp.full(B, isa.STATUS_FELL_OFF, jnp.int64),
             steps=jnp.zeros(B, jnp.int64),
-            ctrl=jnp.zeros(B, jnp.int64), pc_new=jnp.zeros(B, jnp.int64))
+            ctrl=jnp.zeros(B, jnp.int64), pc_new=jnp.zeros(B, jnp.int64),
+            fault=jnp.tile(jnp.asarray(NO_FAULT), (B, 1)))
 
         final, mem_f = lax.while_loop(cond, step, (init, mem))
         status = jnp.where(
@@ -951,14 +1099,16 @@ def _build_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
             jnp.where(final.steps >= fuel_arr, _i64(isa.STATUS_FUEL),
                       _i64(isa.STATUS_FELL_OFF)))
         return VMResult(mem=mem_f, ret=final.ret, status=status,
-                        steps=final.steps, regs=final.regs)
+                        steps=final.steps, regs=final.regs,
+                        fault=final.fault)
 
     return jax.jit(run)
 
 
 def _build_sharded_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
                           regions: RegionTable, n_devices: int,
-                          batch_per_device: int, axis: str = "pool"):
+                          batch_per_device: int, axis: str = "pool",
+                          protect: bool = True):
     """Build the mesh-sharded lockstep engine: the pool's leading
     ``n_devices`` axis is sharded over a 1-D device mesh (``shard_map``),
     each device executes the home-bucketed sub-wave it owns, and remote
@@ -1026,12 +1176,12 @@ def _build_sharded_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
         ops = _ShardOps(n_dev, int(pool_words), axis, me)
         step_one = _make_scalar_step(
             base_c=base_c, mask_c=mask_c, failed=failed, n_dev=n_dev,
-            max_window=max_window, depth=depth, ops=ops)
+            max_window=max_window, depth=depth, ops=ops, protect=protect)
         vector_step, lane_intervals = _make_vector_step(
             base_c=base_c, mask_c=mask_c, n_regions=n_regions,
             n_dev=n_dev, pool_words=int(pool_words),
             max_window=max_window, depth=depth, B=Bp, homes=homes_l,
-            failed=failed, ops=ops)
+            failed=failed, ops=ops, protect=protect)
 
         def gather(x):
             return lax.all_gather(x, axis).reshape((N,) + x.shape[1:])
@@ -1102,7 +1252,8 @@ def _build_sharded_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
             status=jnp.full(Bp, isa.STATUS_FELL_OFF, jnp.int64),
             steps=jnp.zeros(Bp, jnp.int64),
             ctrl=jnp.zeros(Bp, jnp.int64),
-            pc_new=jnp.zeros(Bp, jnp.int64))
+            pc_new=jnp.zeros(Bp, jnp.int64),
+            fault=jnp.tile(jnp.asarray(NO_FAULT), (Bp, 1)))
 
         final, mem_f = lax.while_loop(cond, step, (init, shard))
         status = jnp.where(
@@ -1111,7 +1262,7 @@ def _build_sharded_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
                       _i64(isa.STATUS_FELL_OFF)))
         return VMResult(mem=mem_f[None, :], ret=final.ret[None],
                         status=status[None], steps=final.steps[None],
-                        regs=final.regs[None])
+                        regs=final.regs[None], fault=final.fault[None])
 
     sharded = jaxcompat.shard_map(
         device_body, mesh,
@@ -1119,19 +1270,20 @@ def _build_sharded_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
                   _P(None), _P(axis, None), _P(axis, None)),
         out_specs=VMResult(mem=_P(axis, None), ret=_P(axis, None),
                            status=_P(axis, None), steps=_P(axis, None),
-                           regs=_P(axis, None, None)))
+                           regs=_P(axis, None, None),
+                           fault=_P(axis, None, None)))
     return jax.jit(sharded)
 
 
 def build_batched_vm(op: VerifiedOperator, regions: RegionTable,
-                     n_devices: int, batch: int):
+                     n_devices: int, batch: int, protect: bool = True):
     """Returns jit-compiled ``f(mem, params, homes, failed) -> VMResult`` —
     the one-program specialization of :func:`_build_engine` (its merged
     store holds a single program and every request dispatches to slot 0).
     Call under ``vm.x64()`` (or use :func:`invoke` / :func:`invoke_batched`).
     """
     eng = _build_engine([op.code], [op.step_bound], regions, n_devices,
-                        batch)
+                        batch, protect=protect)
     sel0 = np.zeros(int(batch), dtype=np.int64)
 
     def run(mem, params, homes, failed):
@@ -1142,7 +1294,7 @@ def build_batched_vm(op: VerifiedOperator, regions: RegionTable,
 
 def build_mixed_batched_vm(ops: Sequence[VerifiedOperator],
                            regions: RegionTable, n_devices: int,
-                           batch: int):
+                           batch: int, protect: bool = True):
     """The multi-tenant engine: one lockstep launch executing a batch of
     requests whose per-request ``op_sel`` picks among the ``ops`` programs
     (laid out back to back like the registry's instruction store, so
@@ -1151,12 +1303,13 @@ def build_mixed_batched_vm(ops: Sequence[VerifiedOperator],
     ``f(mem, params, homes, failed, op_sel) -> VMResult``."""
     return _build_engine([o.code for o in ops],
                          [o.step_bound for o in ops],
-                         regions, n_devices, batch)
+                         regions, n_devices, batch, protect=protect)
 
 
 def build_sharded_mixed_vm(ops: Sequence[VerifiedOperator],
                            regions: RegionTable, n_devices: int,
-                           batch_per_device: int, axis: str = "pool"):
+                           batch_per_device: int, axis: str = "pool",
+                           protect: bool = True):
     """The pod-scale engine: the pool's leading axis sharded over a 1-D
     device mesh, one home-bucketed sub-wave per device, cross-device
     LOAD/MEMCPY lowered to collectives (see :func:`_build_sharded_engine`
@@ -1166,21 +1319,24 @@ def build_sharded_mixed_vm(ops: Sequence[VerifiedOperator],
     return _build_sharded_engine([o.code for o in ops],
                                  [o.step_bound for o in ops],
                                  regions, n_devices, batch_per_device,
-                                 axis)
+                                 axis, protect=protect)
 
 
-def build_vm(op: VerifiedOperator, regions: RegionTable, n_devices: int):
+def build_vm(op: VerifiedOperator, regions: RegionTable, n_devices: int,
+             protect: bool = True):
     """Single-request entry point: ``f(mem, params, home, failed)`` —
     the ``batch=1`` specialization of :func:`build_batched_vm` with scalar
     result fields, kept for every existing caller."""
-    batched = build_batched_vm(op, regions, n_devices, batch=1)
+    batched = build_batched_vm(op, regions, n_devices, batch=1,
+                               protect=protect)
 
     def run(mem, params, home, failed):
         params = jnp.asarray(params, jnp.int64).reshape(1, -1)
         homes = jnp.asarray(home, jnp.int64).reshape(1)
         out = batched(mem, params, homes, failed)
         return VMResult(mem=out.mem, ret=out.ret[0], status=out.status[0],
-                        steps=out.steps[0], regs=out.regs[0])
+                        steps=out.steps[0], regs=out.regs[0],
+                        fault=out.fault[0])
 
     return run
 
@@ -1228,67 +1384,75 @@ _VM_CACHE: Dict[Tuple, object] = {}
 
 
 def engine_cached(op: VerifiedOperator, regions: RegionTable, n_dev: int,
-                  batch: int) -> bool:
+                  batch: int, protect: bool = True) -> bool:
     """True iff the batched interpreter engine for this (op, batch) is
     already built — a cache miss costs an XLA compile, which the
     dispatch cost model charges for."""
-    return engine_key(op, regions, n_dev, batch) in _VM_CACHE
+    return engine_key(op, regions, n_dev, batch,
+                      bool(protect)) in _VM_CACHE
 
 
 def mixed_engine_cached(ops: Sequence[VerifiedOperator],
                         regions: RegionTable, n_dev: int,
-                        batch: int) -> bool:
-    return mixed_engine_key(ops, regions, n_dev, batch) in _VM_CACHE
+                        batch: int, protect: bool = True) -> bool:
+    return mixed_engine_key(ops, regions, n_dev, batch,
+                            bool(protect)) in _VM_CACHE
 
 
 def _cached_engine(op: VerifiedOperator, regions: RegionTable, n_dev: int,
-                   batch: int):
-    key = engine_key(op, regions, n_dev, batch)
+                   batch: int, protect: bool = True):
+    key = engine_key(op, regions, n_dev, batch, bool(protect))
     fn = _VM_CACHE.get(key)
     if fn is None:
-        fn = build_batched_vm(op, regions, n_dev, batch)
+        fn = build_batched_vm(op, regions, n_dev, batch, protect=protect)
         _VM_CACHE[key] = fn
     return fn
 
 
 def _cached_mixed_engine(ops: Sequence[VerifiedOperator],
-                         regions: RegionTable, n_dev: int, batch: int):
-    key = mixed_engine_key(ops, regions, n_dev, batch)
+                         regions: RegionTable, n_dev: int, batch: int,
+                         protect: bool = True):
+    key = mixed_engine_key(ops, regions, n_dev, batch, bool(protect))
     fn = _VM_CACHE.get(key)
     if fn is None:
-        fn = build_mixed_batched_vm(ops, regions, n_dev, batch)
+        fn = build_mixed_batched_vm(ops, regions, n_dev, batch,
+                                    protect=protect)
         _VM_CACHE[key] = fn
     return fn
 
 
 def _sharded_engine_key(ops: Sequence[VerifiedOperator],
                         regions: RegionTable, n_dev: int,
-                        batch_per_device: int, axis: str) -> Tuple:
+                        batch_per_device: int, axis: str,
+                        protect: bool = True) -> Tuple:
     import jax as _jax
     dev_ids = tuple(d.id for d in _jax.devices()[:n_dev])
     return mixed_engine_key(ops, regions, n_dev, batch_per_device,
-                            "sharded", axis, dev_ids)
+                            "sharded", axis, dev_ids, bool(protect))
 
 
 def sharded_engine_cached(ops: Sequence[VerifiedOperator],
                           regions: RegionTable, n_dev: int,
                           batch_per_device: int,
-                          axis: str = "pool") -> bool:
+                          axis: str = "pool",
+                          protect: bool = True) -> bool:
     """True iff the sharded mesh engine for this (ops, sub-wave size) is
     already built — a miss costs an XLA compile of the whole shard_map
     program, which the dispatch cost model charges for."""
     return _sharded_engine_key(ops, regions, n_dev, batch_per_device,
-                               axis) in _VM_CACHE
+                               axis, protect) in _VM_CACHE
 
 
 def _cached_sharded_engine(ops: Sequence[VerifiedOperator],
                            regions: RegionTable, n_dev: int,
-                           batch_per_device: int, axis: str = "pool"):
-    key = _sharded_engine_key(ops, regions, n_dev, batch_per_device, axis)
+                           batch_per_device: int, axis: str = "pool",
+                           protect: bool = True):
+    key = _sharded_engine_key(ops, regions, n_dev, batch_per_device, axis,
+                              protect)
     fn = _VM_CACHE.get(key)
     if fn is None:
         fn = build_sharded_mixed_vm(ops, regions, n_dev, batch_per_device,
-                                    axis)
+                                    axis, protect=protect)
         _VM_CACHE[key] = fn
     return fn
 
@@ -1312,7 +1476,8 @@ def run_batched_fn(fn, mem: np.ndarray, p: np.ndarray, h: np.ndarray,
         if block:
             out = jax.tree_util.tree_map(np.asarray, out)
     return BatchedInvokeResult(mem=out.mem, ret=out.ret, status=out.status,
-                               steps=out.steps, regs=out.regs)
+                               steps=out.steps, regs=out.regs,
+                               fault=out.fault)
 
 
 def materialize_result(res: "BatchedInvokeResult") -> "BatchedInvokeResult":
@@ -1322,7 +1487,7 @@ def materialize_result(res: "BatchedInvokeResult") -> "BatchedInvokeResult":
     return BatchedInvokeResult(
         mem=np.asarray(res.mem), ret=np.asarray(res.ret),
         status=np.asarray(res.status), steps=np.asarray(res.steps),
-        regs=np.asarray(res.regs))
+        regs=np.asarray(res.regs), fault=np.asarray(res.fault))
 
 
 def result_ready(res: "BatchedInvokeResult") -> bool:
@@ -1330,7 +1495,8 @@ def result_ready(res: "BatchedInvokeResult") -> bool:
     once every field's device computation has landed (numpy fields are
     trivially ready; jax arrays without ``is_ready`` report ready and
     the subsequent materialization simply blocks)."""
-    for f in (res.mem, res.ret, res.status, res.steps, res.regs):
+    for f in (res.mem, res.ret, res.status, res.steps, res.regs,
+              res.fault):
         probe = getattr(f, "is_ready", None)
         if probe is not None and not probe():
             return False
@@ -1379,11 +1545,12 @@ def _marshal_batch(params: Sequence[Sequence[int]],
 
 def invoke(op: VerifiedOperator, regions: RegionTable, mem: np.ndarray,
            params: Sequence[int] = (), *, home: int = 0,
-           failed: Optional[Set[int]] = None) -> "InvokeResult":
+           failed: Optional[Set[int]] = None,
+           protect: bool = True) -> "InvokeResult":
     """Convenience entry point: numpy in, numpy out, x64 handled."""
     n_dev = int(mem.shape[0])
     with x64():
-        fn = _cached_engine(op, regions, n_dev, batch=1)
+        fn = _cached_engine(op, regions, n_dev, batch=1, protect=protect)
         p = np.zeros((1, max(len(params), 1)), dtype=np.int64)
         for i, v in enumerate(params):
             p[0, i] = _wrap_param(v)
@@ -1393,14 +1560,15 @@ def invoke(op: VerifiedOperator, regions: RegionTable, mem: np.ndarray,
         out = jax.tree_util.tree_map(np.asarray, out)
     return InvokeResult(mem=out.mem, ret=int(out.ret[0]),
                         status=int(out.status[0]), steps=int(out.steps[0]),
-                        regs=out.regs[0])
+                        regs=out.regs[0], fault=fault_info(out.fault[0]))
 
 
 def invoke_batched(op: VerifiedOperator, regions: RegionTable,
                    mem: np.ndarray, params: Sequence[Sequence[int]],
                    *, homes: Union[int, Sequence[int]] = 0,
                    failed: Optional[Set[int]] = None,
-                   block: bool = True) -> "BatchedInvokeResult":
+                   block: bool = True,
+                   protect: bool = True) -> "BatchedInvokeResult":
     """Run a batch of requests against one shared pool: numpy in/out.
 
     ``params`` is a [B][k] nested sequence (one row per request); ``homes``
@@ -1408,7 +1576,8 @@ def invoke_batched(op: VerifiedOperator, regions: RegionTable,
     ``block=False`` defers retirement (see :func:`run_batched_fn`).
     """
     p, h = _marshal_batch(params, homes)
-    fn = _cached_engine(op, regions, int(mem.shape[0]), p.shape[0])
+    fn = _cached_engine(op, regions, int(mem.shape[0]), p.shape[0],
+                        protect=protect)
     return run_batched_fn(fn, mem, p, h, failed, block=block)
 
 
@@ -1418,7 +1587,8 @@ def invoke_batched_mixed(ops: Sequence[VerifiedOperator],
                          params: Sequence[Sequence[int]], *,
                          homes: Union[int, Sequence[int]] = 0,
                          failed: Optional[Set[int]] = None,
-                         block: bool = True) -> "BatchedInvokeResult":
+                         block: bool = True,
+                         protect: bool = True) -> "BatchedInvokeResult":
     """Run a *mixed* batch — request ``b`` executes ``ops[op_sel[b]]`` —
     against one shared pool in one lockstep launch: numpy in/out.
 
@@ -1437,7 +1607,8 @@ def invoke_batched_mixed(ops: Sequence[VerifiedOperator],
         raise ValueError(
             f"op_sel entries must be in [0, {len(ops)}) for {len(ops)} "
             f"programs; got range [{sel.min()}, {sel.max()}]")
-    eng = _cached_mixed_engine(tuple(ops), regions, int(mem.shape[0]), B)
+    eng = _cached_mixed_engine(tuple(ops), regions, int(mem.shape[0]), B,
+                               protect=protect)
 
     def fn(mem_j, p_j, h_j, failed_j):
         return eng(mem_j, p_j, h_j, failed_j, sel)
@@ -1449,7 +1620,8 @@ def invoke_sharded_mixed(ops: Sequence[VerifiedOperator],
                          regions: RegionTable, mem: np.ndarray,
                          plan, params: Sequence[Sequence[int]], *,
                          failed: Optional[Set[int]] = None,
-                         axis: str = "pool") -> "BatchedInvokeResult":
+                         axis: str = "pool",
+                         protect: bool = True) -> "BatchedInvokeResult":
     """Run a mixed wave on the mesh-sharded engine: numpy in/out.
 
     ``plan`` is a home-bucketed :class:`~repro.core.compile.MixedPlan`
@@ -1492,7 +1664,8 @@ def invoke_sharded_mixed(ops: Sequence[VerifiedOperator],
         hz[d, c:] = d
         az[d, :c] = lanes            # arrival rank = arrival index
         pos += c
-    eng = _cached_sharded_engine(tuple(ops), regions, n_dev, Bp, axis)
+    eng = _cached_sharded_engine(tuple(ops), regions, n_dev, Bp, axis,
+                                 protect=protect)
     from repro.core import memory as _memory
     with x64():
         mem_dev = _memory.shard_pool(np.asarray(mem, dtype=np.int64),
@@ -1506,6 +1679,7 @@ def invoke_sharded_mixed(ops: Sequence[VerifiedOperator],
     status = np.zeros(B, dtype=np.int64)
     steps = np.zeros(B, dtype=np.int64)
     regs = np.zeros((B, isa.NUM_REGS), dtype=np.int64)
+    fault = np.tile(NO_FAULT, (B, 1))
     pos = 0
     for d in range(n_dev):
         c = int(plan.device_counts[d])
@@ -1514,9 +1688,10 @@ def invoke_sharded_mixed(ops: Sequence[VerifiedOperator],
         status[lanes] = out.status[d, :c]
         steps[lanes] = out.steps[d, :c]
         regs[lanes] = out.regs[d, :c]
+        fault[lanes] = out.fault[d, :c]
         pos += c
     return BatchedInvokeResult(mem=out.mem, ret=ret, status=status,
-                               steps=steps, regs=regs)
+                               steps=steps, regs=regs, fault=fault)
 
 
 @dataclasses.dataclass
@@ -1526,6 +1701,7 @@ class InvokeResult:
     status: int
     steps: int
     regs: np.ndarray
+    fault: Optional[isa.FaultInfo] = None
 
     @property
     def ok(self) -> bool:
@@ -1539,7 +1715,14 @@ class BatchedInvokeResult:
     status: np.ndarray    # i64 [B]
     steps: np.ndarray     # i64 [B]
     regs: np.ndarray      # i64 [B, 16]
+    fault: Optional[np.ndarray] = None   # i64 [B, 4] FaultInfo rows
 
     @property
     def ok(self) -> np.ndarray:
         return self.status == isa.STATUS_OK
+
+    def fault_at(self, b: int) -> Optional[isa.FaultInfo]:
+        """The decoded FaultInfo of lane ``b`` (None when clean)."""
+        if self.fault is None:
+            return None
+        return fault_info(np.asarray(self.fault)[b])

@@ -520,8 +520,10 @@ def test_registry_interp_fallback_for_uncompilable():
     b = OperatorBuilder("big_loop", n_params=1, regions=rt)
     i = b.const(0)
     v = b.reg()
+    j = b.reg()
     with b.loop(8000):                    # step bound >> unroll limit
-        b.load(v, "data", i)
+        b.band(j, i, 1023)                # stay inside the 1024-word grant
+        b.load(v, "data", j)
         b.add(i, i, 1)
     b.ret(v)
     reg = OperatorRegistry(rt, max_steps=1 << 20)

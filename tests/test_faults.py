@@ -1,0 +1,569 @@
+"""RNIC-grade fault semantics, end to end.
+
+Layer by layer:
+
+1. **Engines** — a wild pointer / failed device takes a runtime
+   protection fault (``STATUS_PROT_FAULT``): the lane halts with the
+   faulting instruction's architectural effect suppressed, and every
+   engine (pyvm oracle, dense batched, trace-compiled, double-buffered)
+   reports bit-identical status/steps/regs/mem *and* the same decoded
+   :class:`~repro.core.isa.FaultInfo`.
+2. **Degraded mode** — a MEMCPY touching a *failed* device is NOT a
+   fault: it sets the error register, drops the copy, and the operator
+   keeps running (paper §3.2); an async one still occupies an in-flight
+   slot so WAIT semantics are unchanged.
+3. **Endpoint** — a faulting post's CQE carries the FaultInfo, the
+   owning session enters the RNIC QP error state (subsequent posts
+   retire ``STATUS_FLUSHED`` until ``reset()``), other sessions are
+   untouched; transient doorbell losses are absorbed by bounded retry;
+   a poisoned deferred materialization loses no CQEs.
+4. **Harness** — :mod:`repro.core.faults` plans compose and validate;
+   the simulator models mid-flight transfer aborts.
+
+The hypothesis chaos property at the bottom is marked ``slow``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import compile as tc
+from repro.core import faults, isa, memory, pyvm, vm
+from repro.core import operators as ops
+from repro.core.endpoint import EndpointError, TiaraEndpoint
+from repro.core.memory import Grant
+from repro.core.program import OperatorBuilder
+from repro.core.verifier import verify
+
+
+# ---------------------------------------------------------------------------
+# helpers: sequential pyvm oracle with fault rows
+# ---------------------------------------------------------------------------
+
+def run_oracle(vop, rt, mem, params, homes=None, failed=None):
+    """Replay the batch one request at a time on pyvm (shared memory).
+    Valid as a batch oracle only for disjoint-write waves."""
+    seq = mem.copy()
+    rs = []
+    for i, p in enumerate(params):
+        home = homes[i] if homes is not None else 0
+        rs.append(pyvm.run(vop, rt, seq, p, home=home,
+                           failed=failed or set()))
+    return seq, rs
+
+
+def fault_rows(infos):
+    rows = [[f.pc, f.opcode, f.addr, f.device] if f is not None
+            else list(vm.NO_FAULT) for f in infos]
+    return np.asarray(rows, dtype=np.int64)
+
+
+def assert_fault_parity(res, seq_mem, rs):
+    assert np.array_equal(res.ret, [r.ret for r in rs])
+    assert np.array_equal(res.status, [r.status for r in rs])
+    assert np.array_equal(res.steps, [r.steps for r in rs])
+    assert np.array_equal(np.asarray(res.regs),
+                          [np.asarray(r.regs) for r in rs])
+    assert np.array_equal(res.mem, seq_mem)
+    assert np.array_equal(np.asarray(res.fault),
+                          fault_rows([r.fault for r in rs]))
+    for i, r in enumerate(rs):
+        assert res.fault_at(i) == r.fault     # decoded FaultInfo equality
+
+
+def all_engines(vop, rt, mem, params, homes=None, failed=None, **kw):
+    """(name, BatchedInvokeResult) for every single-op batch engine."""
+    yield "batched", vm.invoke_batched(vop, rt, mem.copy(), params,
+                                       homes=homes or 0, failed=failed, **kw)
+    yield "compiled", tc.invoke_compiled(vop, rt, mem.copy(), params,
+                                         homes=homes or 0, failed=failed,
+                                         **kw)
+    yield "compiled_dbuf", tc.invoke_compiled(
+        vop, rt, mem.copy(), params, homes=homes or 0, failed=failed,
+        double_buffer=True, **kw)
+
+
+# ---------------------------------------------------------------------------
+# 1. Engine parity under faults
+# ---------------------------------------------------------------------------
+
+def test_fault_parity_graph_walk_engines():
+    """Torn next-pointers: some lanes chase a wild pointer and fault,
+    the rest complete — every engine matches the oracle bit-for-bit,
+    including the decoded per-lane FaultInfo and full containment of
+    the faulted lanes' writes."""
+    B = 6
+    w = ops.GraphWalk(n_nodes=32, max_depth=8, reply_words=B * ops.NODE_WORDS)
+    rt = w.regions()
+    vop = verify(w.build(rt, reply_param=True), grant=Grant.all_of(rt),
+                 regions=rt)
+    mem = memory.make_pool(1, rt)
+    order = w.populate(mem, rt)
+    # tear two nodes' next pointers: one wildly negative, one far oob
+    g = rt["graph"]
+    mem[0, g.base + int(order[0]) * 8 + 1] = -77
+    mem[0, g.base + int(order[3]) * 8 + 1] = 10**7
+    # lanes 0/3 step onto the torn pointers; 1/2/4/5 stay on clean arcs
+    params = [[int(order[i]) * 8, 2, i * ops.NODE_WORDS] for i in range(B)]
+    seq, rs = run_oracle(vop, rt, mem, params)
+    stats = [r.status for r in rs]
+    assert isa.STATUS_PROT_FAULT in stats and isa.STATUS_OK in stats
+    before = mem.copy()
+    for name, res in all_engines(vop, rt, mem, params):
+        assert_fault_parity(res, seq, rs)
+        # containment: a faulted lane's reply slot is untouched
+        for i, r in enumerate(rs):
+            if r.status == isa.STATUS_PROT_FAULT:
+                reply = rt["reply"]
+                lo = reply.base + i * ops.NODE_WORDS
+                assert np.array_equal(res.mem[0, lo:lo + ops.NODE_WORDS],
+                                      before[0, lo:lo + ops.NODE_WORDS]), name
+
+
+def test_fault_parity_gather_chain_partial_commit():
+    """A stale block-table entry faults the fused gather-chain superop
+    mid-loop: iterations before the bad block commit (registers, steps,
+    reply words), the faulting MEMCPY and everything after are
+    suppressed — identically on the oracle, the dense engine, and both
+    compiled traces."""
+    kv = ops.PagedKVFetch(n_blocks_pool=16, block_bytes=512,
+                          max_req_blocks=4, reply_slots=4)
+    rt = kv.regions()
+    W = kv.block_words
+    vop = verify(kv.build(rt, reply_param=True), grant=Grant.all_of(rt),
+                 regions=rt)
+    mem = memory.make_pool(1, rt)
+    kv.populate(mem, rt)
+    kv.make_request(mem, rt, [0, 1, 2, 3])
+    # block id 2 now translates to a wild physical offset
+    bt = rt["blocktable"]
+    mem[0, bt.base + 2] = 10**9
+    # lane i fetches the first n_i blocks into its own reply slot:
+    # n <= 2 never touches block 2, n >= 3 faults on its third iteration
+    params = [[n, i * kv.max_req_blocks * W] for i, n in
+              enumerate([1, 3, 2, 4])]
+    seq, rs = run_oracle(vop, rt, mem, params)
+    assert [r.status for r in rs] == [isa.STATUS_OK, isa.STATUS_PROT_FAULT,
+                                      isa.STATUS_OK, isa.STATUS_PROT_FAULT]
+    for r in (rs[1], rs[3]):
+        assert r.fault.opcode == int(isa.Op.MEMCPY)
+        assert r.fault.addr == 10**9          # the wild source offset
+    # partial commit: two clean iterations preceded the fault
+    assert rs[1].steps > rs[0].steps
+    for name, res in all_engines(vop, rt, mem, params):
+        assert_fault_parity(res, seq, rs)
+
+
+def test_failed_device_word_op_faults():
+    """A word op homed on a failed device takes a protection fault whose
+    FaultInfo names the dead device; lanes on healthy homes are
+    unaffected.  Parity across every engine."""
+    rt = memory.packed_table([("data", 64), ("reply", 64)])
+    b = OperatorBuilder("sum2", n_params=2, regions=rt)
+    x, y = b.reg(), b.reg()
+    b.load(x, "data", b.param(0))
+    b.load(y, "data", b.param(0), disp=1)
+    b.add(x, x, y)
+    b.store(x, "reply", b.param(1))
+    b.ret(x)
+    vop = verify(b.build(), grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(2, rt)
+    mem[:, rt["data"].base:rt["data"].end] = \
+        np.arange(10, 74).reshape(1, -1) * np.asarray([[1], [2]])
+    params = [[2 * i, i] for i in range(4)]
+    homes = [0, 1, 0, 1]
+    seq, rs = run_oracle(vop, rt, mem, params, homes=homes, failed={1})
+    assert [r.status for r in rs] == [isa.STATUS_OK, isa.STATUS_PROT_FAULT,
+                                      isa.STATUS_OK, isa.STATUS_PROT_FAULT]
+    for r in (rs[1], rs[3]):
+        assert r.fault.device == 1
+        assert r.fault.opcode == int(isa.Op.LOAD)
+        assert r.fault.pc == 0                # first word op of the body
+    for name, res in all_engines(vop, rt, mem, params, homes=homes,
+                                 failed={1}):
+        assert_fault_parity(res, seq, rs)
+
+
+def test_protect_false_legacy_wrap():
+    """protect=False restores the legacy wrap-on-oob semantics: the wild
+    chase completes with STATUS_OK, no fault is recorded, and the
+    compiled trace still matches the oracle."""
+    w = ops.GraphWalk(n_nodes=16, max_depth=8)
+    rt = w.regions()
+    vop = verify(w.build(rt), grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(1, rt)
+    order = w.populate(mem, rt)
+    mem[0, rt["graph"].base + int(order[0]) * 8 + 1] = -77
+    params = [int(order[0]) * 8, 4]
+    r_py = pyvm.run(vop, rt, mem.copy(), params, protect=False)
+    assert r_py.status == isa.STATUS_OK and r_py.fault is None
+    r_jx = vm.invoke(vop, rt, mem.copy(), params, protect=False)
+    assert (r_jx.ret, r_jx.status, r_jx.steps) == \
+        (r_py.ret, r_py.status, r_py.steps)
+    assert r_jx.fault is None
+    rc = tc.invoke_compiled(vop, rt, mem.copy(), [params], protect=False)
+    assert rc.status[0] == isa.STATUS_OK and rc.fault_at(0) is None
+    assert np.array_equal(rc.mem, r_py.mem)
+
+
+# ---------------------------------------------------------------------------
+# 2. Failed-device MEMCPY = degraded mode (ERR_REG), not a fault
+# ---------------------------------------------------------------------------
+
+def _rcpy(rt, *, is_async, src_side=True, n_words=4):
+    """MEMCPY with the remote device id in a register param; the other
+    side is home-local."""
+    b = OperatorBuilder("rcpy", n_params=1, regions=rt)
+    zero = b.const(0)
+    if src_side:
+        b.memcpy(dst_region="reply", dst_off=zero,
+                 src_region="data", src_off=zero, n_words=n_words,
+                 src_dev=b.param(0), is_async=is_async)
+    else:
+        b.memcpy(dst_region="reply", dst_off=zero, dst_dev=b.param(0),
+                 src_region="data", src_off=zero, n_words=n_words,
+                 is_async=is_async)
+    if is_async:
+        b.wait(0)
+    b.ret(b.const(7))
+    return verify(b.build(), grant=Grant.all_of(rt), regions=rt)
+
+
+def _rcpy_pool(rt):
+    mem = memory.make_pool(2, rt)
+    d = rt["data"]
+    mem[0, d.base:d.end] = np.arange(100, 100 + d.size)
+    mem[1, d.base:d.end] = np.arange(500, 500 + d.size)
+    return mem
+
+
+@pytest.mark.parametrize("src_side", [True, False],
+                         ids=["src_failed", "dst_failed"])
+@pytest.mark.parametrize("is_async", [False, True],
+                         ids=["sync", "async"])
+def test_failed_device_memcpy_sets_err_reg(src_side, is_async):
+    """The paper's §3.2 degraded mode: a MEMCPY whose remote side is a
+    *failed* device sets ERR_REG bit 0 and drops the copy — the lane
+    does NOT fault, the operator runs to completion, and (async) the
+    doomed transfer still occupies an in-flight slot so the WAIT that
+    follows keeps its semantics."""
+    rt = memory.packed_table([("data", 16), ("reply", 16)])
+    vop = _rcpy(rt, is_async=is_async, src_side=src_side)
+    mem = _rcpy_pool(rt)
+    before = mem.copy()
+    r = pyvm.run(vop, rt, mem, [1], home=0, failed={1},
+                 record_trace=True)
+    assert r.status == isa.STATUS_OK and r.fault is None
+    assert r.ret == 7
+    assert np.asarray(r.regs)[isa.ERR_REG] & 1
+    # the copy was dropped: neither pool changed anywhere
+    assert np.array_equal(mem, before)
+    if is_async:
+        evs = [e.op for e in r.trace]
+        assert isa.Op.MEMCPY in evs and isa.Op.WAIT in evs
+    # engine parity, including the suppressed copy and the ERR register
+    r_jx = vm.invoke(vop, rt, before.copy(), [1], home=0, failed={1})
+    assert (r_jx.ret, r_jx.status, r_jx.steps) == (r.ret, r.status, r.steps)
+    assert np.array_equal(r_jx.regs, np.asarray(r.regs))
+    assert np.array_equal(r_jx.mem, before)
+    assert r_jx.fault is None
+
+
+def test_failed_memcpy_inflight_slots_then_wait():
+    """Several doomed async copies in a row: each still takes an
+    in-flight slot (bounded by MAX_INFLIGHT) and WAIT(0) joins them all
+    without stalling forever; a healthy copy issued afterwards still
+    lands."""
+    rt = memory.packed_table([("data", 16), ("reply", 16)])
+    b = OperatorBuilder("burst", n_params=1, regions=rt)
+    zero = b.const(0)
+    for _ in range(3):
+        b.memcpy(dst_region="reply", dst_off=zero,
+                 src_region="data", src_off=zero, n_words=4,
+                 src_dev=b.param(0), is_async=True)
+    b.wait(0)
+    b.memcpy(dst_region="reply", dst_off=zero,
+             src_region="data", src_off=zero, n_words=4)   # local, healthy
+    b.ret(zero)
+    vop = verify(b.build(), grant=Grant.all_of(rt), regions=rt)
+    mem = _rcpy_pool(rt)
+    r = pyvm.run(vop, rt, mem, [1], home=0, failed={1})
+    assert r.status == isa.STATUS_OK
+    assert np.asarray(r.regs)[isa.ERR_REG] & 1
+    rep = rt["reply"]
+    assert np.array_equal(mem[0, rep.base:rep.base + 4],
+                          np.arange(100, 104))   # the local copy landed
+    r_jx = vm.invoke(vop, rt, _rcpy_pool(rt), [1], home=0, failed={1})
+    assert np.array_equal(r_jx.mem, mem)
+    assert np.array_equal(r_jx.regs, np.asarray(r.regs))
+
+
+# ---------------------------------------------------------------------------
+# 3. Endpoint: CQE faults, QP error state, flush, reset
+# ---------------------------------------------------------------------------
+
+def _graph_endpoint(n_tenants=2, n_devices=1, **kwargs):
+    w = ops.GraphWalk(n_nodes=32, max_depth=8,
+                      reply_words=4 * ops.NODE_WORDS)
+    named = [(f"t{i}", w.regions()) for i in range(n_tenants)]
+    ep, sessions = TiaraEndpoint.for_tenants(named, n_devices=n_devices,
+                                             **kwargs)
+    orders = {}
+    for i in range(n_tenants):
+        s = sessions[f"t{i}"]
+        s.register(w.build(s.view, reply_param=True))
+        orders[f"t{i}"] = w.populate(s.pool, s.view, seed=i)
+    return ep, [sessions[f"t{i}"] for i in range(n_tenants)], orders, w
+
+
+def test_endpoint_fault_cqe_session_error_and_reset():
+    ep, (s0, s1), orders, w = _graph_endpoint()
+    o0, o1 = orders["t0"], orders["t1"]
+    # tear t0's ring only — injected as a declarative pre-wave plan
+    ep.inject(faults.corrupt_words(
+        [(0, s0.view["graph"].base + int(o0[0]) * 8 + 1, -77)]))
+    bad = s0.post("graph_walk", [int(o0[0]) * 8, 2, 0])
+    good = s1.post("graph_walk", [int(o1[0]) * 8, 2, 0])
+    ep.doorbell()
+    # the CQE carries the decoded fault
+    assert bad.faulted and bad.fault is not None
+    assert bad.fault.addr == -76          # load of torn_ptr + 1
+    assert bad.event.fault == bad.fault and bad.event.faulted
+    # ... and errors exactly the owning session
+    assert s0.in_error and s0.error == bad.fault
+    assert not s1.in_error and good.ok
+    assert good.ret == w.reference(o1, int(o1[0]), 2)
+    # QP in error: new posts are flushed without executing
+    c2 = s0.post("graph_walk", [int(o0[5]) * 8, 1, 8])
+    assert c2.done and c2.flushed and c2.status == isa.STATUS_FLUSHED
+    assert c2.event.wave == -1
+    # result(check=True) surfaces the fault, result(check=False) doesn't
+    with pytest.raises(EndpointError, match="pc"):
+        bad.result()
+    assert c2.result(check=False) == 0
+    # reset + repair -> posts flow again
+    s0.reset()
+    assert not s0.in_error and s0.error is None
+    w.populate(s0.pool, s0.view, seed=0)       # heal the torn pointer
+    c3 = s0.post("graph_walk", [int(o0[0]) * 8, 2, 0])
+    ep.doorbell()
+    assert c3.ok and c3.ret == w.reference(o0, int(o0[0]), 2)
+
+
+def test_endpoint_same_wave_concurrent_flush_after():
+    """Posts launched in the same wave as the faulting one are
+    concurrent and retire with their real results; posts that arrive
+    after the launch are flushed at retirement."""
+    ep, (s0, _), orders, w = _graph_endpoint()
+    o0 = orders["t0"]
+    ep.inject(faults.corrupt_words(
+        [(0, s0.view["graph"].base + int(o0[0]) * 8 + 1, -5_000)]))
+    bad = s0.post("graph_walk", [int(o0[0]) * 8, 2, 0])
+    peer = s0.post("graph_walk", [int(o0[9]) * 8, 3, 8])  # clean arc
+    h = ep.doorbell(wait=False)
+    late = s0.post("graph_walk", [int(o0[9]) * 8, 1, 16])
+    ep.wait_all()
+    assert bad.faulted
+    assert peer.ok and peer.ret == w.reference(o0, int(o0[9]), 3)
+    assert late.flushed                  # in the SQ at retirement time
+    # FIFO: the CQ drains in post order, flushed entries included
+    polled = s0.poll_cq()
+    assert [c.seq for c in polled] == [bad.seq, peer.seq, late.seq]
+
+
+def test_endpoint_transient_doorbell_retry_and_exhaustion():
+    ep, (s0, _), orders, w = _graph_endpoint(retry_limit=3,
+                                             retry_backoff_s=0.0)
+    o0 = orders["t0"]
+    c = s0.post("graph_walk", [int(o0[0]) * 8, 2, 0])
+    # two lost doorbells: absorbed by the bounded retry
+    ep.inject(faults.drop_doorbells(2))
+    assert ep.doorbell() == 1
+    assert c.ok and c.ret == w.reference(o0, int(o0[0]), 2)
+    # retry_limit+1 losses: the doorbell raises, the wave is requeued
+    c2 = s0.post("graph_walk", [int(o0[3]) * 8, 1, 8])
+    ep.inject(faults.drop_doorbells(4))
+    with pytest.raises(faults.TransientError):
+        ep.doorbell()
+    assert not c2.done and s0.outstanding == 1 and ep.outstanding == 1
+    # the injection is exhausted: ringing again succeeds, exactly once
+    assert ep.doorbell() == 1
+    assert c2.ok and c2.ret == w.reference(o0, int(o0[3]), 1)
+
+
+def test_endpoint_poison_materialize_no_lost_cqes():
+    ep, (s0, _), orders, w = _graph_endpoint()
+    o0 = orders["t0"]
+    c = s0.post("graph_walk", [int(o0[2]) * 8, 3, 0])
+    h = ep.doorbell(wait=False)
+    ep.inject(faults.poison_materialize(1))
+    with pytest.raises(faults.InjectedEngineError):
+        ep.wait_all()
+    # the wave survived the failed retirement: still queued, no CQE lost
+    assert not c.done and ep.in_flight_waves == 1
+    # the poison is consumed; the next (blocking) wait retries the
+    # materialization and delivers the CQE exactly once
+    assert ep.wait_all() == 1
+    assert c.done and c.ok and ep.in_flight_waves == 0
+    assert s0.poll_cq() == [c]
+    assert s0.poll_cq() == []
+
+
+def test_endpoint_failed_device_fault_and_auto_placement_degrade():
+    """A post homed on a failed device faults with the device named in
+    the CQE, and ``placement="auto"`` refuses the mesh while any device
+    is failed (the single-chip engines model the failure exactly; the
+    mesh would compute through the dead chip)."""
+    import jax
+    n_dev = max(len(jax.devices()), 2)
+    ep, (s0, s1), orders, w = _graph_endpoint(n_devices=n_dev)
+    o0, o1 = orders["t0"], orders["t1"]
+    dead = n_dev - 1
+    # t1's working set lives on the device about to die (same seed, so
+    # the same ring as its device-0 copy)
+    w.populate(s1.pool, s1.view, device=dead, seed=1)
+    ep.inject(faults.fail_devices(dead))
+    cs = [s0.post("graph_walk", [int(o0[0]) * 8, 2, 0], home=0),
+          s1.post("graph_walk", [int(o1[0]) * 8, 2, 0], home=dead)]
+    ep.doorbell(placement="auto")
+    assert ep.last_placement is not None
+    assert ep.last_placement.mode != "sharded"
+    assert cs[0].ok
+    assert cs[1].faulted and cs[1].fault.device == dead
+    # the failure errored only the session that posted to the dead chip
+    assert s1.in_error and not s0.in_error
+    # revive + reset: the same post now completes
+    ep.revive(dead)
+    s1.reset()
+    c = s1.post("graph_walk", [int(o1[0]) * 8, 2, 0], home=dead)
+    ep.doorbell()
+    assert c.ok and c.ret == w.reference(o1, int(o1[0]), 2)
+
+
+# ---------------------------------------------------------------------------
+# 4. Harness: plan algebra, validation, simulator aborts
+# ---------------------------------------------------------------------------
+
+def test_faultplan_compose_and_validate():
+    plan = (faults.fail_devices(1, 3) + faults.corrupt_words([(0, 5, -9)])
+            + faults.drop_doorbells(2) + faults.poison_materialize())
+    assert plan.fail_devices == frozenset({1, 3})
+    assert plan.corrupt == ((0, 5, -9),)
+    assert plan.transient_launch_failures == 2
+    assert plan.poison_materialize == 1
+    assert not plan.empty and faults.FaultPlan().empty
+    with pytest.raises(ValueError):
+        faults.FaultPlan(transient_launch_failures=-1)
+    with pytest.raises(ValueError):
+        faults.FaultPlan(poison_materialize=-2)
+
+
+def test_endpoint_inject_validates_and_clears():
+    ep, (s0, _), orders, _ = _graph_endpoint()
+    with pytest.raises(EndpointError, match="outside"):
+        ep.inject(faults.corrupt_words([(7, 0, 1)]))       # no device 7
+    with pytest.raises(EndpointError, match="outside"):
+        ep.inject(faults.corrupt_words(
+            [(0, ep.regions.pool_words, 1)]))              # word oob
+    ep.inject(faults.fail_devices(0) + faults.drop_doorbells(1)
+              + faults.poison_materialize(2))
+    assert ep.failed_devices == {0}
+    ep.clear_faults()
+    assert not ep.failed_devices
+    assert ep._transient_left == 0 and ep._poison_left == 0
+    # a cleared endpoint dispatches cleanly
+    o0 = orders["t0"]
+    c = s0.post("graph_walk", [int(o0[0]) * 8, 1, 0])
+    ep.doorbell()
+    assert c.ok
+
+
+def test_simulator_midflight_abort():
+    """``fail_memcpy_at`` aborts the i-th transfer halfway: half the
+    payload crosses, the abort is counted, and timing stays causal
+    (an aborted transfer never takes longer than a full one)."""
+    from repro.core import simulator
+    w = ops.GraphWalk(n_nodes=16, max_depth=8)
+    rt = w.regions()
+    vop = verify(w.build(rt), grant=Grant.all_of(rt), regions=rt)
+    mem = memory.make_pool(1, rt)
+    order = w.populate(mem, rt)
+    r = pyvm.run(vop, rt, mem, [int(order[0]) * 8, 4], record_trace=True)
+    base = simulator.simulate_task(vop, r.trace)
+    hurt = simulator.simulate_task(vop, r.trace, fail_memcpy_at=[0])
+    assert base.failed_transfers == 0
+    assert hurt.failed_transfers == 1
+    assert hurt.dma_bulk_bytes == base.dma_bulk_bytes // 2
+    assert hurt.nic_resident_us <= base.nic_resident_us
+    # an index past the trace's transfer count is a no-op
+    none = simulator.simulate_task(vop, r.trace, fail_memcpy_at=[99])
+    assert none.failed_transfers == 0
+    assert none.dma_bulk_bytes == base.dma_bulk_bytes
+
+
+# ---------------------------------------------------------------------------
+# 5. Completion.result() is a consuming read (regression)
+# ---------------------------------------------------------------------------
+
+def test_result_consuming_read_and_poll_interplay():
+    ep, (s0, _), orders, w = _graph_endpoint()
+    o0 = orders["t0"]
+    want = w.reference(o0, int(o0[0]), 2)
+    # result() consumes the CQE: a later poll never sees it again
+    c = s0.post("graph_walk", [int(o0[0]) * 8, 2, 0])
+    assert c.result() == want
+    assert s0.poll_cq() == []
+    # result() is idempotent on an already-consumed handle
+    assert c.result() == want
+    # poll-then-result: the identity scan tolerates an absent handle
+    c2 = s0.post("graph_walk", [int(o0[0]) * 8, 2, 0])
+    ep.doorbell()
+    assert s0.poll_cq() == [c2]
+    assert c2.result() == want
+    assert s0.poll_cq() == []
+
+
+# ---------------------------------------------------------------------------
+# 6. Hypothesis chaos property (slow): random tears + failed devices
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_chaos_parity_property():
+    """Random pointer tears x random failed-device sets x random walk
+    params: the dense and compiled engines stay bit-identical to the
+    sequential oracle — statuses, steps, registers, fault rows, memory
+    — on a disjoint-write wave over a two-device pool."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    B = 4
+    w = ops.GraphWalk(n_nodes=16, max_depth=8,
+                      reply_words=B * ops.NODE_WORDS)
+    rt = w.regions()
+    vop = verify(w.build(rt, reply_param=True), grant=Grant.all_of(rt),
+                 regions=rt)
+
+    @settings(max_examples=12, deadline=None)
+    @given(tears=st.lists(
+               st.tuples(st.integers(0, 15), st.integers(-2**40, 2**40)),
+               min_size=0, max_size=3),
+           failed=st.sets(st.integers(0, 1), max_size=2),
+           seed=st.integers(0, 2**31 - 1))
+    def prop(tears, failed, seed):
+        rng = np.random.default_rng(seed)
+        mem = memory.make_pool(2, rt)
+        orders = [w.populate(mem, rt, device=d, seed=seed + d)
+                  for d in range(2)]
+        g = rt["graph"]
+        for node, val in tears:
+            mem[rng.integers(0, 2), g.base + node * 8 + 1] = val
+        homes = [int(h) for h in rng.integers(0, 2, size=B)]
+        params = [[int(orders[homes[i]][rng.integers(0, 16)]) * 8,
+                   int(rng.integers(0, 8)), i * ops.NODE_WORDS]
+                  for i in range(B)]
+        seq, rs = run_oracle(vop, rt, mem, params, homes=homes,
+                             failed=failed)
+        for name, res in all_engines(vop, rt, mem, params, homes=homes,
+                                     failed=failed):
+            assert_fault_parity(res, seq, rs)
+
+    prop()

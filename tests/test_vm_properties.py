@@ -121,7 +121,10 @@ def test_vm_matches_oracle_and_terminates(op_spec):
 @given(st.integers(0, 2**63 - 1), st.integers(0, 31), st.integers(1, 30))
 def test_pointer_chase_isolation(start, depth, seed):
     """Adversarial pointer chase: arbitrary garbage pointers in memory can
-    never leak reads/writes outside the region (offset masking)."""
+    never leak reads/writes outside the region.  A garbage pointer that
+    leaves the granted region now takes a runtime protection fault (the
+    lane halts with every write suppressed) instead of silently
+    wrapping; either way nothing outside the grant changes."""
     from repro.core import operators as ops
     w = ops.GraphWalk(n_nodes=16, max_depth=32)
     rt = w.regions()
@@ -131,12 +134,16 @@ def test_pointer_chase_isolation(start, depth, seed):
                        size=(1, rt.pool_words)).astype(np.int64)
     before = mem.copy()
     r = vm.invoke(vop, rt, mem, [start, depth])
-    assert r.status in (isa.STATUS_OK,)
+    assert r.status in (isa.STATUS_OK, isa.STATUS_PROT_FAULT)
+    assert (r.fault is not None) == (r.status == isa.STATUS_PROT_FAULT)
     reply = rt["reply"]
     changed = r.mem[0] != before[0]
     outside = np.ones(rt.pool_words, bool)
     outside[reply.base:reply.end] = False
     assert not changed[outside].any()
+    if r.status == isa.STATUS_PROT_FAULT:
+        # containment: the faulting lane's writes are fully suppressed
+        assert not changed.any()
 
 
 @settings(max_examples=20, deadline=None)
