@@ -36,7 +36,31 @@ _MEASURED = ("us_per_call", "ops_per_s", "subwave_ops_per_s", "parity_ok",
              "nic_us_async", "nic_us_serialized", "learned_overlap",
              # bench_fault_overhead: the unprotected build's side of the
              # gated speedup_protect ratio
-             "us_per_call_noprotect", "ops_per_s_noprotect")
+             "us_per_call_noprotect", "ops_per_s_noprotect",
+             # bench_serving: overload outcome counters, latency tails,
+             # and the hard invariant bits — measurements, not identity
+             "submitted", "executed", "ok", "timed_out", "rejected",
+             "shed", "goodput_frac", "fairness_min_share",
+             "p50_x_deadline", "p99_x_deadline", "deterministic_ok",
+             "inflight_bound_ok", "p50_ms_wall", "p99_ms_wall")
+
+# gated non-speedup metrics.  Lower-bounded metrics fail when the
+# current value drops more than the band below baseline (like
+# speedups); upper-bounded ones fail when it RISES more than the band
+# above (latency tails).  The serving virtual section runs entirely on
+# a seeded VirtualClock — the values are bit-stable across hosts — so
+# the bands only absorb intentional small policy retunes, not noise.
+_GATED_LOWER = ("goodput_frac", "fairness_min_share")
+_GATED_UPPER = ("p99_x_deadline",)
+
+# hard correctness bits, checked unconditionally on every current
+# record that carries them (missing = not applicable = pass)
+_HARD_BITS = {
+    "parity_ok": "engine output diverged from the pyvm oracle",
+    "deterministic_ok": "same-seed overload runs produced different "
+                        "per-seq CQE statuses",
+    "inflight_bound_ok": "in-flight waves exceeded max_inflight_waves",
+}
 
 # per-metric thresholds overriding --threshold: some normalizers are
 # noisier than the in-run serial baseline the 30% default was designed
@@ -59,7 +83,12 @@ _MEASURED = ("us_per_call", "ops_per_s", "subwave_ops_per_s", "parity_ok",
 # protection checks.
 _METRIC_THRESHOLDS = {"speedup_vs_single": 0.75,
                       "speedup_vs_interp": 0.5,
-                      "speedup_protect": 0.15}
+                      "speedup_protect": 0.15,
+                      # serving virtual metrics are deterministic
+                      # (seeded VirtualClock); tight bands
+                      "goodput_frac": 0.05,
+                      "fairness_min_share": 0.05,
+                      "p99_x_deadline": 0.10}
 
 
 def _identity(rec: dict) -> Tuple:
@@ -70,7 +99,8 @@ def _identity(rec: dict) -> Tuple:
 
 
 def _speedup_keys(rec: dict) -> List[str]:
-    return [k for k in rec if k.startswith("speedup")]
+    return ([k for k in rec if k.startswith("speedup")]
+            + [k for k in _GATED_LOWER if k in rec])
 
 
 def _index(payload: dict) -> Dict[Tuple, dict]:
@@ -87,14 +117,14 @@ def compare_file(name: str, baseline: dict, current: dict,
     compared = 0
     base_idx = _index(baseline)
     cur_idx = _index(current)
-    # parity is the hard correctness bit, checked on EVERY current
-    # record — a bit-parity break at a shape the committed baseline
-    # never covered (e.g. quick-mode sub-wave widths) must still fail
+    # hard correctness bits, checked on EVERY current record — a
+    # bit-parity (or determinism/bound) break at a shape the committed
+    # baseline never covered must still fail
     for ident, cur_rec in cur_idx.items():
-        if not cur_rec.get("parity_ok", True):
-            fails.append(
-                f"{name}: {dict(ident)}: parity_ok is False — engine "
-                f"output diverged from the pyvm oracle")
+        for bit, why in _HARD_BITS.items():
+            if not cur_rec.get(bit, True):
+                fails.append(
+                    f"{name}: {dict(ident)}: {bit} is False — {why}")
     for ident, base_rec in base_idx.items():
         cur_rec = cur_idx.get(ident)
         if cur_rec is None:
@@ -113,6 +143,20 @@ def compare_file(name: str, baseline: dict, current: dict,
                     f"{base_v:.2f} -> {cur_v:.2f} "
                     f"({cur_v / base_v:.0%} of baseline, "
                     f"threshold {thr:.0%})")
+        for k in _GATED_UPPER:
+            if k not in base_rec or k not in cur_rec:
+                continue
+            base_v, cur_v = float(base_rec[k]), float(cur_rec[k])
+            if base_v <= 0:
+                continue
+            compared += 1
+            thr = _METRIC_THRESHOLDS.get(k, threshold)
+            if cur_v > base_v * (1.0 + thr):
+                fails.append(
+                    f"{name}: {dict(ident)}: {k} regressed upward "
+                    f"{base_v:.2f} -> {cur_v:.2f} "
+                    f"({cur_v / base_v:.0%} of baseline, "
+                    f"ceiling +{thr:.0%})")
     # a baseline file that carries speedup records but matched nothing
     # is a silent coverage hole (e.g. the CI device count diverged from
     # the committed baseline's), not a pass

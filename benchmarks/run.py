@@ -17,14 +17,16 @@ import json
 import os
 import signal
 import sys
+import threading
 import time
 import traceback
+import warnings
 
 from benchmarks import (bench_async_overlap, bench_fault_overhead,
                         bench_graph, bench_lock, bench_mixed_batch,
                         bench_moe, bench_offload, bench_paged_attention,
-                        bench_ptw, bench_sharded, bench_table1,
-                        bench_vm_throughput)
+                        bench_ptw, bench_serving, bench_sharded,
+                        bench_table1, bench_vm_throughput)
 from benchmarks._workbench import fmt_table
 
 # Per-module wall-clock budget: one hung bench (an XLA compile gone
@@ -40,8 +42,18 @@ class ModuleTimeout(Exception):
 @contextlib.contextmanager
 def _deadline(seconds: int, key: str):
     """SIGALRM-based wall-clock cap around one module (main thread,
-    POSIX only — a no-op where SIGALRM is unavailable)."""
+    POSIX only — a no-op where SIGALRM is unavailable).  ``signal()``
+    raises ``ValueError`` off the main thread (e.g. the harness driven
+    from a worker thread of an embedding process), so warn and run
+    uncapped instead of crashing every module."""
     if seconds <= 0 or not hasattr(signal, "SIGALRM"):
+        yield
+        return
+    if threading.current_thread() is not threading.main_thread():
+        warnings.warn(
+            f"benchmark module {key!r}: SIGALRM timeout unavailable off "
+            f"the main thread; running without a wall-clock cap",
+            RuntimeWarning, stacklevel=2)
         yield
         return
 
@@ -77,6 +89,8 @@ MODULES = [
      bench_async_overlap),
     ("fault_overhead", "Runtime protection cost on the fault-free path",
      bench_fault_overhead),
+    ("serving", "Overload-safe serving loop: goodput and tails at 2x",
+     bench_serving),
 ]
 
 

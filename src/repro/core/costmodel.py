@@ -14,7 +14,7 @@ with the anchor).  Benchmarks print derived vs. paper-claimed side by side.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -466,6 +466,11 @@ class DispatchCostModel:
 
     def __init__(self, cost: Optional[EngineCost] = None):
         self.cost = cost or EngineCost()
+        # online calibration state (see observe_dispatch/observe_conflicts):
+        # per-(slot key, engine mode) wall-clock scale EWMAs and per-slot
+        # conflict-rate EWMAs, both fed by the endpoint while serving
+        self._scales: Dict[Tuple[Optional[int], str], float] = {}
+        self._conflicts: Dict[Optional[int], float] = {}
 
     # -- online overlap learning ------------------------------------------
 
@@ -492,6 +497,121 @@ class DispatchCostModel:
         self.cost = dataclasses.replace(self.cost, dbuf_overlap=new)
         return new
 
+    # -- online wall-clock calibration (the observe_overlap pattern,
+    #    generalized to every engine) -------------------------------------
+    #
+    # The static [calib] constants carry the engines' *relative shape*;
+    # the running host's absolute costs drift (dispatch overhead, cache
+    # state, oversubscription).  The endpoint times every retired wave
+    # and feeds ``observe_dispatch``: a per-(slot key, engine mode) EWMA
+    # of measured/predicted wall clock, clamped and keyed exactly like
+    # the decision that will consume it, so ``mode="auto"`` and the
+    # serving loop's wave-formation policy adapt online while serving
+    # instead of relying on a one-shot ``EngineCost.measured()``
+    # calibration.  ``key`` is the operator's slot id for single-op
+    # waves and ``None`` (the wave-global bucket) for mixed waves; every
+    # per-key observation also updates the global bucket, which is the
+    # fallback for keys not yet seen.
+
+    DISPATCH_EWMA_ALPHA = 0.2      # EWMA weight of one wave observation
+    CONFLICT_EWMA_ALPHA = 0.2      # EWMA weight of one conflict sample
+    _SCALE_CLAMP = (1.0 / 16.0, 16.0)   # one bad sample can't poison auto
+
+    def _unscaled_us(self, mode: str, *, batch: int, step_bound: int,
+                     contention_rate: float = 0.0,
+                     chain_iters: int = 0) -> Optional[float]:
+        """The analytical (pre-EWMA) prediction for one wave on ``mode``,
+        or None for modes the model has no closed form for (sharded
+        placements, segmented plans without their stats)."""
+        if mode in ("mixed", "batched", "interp"):
+            return self.cost.batched_us(batch, step_bound, contention_rate)
+        if mode == "compiled":
+            return self.cost.compiled_us(batch, step_bound)
+        if mode == "compiled_dbuf":
+            return self.cost.compiled_dbuf_us(batch, step_bound,
+                                              chain_iters)
+        return None
+
+    def observe_dispatch(self, key: Optional[int], mode: str, *,
+                         batch: int, step_bound: int, measured_us: float,
+                         contention_rate: float = 0.0,
+                         chain_iters: int = 0) -> Optional[float]:
+        """Learn from one retired wave: EWMA the ratio of measured wall
+        clock to the *unscaled* analytical prediction into the
+        ``(key, mode)`` scale (and the global ``(None, mode)`` fallback).
+        Returns the new per-key scale, or None when the mode has no
+        analytical form (nothing learned)."""
+        pred = self._unscaled_us(mode, batch=batch, step_bound=step_bound,
+                                 contention_rate=contention_rate,
+                                 chain_iters=chain_iters)
+        if pred is None or pred <= 0.0 or measured_us <= 0.0:
+            return None
+        lo, hi = self._SCALE_CLAMP
+        ratio = min(max(measured_us / pred, lo), hi)
+        a = self.DISPATCH_EWMA_ALPHA
+        for k in {(key, mode), (None, mode)}:
+            prev = self._scales.get(k, 1.0)
+            self._scales[k] = (1 - a) * prev + a * ratio
+        return self._scales[(key, mode)]
+
+    def dispatch_scale(self, key: Optional[int], mode: str) -> float:
+        """The learned wall-clock scale for ``(key, mode)``: per-key if
+        observed, else the global per-mode fallback, else 1.0."""
+        s = self._scales.get((key, mode))
+        if s is None:
+            s = self._scales.get((None, mode), 1.0)
+        return s
+
+    def observe_conflicts(self, key: Optional[int], rate: float) -> float:
+        """EWMA one wave's conflict (contended-footprint) rate into the
+        per-slot estimate ``conflict_hint`` serves back as the default
+        contention hint for future waves of the same operator."""
+        rate = min(max(float(rate), 0.0), 1.0)
+        a = self.CONFLICT_EWMA_ALPHA
+        for k in {key, None}:
+            prev = self._conflicts.get(k, 0.0)
+            self._conflicts[k] = (1 - a) * prev + a * rate
+        return self._conflicts[key]
+
+    def conflict_hint(self, key: Optional[int] = None) -> float:
+        """The learned conflict rate for a slot (global fallback; 0.0
+        before any observation)."""
+        c = self._conflicts.get(key)
+        if c is None:
+            c = self._conflicts.get(None, 0.0)
+        return c
+
+    def wave_us(self, *, batch: int, step_bound: int,
+                key: Optional[int] = None, mode: str = "mixed",
+                contention_rate: float = 0.0,
+                chain_iters: int = 0) -> float:
+        """Scaled wall-clock prediction for one wave — the serving
+        loop's formation-policy estimate (analytical shape x learned
+        host scale)."""
+        pred = self._unscaled_us(mode, batch=batch, step_bound=step_bound,
+                                 contention_rate=contention_rate,
+                                 chain_iters=chain_iters)
+        if pred is None:
+            pred = self.cost.batched_us(batch, step_bound, contention_rate)
+        return pred * self.dispatch_scale(key, mode)
+
+    def launch_efficiency(self, *, batch: int, step_bound: int,
+                          key: Optional[int] = None,
+                          mode: str = "mixed",
+                          contention_rate: float = 0.0) -> float:
+        """Fraction of a wave's predicted cost that is per-lane (useful)
+        work rather than launch/macro-step overhead — monotone in batch
+        size, -> 1 as the wave widens.  The continuous batcher rings
+        when this crosses its efficiency floor: below it, waiting for
+        more posts amortizes the launch better than launching now."""
+        total = self.wave_us(batch=batch, step_bound=step_bound, key=key,
+                             mode=mode, contention_rate=contention_rate)
+        per_lane = (batch * step_bound * self.cost.vlane_us
+                    * self.dispatch_scale(key, mode))
+        if total <= 0.0:
+            return 1.0
+        return min(per_lane / total, 1.0)
+
     # -- single-op waves --------------------------------------------------
 
     def choose_batched(self, *, batch: int, step_bound: int,
@@ -500,7 +620,8 @@ class DispatchCostModel:
                        chain_iters: int = 0,
                        batched_cached: bool = True,
                        compiled_cached: bool = True,
-                       dbuf_cached: bool = True) -> DispatchDecision:
+                       dbuf_cached: bool = True,
+                       key: Optional[int] = None) -> DispatchDecision:
         """Pick the engine for a single-op wave: "batched" (the lockstep
         interpreter; at B=1 this *is* the classic scalar MP datapath),
         "compiled" (the straight-line trace), or "compiled_dbuf" (the
@@ -509,16 +630,22 @@ class DispatchCostModel:
         only when they are long enough for the learned overlap term to
         beat the chunk-scheduling cost).  ``*_cached`` flags charge the
         amortized XLA-compile cost for engines not yet built at this
-        batch size."""
+        batch size.  ``key`` (the operator's slot id) applies that
+        slot's online-learned wall-clock scales to every candidate, so
+        the argmin adapts to the running host (see
+        :meth:`observe_dispatch`)."""
         costs = {"batched": self.cost.batched_us(batch, step_bound,
                                                  contention_rate,
-                                                 cached=batched_cached)}
+                                                 cached=batched_cached)
+                 * self.dispatch_scale(key, "batched")}
         if compilable and contention_rate <= 0.0:
             costs["compiled"] = self.cost.compiled_us(
-                batch, step_bound, cached=compiled_cached)
+                batch, step_bound, cached=compiled_cached) \
+                * self.dispatch_scale(key, "compiled")
             if chain_iters > 0:
                 costs["compiled_dbuf"] = self.cost.compiled_dbuf_us(
-                    batch, step_bound, chain_iters, cached=dbuf_cached)
+                    batch, step_bound, chain_iters, cached=dbuf_cached) \
+                    * self.dispatch_scale(key, "compiled_dbuf")
         mode = min(costs, key=costs.get)
         return DispatchDecision(mode=mode, costs=costs,
                                 contention_rate=contention_rate)
@@ -614,7 +741,8 @@ class DispatchCostModel:
 
     def choose_mixed(self, *, segments: Sequence[SegmentStats],
                      contention_rate: float = 0.0,
-                     mixed_cached: bool = True) -> DispatchDecision:
+                     mixed_cached: bool = True,
+                     key: Optional[int] = None) -> DispatchDecision:
         """Pick the engine for a mixed-op wave: "mixed" (one lockstep
         launch over the merged instruction store) vs "segmented"
         (stable-sort, one compiled/batched launch per same-op segment).
@@ -636,10 +764,12 @@ class DispatchCostModel:
             raise ValueError("mixed wave needs at least one segment")
         entropy = _entropy_bits([s.size for s in segments])
         costs = {"mixed": self.mixed_us(segments, contention_rate,
-                                        cached=mixed_cached)}
+                                        cached=mixed_cached)
+                 * self.dispatch_scale(key, "mixed")}
         if contention_rate <= 0.0:
             costs["segmented"] = self.segmented_us(segments,
-                                                   contention_rate)
+                                                   contention_rate) \
+                * self.dispatch_scale(key, "segmented")
         mode = min(costs, key=costs.get)
         return DispatchDecision(mode=mode, costs=costs,
                                 entropy_bits=entropy,

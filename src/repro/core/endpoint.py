@@ -45,7 +45,22 @@ in the queues.  This module is that surface in software:
 
 An optional ``flush_watermark`` auto-rings the doorbell once that many
 posts are outstanding across all sessions — the NIC analogue of a
-doorbell-batching driver.
+doorbell-batching driver.  Watermark rings are split-phase
+(``doorbell(wait=False)``): the triggering ``post()`` returns as soon as
+the wave is *launched*, so posts keep pipelining through an auto-ring.
+
+Overload semantics (the serving-loop substrate — see
+``core/serving_loop.py``): a ``max_sq_depth`` bounds each session's send
+queue — a post to a full SQ retires immediately with ``STATUS_EAGAIN``
+(the RNIC "queue full" errno) and never executes; a per-post
+``deadline_s`` is enforced at admission and again when the doorbell
+drains the queues — an expired post retires ``STATUS_TIMEOUT`` instead
+of joining the wave (the ``STATUS_FLUSHED`` retirement machinery from
+the QP error path, generalized).  An optional ``admission`` hook
+rejects posts before they are enqueued.  Time is injectable
+(``clock``/``sleep`` constructor hooks), so retry backoff, deadlines,
+and the fault harness's stall/delay injections run deterministically
+under a virtual clock.
 
 The PR-3 deprecated ``registry.invoke*`` shims are gone; this surface is
 the only way to invoke operators.
@@ -55,7 +70,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -91,7 +106,7 @@ class CompletionEvent:
     status: int
     steps: int
     wave: int             # doorbell wave id the post retired with
-    retired_at: float     # time.monotonic() at retirement
+    retired_at: float     # endpoint clock at retirement
     fault: Optional[isa.FaultInfo] = None   # set iff STATUS_PROT_FAULT
 
     @property
@@ -105,6 +120,14 @@ class CompletionEvent:
     @property
     def flushed(self) -> bool:
         return self.status == isa.STATUS_FLUSHED
+
+    @property
+    def timed_out(self) -> bool:
+        return self.status == isa.STATUS_TIMEOUT
+
+    @property
+    def rejected(self) -> bool:
+        return self.status == isa.STATUS_EAGAIN
 
 
 @dataclasses.dataclass(eq=False)
@@ -130,6 +153,7 @@ class Completion:
     op_name: str
     params: Tuple[int, ...]
     home: int
+    deadline: Optional[float] = None    # absolute endpoint-clock deadline
     done: bool = False
     ret: int = 0
     status: int = 0
@@ -151,6 +175,17 @@ class Completion:
     @property
     def flushed(self) -> bool:
         return self.done and self.status == isa.STATUS_FLUSHED
+
+    @property
+    def timed_out(self) -> bool:
+        """Deadline expired before launch (``STATUS_TIMEOUT``, no run)."""
+        return self.done and self.status == isa.STATUS_TIMEOUT
+
+    @property
+    def rejected(self) -> bool:
+        """Refused at admission (``STATUS_EAGAIN``: SQ full, rate
+        limited, or load shed — no run; safe to re-post later)."""
+        return self.done and self.status == isa.STATUS_EAGAIN
 
     @property
     def in_flight(self) -> bool:
@@ -225,6 +260,16 @@ class WaveHandle:
         self.completions = tuple(completions)
         self._res = res
         self.done = False
+        # launch metadata for online cost-model calibration: _retire
+        # feeds (measured wall clock, batch, steps) back into
+        # DispatchCostModel.observe_dispatch.  obs_mode is None for
+        # waves the model has no closed form for (sharded, interp).
+        self.launched_at = 0.0
+        self.obs_key: Optional[int] = None
+        self.obs_mode: Optional[str] = None
+        self.obs_steps = 0
+        self.obs_chain = 0
+        self.obs_contention = 0.0
 
     def __len__(self) -> int:
         return len(self.completions)
@@ -337,21 +382,56 @@ class Session:
                 f"{self.tenant!r} cannot post it")
         return op_id, slot.verified.program.name
 
+    def _make(self, op: Union[str, int], params: Sequence[int] = (), *,
+              home: int = 0,
+              deadline_s: Optional[float] = None) -> Completion:
+        """Build (and sequence) one invocation handle WITHOUT enqueueing
+        it — the serving loop's admission path, which holds posts in its
+        own per-tenant queues until wave formation.  ``deadline_s`` is
+        relative; the handle carries the absolute endpoint-clock
+        deadline."""
+        op_id, name = self._resolve(op)
+        deadline = None if deadline_s is None else \
+            self.endpoint._clock() + float(deadline_s)
+        return Completion(session=self, seq=self.endpoint._next_seq(),
+                          op_id=op_id, op_name=name,
+                          params=tuple(int(p) for p in params),
+                          home=int(home), deadline=deadline)
+
     def post(self, op: Union[str, int], params: Sequence[int] = (), *,
-             home: int = 0) -> Completion:
+             home: int = 0,
+             deadline_s: Optional[float] = None) -> Completion:
         """Enqueue one invocation; returns its completion handle.  No
         execution happens until a doorbell (explicit, watermark, or
-        ``Completion.result()``)."""
-        op_id, name = self._resolve(op)
-        c = Completion(session=self, seq=self.endpoint._next_seq(),
-                       op_id=op_id, op_name=name,
-                       params=tuple(int(p) for p in params), home=int(home))
+        ``Completion.result()``).
+
+        Admission order (each reject retires exactly one CQE, never
+        executes): a session in error flushes (``STATUS_FLUSHED``); an
+        already-expired ``deadline_s`` times out (``STATUS_TIMEOUT``);
+        the endpoint's ``admission`` hook may refuse with any status;
+        a full bounded SQ rejects with ``STATUS_EAGAIN`` — the
+        backpressure signal a caller handles by draining completions or
+        re-posting later.  A live deadline travels with the post and is
+        re-checked when the doorbell drains the queue."""
+        ep = self.endpoint
+        c = self._make(op, params, home=home, deadline_s=deadline_s)
         if self._error is not None:
             # QP in error: the post is flushed, never enqueued/executed
-            self.endpoint._flush_completion(c)
+            ep._retire_immediate(c, isa.STATUS_FLUSHED)
+            return c
+        if c.deadline is not None and c.deadline <= ep._clock():
+            ep._retire_immediate(c, isa.STATUS_TIMEOUT)
+            return c
+        if ep.admission is not None:
+            status = ep.admission(c)
+            if status is not None:
+                ep._retire_immediate(c, int(status))
+                return c
+        if ep.max_sq_depth is not None and len(self._sq) >= ep.max_sq_depth:
+            ep._retire_immediate(c, isa.STATUS_EAGAIN)
             return c
         self._sq.append(c)
-        self.endpoint._posted(c)
+        ep._posted(c)
         return c
 
     @property
@@ -401,6 +481,13 @@ class TiaraEndpoint:
                  max_steps: Optional[int] = None,
                  cost_model: Optional[DispatchCostModel] = None,
                  retry_limit: int = 3, retry_backoff_s: float = 0.001,
+                 retry_jitter: float = 0.0,
+                 retry_jitter_seed: Optional[int] = None,
+                 max_sq_depth: Optional[int] = None,
+                 admission: Optional[
+                     Callable[[Completion], Optional[int]]] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 sleep: Optional[Callable[[float], None]] = None,
                  sep: str = "/"):
         self.regions = RegionTable(pool_words)
         self.registry = OperatorRegistry(self.regions, n_devices=n_devices,
@@ -411,6 +498,21 @@ class TiaraEndpoint:
         self.flush_watermark = flush_watermark
         self.retry_limit = int(retry_limit)       # transient-launch retries
         self.retry_backoff_s = float(retry_backoff_s)
+        # retry backoff jitter: a seeded rng makes chaos runs
+        # reproducible — the same seed sleeps the same sequence
+        self.retry_jitter = float(retry_jitter)
+        self._retry_rng = np.random.default_rng(retry_jitter_seed)
+        # bounded per-session SQ + admission hook (overload semantics —
+        # see the module docstring); None = unbounded / admit everything
+        self.max_sq_depth = None if max_sq_depth is None \
+            else int(max_sq_depth)
+        self.admission = admission
+        # injectable time: every timestamp, deadline check, backoff and
+        # injected delay goes through these, so tests and benches swap
+        # in a virtual clock and never real-sleep
+        self._clock = clock if clock is not None else time.monotonic
+        self._sleep = sleep if sleep is not None else time.sleep
+        self._last_retire_t = self._clock()
         self.sep = sep
         self._sessions: Dict[str, Session] = {}
         self._seq = 0
@@ -423,6 +525,8 @@ class TiaraEndpoint:
         self._pending_corrupt: List[Tuple[int, int, int]] = []
         self._transient_left = 0
         self._poison_left = 0
+        self._pending_delays: List[float] = []
+        self._stalls: Dict[str, float] = {}      # tenant -> stalled until
 
     @classmethod
     def for_tenants(cls, named: Sequence[Tuple[str, RegionTable]], *,
@@ -516,6 +620,15 @@ class TiaraEndpoint:
         self._pending_corrupt.extend(plan.corrupt)
         self._transient_left += plan.transient_launch_failures
         self._poison_left += plan.poison_materialize
+        self._pending_delays.extend(plan.delay_waves)
+        now = self._clock()
+        for tenant, seconds in plan.stall_tenants:
+            if tenant not in self._sessions:
+                raise EndpointError(
+                    f"cannot stall unknown tenant {tenant!r}")
+            until = now + seconds
+            self._stalls[tenant] = max(self._stalls.get(tenant, 0.0),
+                                       until)
 
     def revive(self, *devices: int) -> None:
         """Bring failed devices back (all of them with no argument)."""
@@ -530,15 +643,26 @@ class TiaraEndpoint:
         self._pending_corrupt.clear()
         self._transient_left = 0
         self._poison_left = 0
+        self._pending_delays.clear()
+        self._stalls.clear()
 
-    def _flush_completion(self, c: Completion) -> None:
-        """Retire a post immediately with ``STATUS_FLUSHED`` (no
-        execution): the flushed-WQE path of a session in error."""
-        c.ret, c.status, c.steps = 0, isa.STATUS_FLUSHED, 0
+    def stalled(self, tenant: str) -> bool:
+        """Is the tenant's SQ currently withheld from doorbell drains
+        (an injected ``stall_tenant`` still in effect)?"""
+        return self._stalls.get(tenant, 0.0) > self._clock()
+
+    def _retire_immediate(self, c: Completion, status: int) -> None:
+        """Retire a post immediately with the given no-execution status
+        (``event.wave == -1``): the flushed-WQE path of a session in
+        error (``STATUS_FLUSHED``), an expired deadline
+        (``STATUS_TIMEOUT``), or an admission reject / load shed
+        (``STATUS_EAGAIN``).  Exactly one CQE is delivered either way —
+        overload degrades a post's status, never loses its completion."""
+        c.ret, c.status, c.steps = 0, int(status), 0
         c.regs = np.zeros(isa.NUM_REGS, dtype=np.int64)
         c.event = CompletionEvent(
-            seq=c.seq, op_name=c.op_name, ret=0, status=isa.STATUS_FLUSHED,
-            steps=0, wave=-1, retired_at=time.monotonic())
+            seq=c.seq, op_name=c.op_name, ret=0, status=c.status,
+            steps=0, wave=-1, retired_at=self._clock())
         c.done = True
         c.session._cq.append(c)
 
@@ -554,7 +678,11 @@ class TiaraEndpoint:
         if self.flush_watermark is not None and \
                 self._outstanding >= self.flush_watermark:
             try:
-                self.doorbell()
+                # split-phase auto-ring: the watermark *launches* the
+                # wave but does not block the triggering post() on its
+                # retirement — posts keep pipelining through the ring
+                # and the CQEs arrive on the normal poll/wait paths
+                self.doorbell(wait=False)
             except BaseException:
                 # post() must be atomic: if the auto-ring fails, cancel
                 # the triggering post (the doorbell failure path already
@@ -564,6 +692,14 @@ class TiaraEndpoint:
                 c.session._sq.remove(c)
                 self._outstanding -= 1
                 raise
+
+    def _enqueue(self, c: Completion) -> None:
+        """Move an already-sequenced (``Session._make``) post into its
+        session's SQ without triggering the watermark auto-ring — the
+        serving loop's wave-formation path, which rings its own doorbell
+        immediately after selecting the wave."""
+        c.session._sq.append(c)
+        self._outstanding += 1
 
     @property
     def outstanding(self) -> int:
@@ -623,20 +759,50 @@ class TiaraEndpoint:
             for d, w, v in self._pending_corrupt:
                 mem[d, w] = v
             self._pending_corrupt = []
+        now = self._clock()
         wave: List[Completion] = []
-        for s in self._sessions.values():
+        held = 0
+        for name, s in self._sessions.items():
+            if s._error is not None:
+                # QP in error: anything still queued (enqueued before
+                # the fault retired, e.g. by the serving loop) flushes
+                # at the drain — it must never execute
+                flushed, s._sq = s._sq, []
+                for c in flushed:
+                    self._retire_immediate(c, isa.STATUS_FLUSHED)
+                continue
+            if self._stalls.get(name, 0.0) > now:
+                # injected tenant stall: its posts stay queued (and
+                # aging — deadlines still apply at the next drain)
+                held += len(s._sq)
+                continue
             wave.extend(s._sq)
             s._sq = []
-        self._outstanding = 0
+        self._outstanding = held
+        # deadline enforcement at wave formation: an expired post never
+        # executes — it retires STATUS_TIMEOUT right here, in seq order,
+        # and the wave launches without it
+        expired = [c for c in wave
+                   if c.deadline is not None and c.deadline <= now]
+        if expired:
+            wave = [c for c in wave
+                    if not (c.deadline is not None and c.deadline <= now)]
+            for c in sorted(expired, key=lambda c: c.seq):
+                self._retire_immediate(c, isa.STATUS_TIMEOUT)
+        n_expired = len(expired)
         if not wave:
             if wait:
-                return 0
+                return n_expired
             empty = WaveHandle(self, self._wave_seq, (),
                                None)  # nothing launched, nothing to wait
             empty.done = True
             self._wave_seq += 1
             return empty
         wave.sort(key=lambda c: c.seq)
+        if self._pending_delays:
+            # injected launch delay (slow NIC / congested launch queue):
+            # charged through the sleep hook so virtual clocks advance
+            self._sleep(self._pending_delays.pop(0))
         ids = [c.op_id for c in wave]
         params = [list(c.params) for c in wave]
         homes = [c.home for c in wave]
@@ -690,26 +856,55 @@ class TiaraEndpoint:
                 if attempt > self.retry_limit:
                     for c in wave:
                         c.session._sq.append(c)
-                    self._outstanding = len(wave)
+                    self._outstanding += len(wave)
                     raise
-                time.sleep(self.retry_backoff_s * (1 << (attempt - 1)))
+                backoff = self.retry_backoff_s * (1 << (attempt - 1))
+                if self.retry_jitter > 0.0:
+                    # seeded, deterministic de-synchronization jitter
+                    backoff *= 1.0 + self.retry_jitter * float(
+                        self._retry_rng.random())
+                self._sleep(backoff)
             except BaseException:
                 # a failed doorbell must not drop the send queues: re-post
                 # the wave untouched (it is seq-sorted, and nothing can
                 # have posted concurrently), so the caller can ring again
                 for c in wave:
                     c.session._sq.append(c)
-                self._outstanding = len(wave)
+                self._outstanding += len(wave)
                 raise
         self.mem = res.mem
         handle = WaveHandle(self, self._wave_seq, wave, res)
         self._wave_seq += 1
+        # launch metadata for the online cost-model feed (_retire):
+        # single-op waves calibrate their slot's scale, mixed waves the
+        # wave-global bucket; modes without a closed analytical form
+        # (sharded placement, interp) observe nothing
+        handle.launched_at = self._clock()
+        if placement == "single" and mode != "interp":
+            uniq = sorted(set(ids))
+            slots = [reg[i] for i in uniq]
+            handle.obs_steps = max(s.verified.step_bound for s in slots)
+            handle.obs_contention = contention_rate
+            eff_mode = mode
+            if mode == "auto":
+                d = reg.last_decision
+                eff_mode = d.mode if d is not None else None
+            if len(uniq) == 1:
+                handle.obs_key = uniq[0]
+                handle.obs_chain = slots[0].chain_iters
+                # a single-op wave through the wave planner runs the
+                # mixed engine degenerately; observe it as "batched"
+                handle.obs_mode = "batched" if eff_mode == "mixed" \
+                    else eff_mode
+            else:
+                handle.obs_key = None
+                handle.obs_mode = eff_mode
         for c in wave:
             c.wave_handle = handle
         self._inflight.append(handle)
         if wait:
             self._retire_through(handle)
-            return len(wave)
+            return len(wave) + n_expired
         return handle
 
     # -- completion retirement (the receive side) -------------------------
@@ -735,7 +930,24 @@ class TiaraEndpoint:
         # drop the result: a user-held Completion must not pin a whole
         # pool snapshot (the per-request fields are copied out below)
         handle._res = None
-        now = time.monotonic()
+        now = self._clock()
+        if handle.obs_mode is not None and handle.completions:
+            # online calibration feed: this wave's measured wall clock
+            # (from launch, or from the previous retirement when waves
+            # pipelined and overlapped) updates the cost model's
+            # per-slot EWMA scales, so mode="auto" and the serving
+            # loop's formation policy adapt to the running host
+            start = max(handle.launched_at, self._last_retire_t)
+            measured_us = (now - start) * 1e6
+            if measured_us > 0.0:
+                self.cost_model.observe_dispatch(
+                    handle.obs_key, handle.obs_mode,
+                    batch=len(handle.completions),
+                    step_bound=handle.obs_steps,
+                    measured_us=measured_us,
+                    contention_rate=handle.obs_contention,
+                    chain_iters=handle.obs_chain)
+        self._last_retire_t = now
         errored: List[Session] = []
         for i, c in enumerate(handle.completions):
             c.ret = int(res.ret[i])
@@ -762,7 +974,7 @@ class TiaraEndpoint:
             flushed, s._sq = s._sq, []
             self._outstanding -= len(flushed)
             for c in flushed:
-                self._flush_completion(c)
+                self._retire_immediate(c, isa.STATUS_FLUSHED)
 
     def _retire_through(self, handle: WaveHandle) -> None:
         """Retire every in-flight wave up to and including ``handle``
@@ -818,6 +1030,13 @@ class TiaraEndpoint:
     @property
     def in_flight_waves(self) -> int:
         return len(self._inflight)
+
+    @property
+    def cost_model(self) -> DispatchCostModel:
+        """The registry's dispatch cost model — also the sink for the
+        endpoint's online wall-clock observations and the serving
+        loop's conflict-rate feed."""
+        return self.registry.cost_model
 
     @property
     def last_decision(self):

@@ -29,6 +29,17 @@ live endpoint:
                         launch that dies *after* issue.  Retirement must
                         leave the wave queued so a later wait retries it
                         (no lost CQEs, no double delivery).
+  * ``delay_waves``     charge the next N doorbell launches the given
+                        extra seconds (through the endpoint's injectable
+                        ``sleep`` hook, so virtual clocks make it free) —
+                        a slow NIC / congested launch queue.  Overload
+                        tests use it to age queued work past deadlines.
+  * ``stall_tenants``   withhold the named tenants' posts from doorbell
+                        drains for the given duration (endpoint clock) —
+                        a stalled QP / paused scheduler.  Their posts sit
+                        in the SQ aging; the serving loop's deadlines and
+                        load shedding must degrade them deterministically
+                        instead of wedging the wave pipeline.
 
 Plans compose with ``+`` so a chaos test can pile independent failures
 into one injection.  The plan itself is immutable; the endpoint copies
@@ -62,6 +73,8 @@ class FaultPlan:
     corrupt: Tuple[Tuple[int, int, int], ...] = ()
     transient_launch_failures: int = 0
     poison_materialize: int = 0
+    delay_waves: Tuple[float, ...] = ()
+    stall_tenants: Tuple[Tuple[str, float], ...] = ()
 
     def __post_init__(self):
         object.__setattr__(self, "fail_devices",
@@ -69,8 +82,17 @@ class FaultPlan:
         object.__setattr__(
             self, "corrupt",
             tuple((int(d), int(w), int(v)) for d, w, v in self.corrupt))
+        object.__setattr__(
+            self, "delay_waves",
+            tuple(float(d) for d in self.delay_waves))
+        object.__setattr__(
+            self, "stall_tenants",
+            tuple((str(t), float(s)) for t, s in self.stall_tenants))
         if self.transient_launch_failures < 0 or self.poison_materialize < 0:
             raise ValueError("fault counters must be non-negative")
+        if any(d < 0 for d in self.delay_waves) or \
+                any(s < 0 for _, s in self.stall_tenants):
+            raise ValueError("fault durations must be non-negative")
 
     def __add__(self, other: "FaultPlan") -> "FaultPlan":
         if not isinstance(other, FaultPlan):
@@ -81,13 +103,17 @@ class FaultPlan:
             transient_launch_failures=(self.transient_launch_failures
                                        + other.transient_launch_failures),
             poison_materialize=(self.poison_materialize
-                                + other.poison_materialize))
+                                + other.poison_materialize),
+            delay_waves=self.delay_waves + other.delay_waves,
+            stall_tenants=self.stall_tenants + other.stall_tenants)
 
     @property
     def empty(self) -> bool:
         return (not self.fail_devices and not self.corrupt
                 and self.transient_launch_failures == 0
-                and self.poison_materialize == 0)
+                and self.poison_materialize == 0
+                and not self.delay_waves
+                and not self.stall_tenants)
 
 
 def fail_devices(*devices: int) -> FaultPlan:
@@ -104,3 +130,15 @@ def drop_doorbells(n: int) -> FaultPlan:
 
 def poison_materialize(n: int = 1) -> FaultPlan:
     return FaultPlan(poison_materialize=n)
+
+
+def delay_waves(*seconds: float) -> FaultPlan:
+    """Charge the next ``len(seconds)`` doorbell launches the given extra
+    delays, in order (a congested launch queue / slow NIC)."""
+    return FaultPlan(delay_waves=tuple(seconds))
+
+
+def stall_tenant(tenant: str, seconds: float) -> FaultPlan:
+    """Withhold ``tenant``'s posts from doorbell drains for ``seconds``
+    of endpoint-clock time starting at injection."""
+    return FaultPlan(stall_tenants=((tenant, seconds),))

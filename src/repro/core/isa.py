@@ -112,6 +112,9 @@ DEV_LOCAL = -1
 
 STATUS_OK = 0
 STATUS_FAIL = 1          # conventional app-level failure (e.g. lock busy)
+STATUS_EAGAIN = 122      # admission reject: SQ full / rate limited / shed
+                         # before execution (the RNIC "try again" errno)
+STATUS_TIMEOUT = 123     # per-post deadline expired before launch (no run)
 STATUS_FLUSHED = 124     # post flushed from an errored session's SQ (no run)
 STATUS_PROT_FAULT = 125  # runtime protection fault: data-dependent access
                          # outside the grant/pool (lane halted, writes masked)

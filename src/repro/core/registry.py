@@ -214,7 +214,7 @@ class OperatorRegistry:
             n_dev = int(mem.shape[0])
             decision = self.cost_model.choose_batched(
                 batch=1, step_bound=slot.verified.step_bound,
-                compilable=slot.compilable,
+                compilable=slot.compilable, key=op_id,
                 batched_cached=vm.engine_cached(
                     slot.verified, self.regions, n_dev, 1),
                 compiled_cached=tcompile.compiled_cached(
@@ -254,7 +254,7 @@ class OperatorRegistry:
             B = len(params)
             decision = self.cost_model.choose_batched(
                 batch=B, step_bound=slot.verified.step_bound,
-                compilable=slot.compilable,
+                compilable=slot.compilable, key=op_id,
                 contention_rate=contention_rate,
                 chain_iters=slot.chain_iters,
                 batched_cached=vm.engine_cached(

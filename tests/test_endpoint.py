@@ -227,12 +227,38 @@ def test_poll_cq_limit():
 
 
 def test_flush_watermark_auto_doorbell():
+    """Crossing the watermark rings split-phase: the wave launches
+    (posts leave the SQs) but retirement is deferred to a poll/wait —
+    post() never blocks on device completion."""
     ep, sessions = _connect(flush_watermark=4)
     cs = [sessions[i % 3].post("sum2", [i, i]) for i in range(4)]
-    # the 4th post crossed the watermark: everything retired, no manual
-    # doorbell
-    assert all(c.done for c in cs)
-    assert ep.outstanding == 0
+    assert ep.outstanding == 0               # SQs drained by the ring
+    assert ep.in_flight == 4                 # ... but nothing retired yet
+    assert all(c.in_flight and not c.done for c in cs)
+    assert ep.wait_all() == 4
+    assert all(c.done and c.ok for c in cs)
+
+
+def test_flush_watermark_pipelines_posts():
+    """Posts keep flowing while a watermark-triggered wave is still in
+    flight: the next posts queue behind it (and launch a second
+    overlapping wave at the next watermark) instead of blocking on the
+    first wave's completion."""
+    ep, sessions = _connect(flush_watermark=3)
+    first = [sessions[i].post("sum2", [i, i]) for i in range(3)]
+    assert ep.in_flight_waves == 1 and all(c.in_flight for c in first)
+    # posting into the shadow of the in-flight wave neither blocks nor
+    # retires it
+    second = [sessions[i].post("sum2", [i + 1, i]) for i in range(3)]
+    assert ep.in_flight_waves == 2
+    assert all(c.in_flight for c in first + second)
+    assert ep.wait_all() == 6
+    for c in first + second:
+        assert c.ok and c.ret == 2 * c.params[0] + 21   # data[i] = 10 + i
+    # waves retired in launch order, per-session FIFO intact
+    for i, s in enumerate(sessions):
+        got = s.poll_cq()
+        assert got == [first[i], second[i]]
 
 
 def test_empty_doorbell_is_noop():

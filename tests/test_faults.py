@@ -31,6 +31,7 @@ from repro.core import faults, isa, memory, pyvm, vm
 from repro.core import operators as ops
 from repro.core.endpoint import EndpointError, TiaraEndpoint
 from repro.core.memory import Grant
+from repro.core.serving_loop import VirtualClock
 from repro.core.program import OperatorBuilder
 from repro.core.verifier import verify
 
@@ -371,14 +372,33 @@ def test_endpoint_same_wave_concurrent_flush_after():
 
 
 def test_endpoint_transient_doorbell_retry_and_exhaustion():
-    ep, (s0, _), orders, w = _graph_endpoint(retry_limit=3,
-                                             retry_backoff_s=0.0)
+    """Bounded retry-with-backoff absorbs transient launch losses; the
+    backoff goes through the injectable sleep hook (no real sleeping)
+    with seeded deterministic jitter."""
+    def build(seed):
+        vc = VirtualClock()
+        slept = []
+
+        def sleep(s):
+            slept.append(s)
+            vc.sleep(s)
+
+        ep, ss, orders, w = _graph_endpoint(
+            retry_limit=3, retry_backoff_s=0.001, retry_jitter=0.5,
+            retry_jitter_seed=seed, clock=vc, sleep=sleep)
+        return ep, ss[0], orders, w, slept
+
+    ep, s0, orders, w, slept = build(seed=7)
     o0 = orders["t0"]
     c = s0.post("graph_walk", [int(o0[0]) * 8, 2, 0])
-    # two lost doorbells: absorbed by the bounded retry
+    # two lost doorbells: absorbed by the bounded retry, and the two
+    # backoffs (jittered exponential) went through the hook
     ep.inject(faults.drop_doorbells(2))
     assert ep.doorbell() == 1
     assert c.ok and c.ret == w.reference(o0, int(o0[0]), 2)
+    assert len(slept) == 2
+    assert 0.001 <= slept[0] <= 0.0015      # base * (1 + jitter in [0,.5])
+    assert 0.002 <= slept[1] <= 0.003
     # retry_limit+1 losses: the doorbell raises, the wave is requeued
     c2 = s0.post("graph_walk", [int(o0[3]) * 8, 1, 8])
     ep.inject(faults.drop_doorbells(4))
@@ -388,6 +408,19 @@ def test_endpoint_transient_doorbell_retry_and_exhaustion():
     # the injection is exhausted: ringing again succeeds, exactly once
     assert ep.doorbell() == 1
     assert c2.ok and c2.ret == w.reference(o0, int(o0[3]), 1)
+
+    # same seed -> the identical jittered backoff sequence (chaos runs
+    # are reproducible); a different seed -> a different sequence
+    def backoffs(seed):
+        ep2, s0b, orders2, _, slept2 = build(seed=seed)
+        o = orders2["t0"]
+        s0b.post("graph_walk", [int(o[0]) * 8, 2, 0])
+        ep2.inject(faults.drop_doorbells(2))
+        ep2.doorbell()
+        return slept2
+
+    assert backoffs(7) == slept[:2]
+    assert backoffs(8) != backoffs(7)
 
 
 def test_endpoint_poison_materialize_no_lost_cqes():
@@ -445,16 +478,24 @@ def test_endpoint_failed_device_fault_and_auto_placement_degrade():
 
 def test_faultplan_compose_and_validate():
     plan = (faults.fail_devices(1, 3) + faults.corrupt_words([(0, 5, -9)])
-            + faults.drop_doorbells(2) + faults.poison_materialize())
+            + faults.drop_doorbells(2) + faults.poison_materialize()
+            + faults.delay_waves(0.5, 0.25)
+            + faults.stall_tenant("t0", 1.0))
     assert plan.fail_devices == frozenset({1, 3})
     assert plan.corrupt == ((0, 5, -9),)
     assert plan.transient_launch_failures == 2
     assert plan.poison_materialize == 1
+    assert plan.delay_waves == (0.5, 0.25)
+    assert plan.stall_tenants == (("t0", 1.0),)
     assert not plan.empty and faults.FaultPlan().empty
     with pytest.raises(ValueError):
         faults.FaultPlan(transient_launch_failures=-1)
     with pytest.raises(ValueError):
         faults.FaultPlan(poison_materialize=-2)
+    with pytest.raises(ValueError):
+        faults.delay_waves(-0.1)
+    with pytest.raises(ValueError):
+        faults.stall_tenant("t0", -1.0)
 
 
 def test_endpoint_inject_validates_and_clears():
@@ -464,17 +505,41 @@ def test_endpoint_inject_validates_and_clears():
     with pytest.raises(EndpointError, match="outside"):
         ep.inject(faults.corrupt_words(
             [(0, ep.regions.pool_words, 1)]))              # word oob
+    with pytest.raises(EndpointError, match="unknown tenant"):
+        ep.inject(faults.stall_tenant("nobody", 1.0))
     ep.inject(faults.fail_devices(0) + faults.drop_doorbells(1)
-              + faults.poison_materialize(2))
+              + faults.poison_materialize(2)
+              + faults.delay_waves(0.5) + faults.stall_tenant("t1", 9.0))
     assert ep.failed_devices == {0}
+    assert ep.stalled("t1") and not ep.stalled("t0")
     ep.clear_faults()
     assert not ep.failed_devices
     assert ep._transient_left == 0 and ep._poison_left == 0
+    assert not ep._pending_delays and not ep.stalled("t1")
     # a cleared endpoint dispatches cleanly
     o0 = orders["t0"]
     c = s0.post("graph_walk", [int(o0[0]) * 8, 1, 0])
     ep.doorbell()
     assert c.ok
+
+
+def test_endpoint_delay_and_stall_injection():
+    """delay_waves charges the sleep hook at launch; stall_tenant
+    withholds a tenant's posts from drains until the stall expires
+    (endpoint clock), without wedging other tenants."""
+    vc = VirtualClock()
+    ep, (s0, s1), orders, w = _graph_endpoint(clock=vc, sleep=vc.sleep)
+    o0, o1 = orders["t0"], orders["t1"]
+    ep.inject(faults.delay_waves(0.25) + faults.stall_tenant("t0", 1.0))
+    c0 = s0.post("graph_walk", [int(o0[0]) * 8, 1, 0])
+    c1 = s1.post("graph_walk", [int(o1[0]) * 8, 1, 0])
+    t0 = vc()
+    assert ep.doorbell() == 1                  # t0 withheld, t1 executes
+    assert vc() - t0 == 0.25                   # the injected launch delay
+    assert c1.ok and not c0.done and s0.outstanding == 1
+    vc.advance(1.0)                            # the stall expires
+    assert ep.doorbell() == 1
+    assert c0.ok and c0.ret == w.reference(o0, int(o0[0]), 1)
 
 
 def test_simulator_midflight_abort():
