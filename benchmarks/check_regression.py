@@ -42,7 +42,11 @@ _MEASURED = ("us_per_call", "ops_per_s", "subwave_ops_per_s", "parity_ok",
              "submitted", "executed", "ok", "timed_out", "rejected",
              "shed", "goodput_frac", "fairness_min_share",
              "p50_x_deadline", "p99_x_deadline", "deterministic_ok",
-             "inflight_bound_ok", "p50_ms_wall", "p99_ms_wall")
+             "inflight_bound_ok", "p50_ms_wall", "p99_ms_wall",
+             # bench_static_analysis: the always-sweep side of the gated
+             # speedup_sweep_skip ratio and the soundness-corpus tallies
+             "us_per_call_sweep", "ops_per_s_sweep", "soundness_ok",
+             "proven_waves", "refused_waves", "unsound_clears")
 
 # gated non-speedup metrics.  Lower-bounded metrics fail when the
 # current value drops more than the band below baseline (like
@@ -60,6 +64,9 @@ _HARD_BITS = {
     "deterministic_ok": "same-seed overload runs produced different "
                         "per-seq CQE statuses",
     "inflight_bound_ok": "in-flight waves exceeded max_inflight_waves",
+    "soundness_ok": "static conflict proof cleared a wave the dynamic "
+                    "sweep would have flagged (or the corpus was "
+                    "vacuous)",
 }
 
 # per-metric thresholds overriding --threshold: some normalizers are
@@ -88,7 +95,13 @@ _METRIC_THRESHOLDS = {"speedup_vs_single": 0.75,
                       # (seeded VirtualClock); tight bands
                       "goodput_frac": 0.05,
                       "fairness_min_share": 0.05,
-                      "p99_x_deadline": 0.10}
+                      "p99_x_deadline": 0.10,
+                      # speedup_sweep_skip is an in-run A/B on one
+                      # endpoint (only the host-side sweep differs), but
+                      # the sweep's share of a doorbell swings with host
+                      # load; the band catches losing the skip entirely
+                      # (ratio -> ~1.0 from a >1 baseline), not jitter
+                      "speedup_sweep_skip": 0.4}
 
 
 def _identity(rec: dict) -> Tuple:

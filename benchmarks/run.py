@@ -26,7 +26,8 @@ from benchmarks import (bench_async_overlap, bench_fault_overhead,
                         bench_graph, bench_lock, bench_mixed_batch,
                         bench_moe, bench_offload, bench_paged_attention,
                         bench_ptw, bench_serving, bench_sharded,
-                        bench_table1, bench_vm_throughput)
+                        bench_static_analysis, bench_table1,
+                        bench_vm_throughput)
 from benchmarks._workbench import fmt_table
 
 # Per-module wall-clock budget: one hung bench (an XLA compile gone
@@ -91,6 +92,8 @@ MODULES = [
      bench_fault_overhead),
     ("serving", "Overload-safe serving loop: goodput and tails at 2x",
      bench_serving),
+    ("static_analysis", "Static conflict proofs: sweep-skip + soundness",
+     bench_static_analysis),
 ]
 
 

@@ -52,7 +52,19 @@ def walk(start, depth):
     op_id = sess.register(program)
     vop = ep.registry[op_id].verified
     print(f"registered as op {op_id}; proven step bound = "
-          f"{vop.step_bound}, loop depth = {vop.max_loop_depth}\n")
+          f"{vop.step_bound}, loop depth = {vop.max_loop_depth}")
+
+    #    Registration also derives the operator's symbolic access
+    #    footprint (core/access.py).  This walk chases loaded addresses,
+    #    so its footprint is ⊤ ("could touch anywhere in the region")
+    #    and its waves keep the runtime conflict sweep.  Operators with
+    #    affine footprints get whole waves proven conflict-free at plan
+    #    time instead — the sweep (and, sharded, a collective per step)
+    #    is then compiled out; `ep.last_noconflict` after a doorbell
+    #    says which way the last wave went, and
+    #    `OperatorRegistry(static_analysis=False)` turns the proofs off.
+    print("access analysis:", ep.registry[op_id].describe_analysis(),
+          "\n")
 
     # 4. Populate the memory node and post work to the queue pair.  The
     #    doorbell drains the send queue as one wave; completions land in

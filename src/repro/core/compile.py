@@ -342,51 +342,72 @@ class GatherChain:
     is_async: bool
 
 
-def match_gather_chain(instrs: List[Instr], loop: LoopInfo
-                       ) -> Optional[GatherChain]:
+def _plain_local_load(ins: Instr) -> bool:
+    return (ins.op == Op.LOAD and ins.imm == 0 and ins.flags == 0
+            and ins.e == DEV_LOCAL)
+
+
+def _is_add_imm(ins: Instr, reg: int, imm: Optional[int] = None) -> bool:
+    """``reg += imm`` (immediate ADD updating ``reg`` in place)."""
+    return (ins.op == Op.ALU and ins.d == int(Alu.ADD)
+            and bool(ins.flags & FLAG_IMMB) and ins.dst == ins.a == reg
+            and (imm is None or ins.imm == imm))
+
+
+def match_gather_chain_ex(instrs: List[Instr], loop: LoopInfo
+                          ) -> Tuple[Optional[GatherChain], Optional[str]]:
     """Structural match of the loop body against the gather-chain shape.
-    Purely static — checked once at compile time."""
+    Purely static — checked once at compile time.  Returns
+    ``(chain, None)`` on a match and ``(None, reason)`` on a near-miss,
+    where ``reason`` is the *first* structural check that failed — the
+    registry surfaces it so a silently-slow almost-chain is explainable.
+    """
     body = instrs[loop.start:loop.end + 1]
     if len(body) != 5:
-        return None
+        return None, (f"body has {len(body)} instructions, not the "
+                      f"5-instruction chain shape")
     ld_id, ld_tr, mc, add_dst, add_i = body
     lp = instrs[loop.pc]
 
-    def plain_local_load(ins):
-        return (ins.op == Op.LOAD and ins.imm == 0 and ins.flags == 0
-                and ins.e == DEV_LOCAL)
-
-    if not (plain_local_load(ld_id) and plain_local_load(ld_tr)):
-        return None
+    if not _plain_local_load(ld_id):
+        return None, "body[0] is not a plain local load (imm 0, no flags)"
+    if not _plain_local_load(ld_tr):
+        return None, "body[1] is not a plain local load (imm 0, no flags)"
     if ld_tr.b != ld_id.dst:                     # chained: id -> translation
-        return None
-    if mc.op != Op.MEMCPY or (mc.flags & (FLAG_LEN_REG | FLAG_DSTDEV_REG
-                                          | FLAG_SRCDEV_REG)):
-        return None
+        return None, ("body[1] offset register is not body[0]'s "
+                      "destination (loads are not chained)")
+    if mc.op != Op.MEMCPY:
+        return None, "body[2] is not a MEMCPY"
+    if mc.flags & (FLAG_LEN_REG | FLAG_DSTDEV_REG | FLAG_SRCDEV_REG):
+        return None, "MEMCPY uses a dynamic length or device register"
     if mc.dst != DEV_LOCAL or mc.c != DEV_LOCAL:
-        return None
+        return None, "MEMCPY is not local-to-local"
     if mc.e != ld_tr.dst:                        # src offset = translation
-        return None
+        return None, ("MEMCPY source offset is not the translation "
+                      "load's destination")
     w = int(mc.imm)
     if not (0 < w <= isa.MAX_MEMCPY_WORDS):
-        return None
-    for add, reg in ((add_dst, mc.b), (add_i, ld_id.b)):
-        if not (add.op == Op.ALU and add.d == int(Alu.ADD)
-                and (add.flags & FLAG_IMMB) and add.dst == add.a):
-            return None
-    if add_dst.a != mc.b or add_dst.imm != w:
-        return None
-    if add_i.a != ld_id.b or add_i.imm != 1:
-        return None
+        return None, f"MEMCPY row width {w} outside (0, MAX_MEMCPY_WORDS]"
+    if not _is_add_imm(add_dst, mc.b, w):
+        return None, (f"body[3] is not 'dst += {w}' (immediate ADD of the "
+                      f"row width)")
+    if not _is_add_imm(add_i, ld_id.b, 1):
+        return None, "body[4] is not 'i += 1' (immediate ADD of 1)"
     # distinct registers so the fused updates don't alias
     regs = (ld_id.b, ld_id.dst, ld_tr.dst, mc.b)
     if len(set(regs)) != 4:
-        return None
+        return None, "index/id/translation/dst registers are not distinct"
     return GatherChain(
         loop_pc=loop.pc, cap=int(lp.imm), ids_rid=ld_id.a,
         table_rid=ld_tr.a, pool_rid=mc.d, dst_rid=mc.a, row_words=w,
         i_reg=ld_id.b, id_reg=ld_id.dst, paddr_reg=ld_tr.dst,
-        dst_reg=mc.b, is_async=bool(mc.flags & FLAG_ASYNC))
+        dst_reg=mc.b, is_async=bool(mc.flags & FLAG_ASYNC)), None
+
+
+def match_gather_chain(instrs: List[Instr], loop: LoopInfo
+                       ) -> Optional[GatherChain]:
+    """Reason-free wrapper of :func:`match_gather_chain_ex` (hot path)."""
+    return match_gather_chain_ex(instrs, loop)[0]
 
 
 def find_gather_chains(op: VerifiedOperator) -> List[GatherChain]:
@@ -399,6 +420,191 @@ def find_gather_chains(op: VerifiedOperator) -> List[GatherChain]:
         if g is not None:
             out.append(g)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Wider superoperator shapes (footprint-era matchers)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScatterReduce:
+    """Conditional scatter-accumulate loop — the CAA analogue of the
+    gather chain:
+
+        loop (n, cap):
+            load v   <- src_region[i]
+            caa  old <- acc_region[j] ?= cmp, += v
+            j += stride
+            i += 1
+
+    Fused to one snapshot gather + elementwise compare + scatter-add.
+    The fusion is **only exact when every CAA address in the wave is
+    touched at most once** — within a lane that is the static
+    ``|stride| * cap <= region size`` check, across lanes it is the
+    registration-time conflict proof — so the tracer emits it only in
+    ``noconflict`` builds (see :func:`build_compiled`)."""
+
+    loop_pc: int
+    cap: int
+    src_rid: int
+    acc_rid: int
+    stride: int
+    i_reg: int
+    v_reg: int
+    j_reg: int
+    old_reg: int
+    cmp_reg: int
+
+
+def match_scatter_reduce(instrs: List[Instr], loop: LoopInfo
+                         ) -> Optional[ScatterReduce]:
+    """Structural match of the loop body against the scatter-reduce
+    shape (purely static)."""
+    body = instrs[loop.start:loop.end + 1]
+    if len(body) != 4:
+        return None
+    ld, caa, add_j, add_i = body
+    lp = instrs[loop.pc]
+    if not _plain_local_load(ld):
+        return None
+    if caa.op != Op.CAA or caa.flags != 0 or caa.imm != 0 \
+            or caa.e != DEV_LOCAL:
+        return None
+    if caa.d != ld.dst:                          # added value = loaded value
+        return None
+    if not (_is_add_imm(add_j, caa.b) and add_j.imm != 0):
+        return None
+    if not _is_add_imm(add_i, ld.b, 1):
+        return None
+    if caa.a == ld.a:          # src window must not alias the acc window
+        return None
+    regs = (ld.b, ld.dst, caa.b, caa.dst)
+    if len(set(regs)) != 4 or caa.c in regs:
+        return None
+    return ScatterReduce(
+        loop_pc=loop.pc, cap=int(lp.imm), src_rid=ld.a, acc_rid=caa.a,
+        stride=int(add_j.imm), i_reg=ld.b, v_reg=ld.dst, j_reg=caa.b,
+        old_reg=caa.dst, cmp_reg=caa.c)
+
+
+@dataclasses.dataclass(frozen=True)
+class MapLoop:
+    """Elementwise map / zip-with over region windows:
+
+        loop (n, cap):                 loop (n, cap):
+            load a <- src[i]               load a <- src1[i]
+            c = a OP rhs                   load b <- src2[i]
+            store c -> dst[j]              c = a OP b
+            j += 1                         store c -> dst[j]
+            i += 1                         j += 1
+                                           i += 1
+
+    ``rhs`` in the unary form is an immediate or a loop-invariant
+    register.  Fused to one window gather (two for zip), one
+    elementwise ALU, and one deterministic scatter in (iteration,
+    request) commit order.  ``src2_rid``/``b_reg`` are -1 and
+    ``alu_imm`` carries the immediate for the unary form."""
+
+    loop_pc: int
+    cap: int
+    src_rid: int
+    src2_rid: int
+    dst_rid: int
+    alu_op: int
+    alu_imm: Optional[int]
+    rhs_reg: int               # invariant-register rhs for unary map, or -1
+    i_reg: int
+    j_reg: int
+    a_reg: int
+    b_reg: int
+    c_reg: int
+    is_zip: bool
+
+
+def match_map_loop(instrs: List[Instr], loop: LoopInfo
+                   ) -> Optional[MapLoop]:
+    """Structural match of the loop body against the map / zip-with
+    shapes (purely static)."""
+    body = instrs[loop.start:loop.end + 1]
+    lp = instrs[loop.pc]
+    if len(body) == 5:
+        ld_a, alu, st, add_j, add_i = body
+        ld_b = None
+    elif len(body) == 6:
+        ld_a, ld_b, alu, st, add_j, add_i = body
+    else:
+        return None
+    if not _plain_local_load(ld_a):
+        return None
+    if ld_b is not None:
+        if not _plain_local_load(ld_b) or ld_b.b != ld_a.b \
+                or ld_b.a == ld_a.a:
+            return None
+    if alu.op != Op.ALU or alu.d == int(Alu.ALWAYS):
+        return None
+    if alu.a != ld_a.dst:
+        return None
+    alu_imm: Optional[int] = None
+    rhs_reg = -1
+    if ld_b is not None:
+        if (alu.flags & FLAG_IMMB) or alu.b != ld_b.dst:
+            return None
+    elif alu.flags & FLAG_IMMB:
+        alu_imm = int(alu.imm)
+    else:
+        rhs_reg = alu.b
+    if st.op != Op.STORE or st.imm != 0 or st.flags != 0 \
+            or st.e != DEV_LOCAL:
+        return None
+    if st.dst != alu.dst:                        # stored value = ALU result
+        return None
+    if not _is_add_imm(add_j, st.b, 1):
+        return None
+    if not _is_add_imm(add_i, ld_a.b, 1):
+        return None
+    # dst window must not alias any src window (the fused gathers read a
+    # pre-loop snapshot; distinct regions never alias)
+    if st.a == ld_a.a or (ld_b is not None and st.a == ld_b.a):
+        return None
+    regs = [ld_a.b, st.b, ld_a.dst, alu.dst]
+    if ld_b is not None:
+        regs.append(ld_b.dst)
+    if len(set(regs)) != len(regs):
+        return None
+    if rhs_reg >= 0 and rhs_reg in regs:         # rhs must be loop-invariant
+        return None
+    return MapLoop(
+        loop_pc=loop.pc, cap=int(lp.imm), src_rid=ld_a.a,
+        src2_rid=ld_b.a if ld_b is not None else -1, dst_rid=st.a,
+        alu_op=int(alu.d), alu_imm=alu_imm, rhs_reg=rhs_reg,
+        i_reg=ld_a.b, j_reg=st.b, a_reg=ld_a.dst,
+        b_reg=ld_b.dst if ld_b is not None else -1, c_reg=alu.dst,
+        is_zip=ld_b is not None)
+
+
+def superop_report(op: VerifiedOperator) -> Dict[str, object]:
+    """Which superoperators each loop of ``op`` matches, plus — when a
+    loop matches nothing — the first structural reason the gather-chain
+    matcher bailed (registry introspection; see ``registry.dump()``)."""
+    instrs = isa.decode_program(op.code)
+    matched: List[Tuple[str, int]] = []
+    near_miss: Optional[str] = None
+    for l in op.loops:
+        g, reason = match_gather_chain_ex(instrs, l)
+        if g is not None:
+            matched.append(("gather_chain", l.pc))
+            continue
+        sr = match_scatter_reduce(instrs, l)
+        if sr is not None:
+            matched.append(("scatter_reduce", l.pc))
+            continue
+        ml = match_map_loop(instrs, l)
+        if ml is not None:
+            matched.append(("zip_loop" if ml.is_zip else "map_loop", l.pc))
+            continue
+        if near_miss is None:
+            near_miss = f"pc {l.pc}: {reason}"
+    return {"matched": matched, "near_miss": near_miss}
 
 
 # ---------------------------------------------------------------------------
@@ -415,7 +621,8 @@ class _Tracer:
 
     def __init__(self, *, instrs, loops, base, mask, n_dev, pool_words,
                  batch, homes, failed, mem_flat, regs, impl, superops,
-                 double_buffer=False, protect=True, check_failed=True):
+                 double_buffer=False, protect=True, check_failed=True,
+                 noconflict=False):
         self.instrs = instrs
         self.loops = loops                  # pc -> LoopInfo
         self.base = base                    # static np arrays
@@ -432,6 +639,7 @@ class _Tracer:
         self.double_buffer = double_buffer
         self.protect = protect
         self.check_failed = check_failed
+        self.noconflict = noconflict
         zero = jnp.zeros(batch, jnp.int64)
         self.halted = jnp.zeros(batch, bool)
         self.ret = zero
@@ -443,8 +651,11 @@ class _Tracer:
         # site fires per lane and the whole record reduces to one fused
         # sum at trace finalization (`_finalize_fault`) — the hot path
         # pays no per-site selects at all.  `sites` is the static side
-        # table the (pc, opcode, dev) columns are recovered from.
-        self.sites: List[Tuple[int, int, int, bool]] = []
+        # table the (pc, opcode, dev) columns are recovered from; its
+        # last column is the site *kind* (0 plain instruction, 1 gather
+        # chain, 2 scatter-reduce, 3 map loop, 4 zip loop — fused sites
+        # recover pc/opcode from the latched body-instruction index).
+        self.sites: List[Tuple[int, int, int, int]] = []
         self.pending: List[Tuple] = []
 
     # -- small helpers ---------------------------------------------------
@@ -493,7 +704,7 @@ class _Tracer:
             devcol, dtr = dev, None
         else:
             devcol, dtr = _DEV_LATCHED, dev
-        self.sites.append((pc, int(opcode), devcol, False))
+        self.sites.append((pc, int(opcode), devcol, 0))
         self.pending.append((k, f, addr, dtr, None))
         return p ^ f
 
@@ -690,7 +901,7 @@ class _Tracer:
             # loop_pc + k* — recovered at finalization from the chain's
             # latched k* (the aux column of the pending record)
             k_site = len(self.sites)
-            self.sites.append((g.loop_pc, 0, _DEV_HOME, True))
+            self.sites.append((g.loop_pc, 0, _DEV_HOME, 1))
             self.pending.append((k_site, flt, faddr, None, kstar))
             m_eff = jnp.where(flt, js, m)
             live = valid & (jj < m_eff[:, None])
@@ -782,6 +993,193 @@ class _Tracer:
                          axis=1)[:, 0], p & (n_pa > 0))
         self.steps = self.steps + jnp.where(p, steps_n, 0)
 
+    # -- the scatter-reduce superoperator ---------------------------------
+
+    def _fused_scatter_reduce(self, sr: ScatterReduce, m, p) -> None:
+        """One snapshot gather + elementwise compare + scatter-add for
+        the whole CAA loop.  Exact only because every accumulator
+        address is touched at most once: within a lane by the static
+        ``|stride| * cap <= acc region size`` check (emit_segment), and
+        across lanes by the ``noconflict`` wave proof the build asserts
+        — so each CAA's ``old`` equals the pre-loop snapshot value and
+        the conditional add commutes into one scatter-add."""
+        B, P = self.B, self.P
+        cap, s = sr.cap, sr.stride
+        it = jnp.arange(cap, dtype=jnp.int64)[None, :]          # (1, cap)
+        i0 = self.regs[sr.i_reg][:, None]
+        j0 = self.regs[sr.j_reg][:, None]
+        home = self.homes[:, None]
+        valid = (it < m[:, None]) & p[:, None]                  # (B, cap)
+        src_off = i0 + it
+        acc_off = j0 + it * s
+        src_mask = int(self.mask[sr.src_rid])
+        acc_mask = int(self.mask[sr.acc_rid])
+
+        if self.protect:
+            # per-iteration fault scan: body instruction k in {1: load,
+            # 2: caa} can fault at iteration j; commit exactly the first
+            # j* iterations (a faulting CAA has zero effect).
+            c1 = src_off != (src_off & src_mask)
+            if self.check_failed:
+                c1 = self.failed[self.homes][:, None] | c1
+            c2 = acc_off != (acc_off & acc_mask)
+            k_j = jnp.where(c1, 1, jnp.where(c2, 2, 0))
+            k_j = jnp.where(valid, k_j, 0)
+            has = k_j > 0
+            flt = jnp.any(has, axis=1)
+            js = jnp.argmax(has, axis=1).astype(jnp.int64)
+            jsc = js[:, None]
+            kstar = jnp.take_along_axis(k_j, jsc, axis=1)[:, 0]
+            faddr = jnp.where(
+                kstar == 1, jnp.take_along_axis(src_off, jsc, axis=1)[:, 0],
+                jnp.take_along_axis(acc_off, jsc, axis=1)[:, 0])
+            self.halted = self.halted | flt
+            k_site = len(self.sites)
+            self.sites.append((sr.loop_pc, 0, _DEV_HOME, 2))
+            self.pending.append((k_site, flt, faddr, None, kstar))
+            m_eff = jnp.where(flt, js, m)
+        else:
+            flt = jnp.zeros(B, bool)
+            js = kstar = None
+            m_eff = m
+        live = valid & (it < m_eff[:, None])
+
+        mem0 = self.memf             # pre-loop snapshot (exactness above)
+        v = mem0[home * P + int(self.base[sr.src_rid])
+                 + (src_off & src_mask)]                        # (B, cap)
+        acc_addr = home * P + int(self.base[sr.acc_rid]) + \
+            (acc_off & acc_mask)
+        old = mem0[acc_addr]                                    # (B, cap)
+        hit = (old == self.regs[sr.cmp_reg][:, None]) & live
+        delta = jnp.where(hit, v, jnp.zeros((), jnp.int64))
+        size = self.memf.shape[0]
+        tgt = jnp.where(live, acc_addr, size)
+        self.memf = self.memf.at[tgt].add(delta, mode="drop")
+
+        if self.protect:
+            n_v = jnp.where(flt, js + (kstar >= 2).astype(jnp.int64), m)
+            steps_n = jnp.where(flt, js * 4 + kstar, m * 4)
+        else:
+            n_v = m
+            steps_n = m * 4
+        self.set_reg(sr.i_reg, self.regs[sr.i_reg] + m_eff, p)
+        self.set_reg(sr.j_reg, self.regs[sr.j_reg] + m_eff * s, p)
+        self.set_reg(sr.v_reg,
+                     jnp.take_along_axis(
+                         v, jnp.clip(n_v - 1, 0, cap - 1)[:, None],
+                         axis=1)[:, 0], p & (n_v > 0))
+        self.set_reg(sr.old_reg,
+                     jnp.take_along_axis(
+                         old, jnp.clip(m_eff - 1, 0, cap - 1)[:, None],
+                         axis=1)[:, 0], p & (m_eff > 0))
+        self.steps = self.steps + jnp.where(p, steps_n, 0)
+
+    # -- the map / zip-with superoperator ---------------------------------
+
+    def _fused_map_loop(self, ml: MapLoop, m, p) -> None:
+        """Window gather(s) + one elementwise ALU + one deterministic
+        scatter in (iteration, request) commit order.  The gathers read
+        the pre-loop snapshot; the matcher requires the destination
+        region to differ from every source region, so within a lane no
+        store feeds a later load, and across lanes the compiled path's
+        standing no-conflict assumption applies (same class as the
+        gather chain and plain STORE lowering)."""
+        B, P = self.B, self.P
+        cap = ml.cap
+        body_len = 6 if ml.is_zip else 5
+        it = jnp.arange(cap, dtype=jnp.int64)[None, :]          # (1, cap)
+        i0 = self.regs[ml.i_reg][:, None]
+        j0 = self.regs[ml.j_reg][:, None]
+        home = self.homes[:, None]
+        valid = (it < m[:, None]) & p[:, None]
+        src_off = i0 + it
+        dst_off = j0 + it
+        src_mask = int(self.mask[ml.src_rid])
+        dst_mask = int(self.mask[ml.dst_rid])
+        src2_mask = int(self.mask[ml.src2_rid]) if ml.is_zip else 0
+        store_k = 4 if ml.is_zip else 3
+
+        if self.protect:
+            c1 = src_off != (src_off & src_mask)
+            if self.check_failed:
+                c1 = self.failed[self.homes][:, None] | c1
+            c2 = (src_off != (src_off & src2_mask)) if ml.is_zip \
+                else jnp.zeros_like(c1)
+            c_st = dst_off != (dst_off & dst_mask)
+            k_j = jnp.where(c1, 1, jnp.where(c2, 2,
+                            jnp.where(c_st, store_k, 0)))
+            k_j = jnp.where(valid, k_j, 0)
+            has = k_j > 0
+            flt = jnp.any(has, axis=1)
+            js = jnp.argmax(has, axis=1).astype(jnp.int64)
+            jsc = js[:, None]
+            kstar = jnp.take_along_axis(k_j, jsc, axis=1)[:, 0]
+            faddr = jnp.where(
+                kstar == store_k,
+                jnp.take_along_axis(dst_off, jsc, axis=1)[:, 0],
+                jnp.take_along_axis(src_off, jsc, axis=1)[:, 0])
+            self.halted = self.halted | flt
+            k_site = len(self.sites)
+            self.sites.append((ml.loop_pc, 0, _DEV_HOME,
+                               4 if ml.is_zip else 3))
+            self.pending.append((k_site, flt, faddr, None, kstar))
+            m_eff = jnp.where(flt, js, m)
+        else:
+            flt = jnp.zeros(B, bool)
+            js = kstar = None
+            m_eff = m
+        live = valid & (it < m_eff[:, None])
+
+        mem0 = self.memf
+        a_vals = mem0[home * P + int(self.base[ml.src_rid])
+                      + (src_off & src_mask)]                   # (B, cap)
+        if ml.is_zip:
+            b_vals = mem0[home * P + int(self.base[ml.src2_rid])
+                          + (src_off & src2_mask)]
+            rhs = b_vals
+        elif ml.alu_imm is not None:
+            rhs = jnp.full((B, cap), ml.alu_imm, jnp.int64)
+            b_vals = None
+        else:
+            rhs = self.regs[ml.rhs_reg][:, None] + jnp.zeros(
+                (B, cap), jnp.int64)
+            b_vals = None
+        c_vals = _alu_static(ml.alu_op, a_vals, rhs)
+        dst_addr = home * P + int(self.base[ml.dst_rid]) + \
+            (dst_off & dst_mask)
+        # commit in (iteration, request) order = the engine's round robin
+        self.memf = det_scatter(self.memf,
+                                jnp.transpose(dst_addr, (1, 0)),
+                                jnp.transpose(c_vals, (1, 0)),
+                                jnp.transpose(live, (1, 0)))
+
+        if self.protect:
+            n_a = jnp.where(flt, js + (kstar >= 2).astype(jnp.int64), m)
+            n_c = jnp.where(flt, js + (kstar >= store_k).astype(jnp.int64),
+                            m)
+            steps_n = jnp.where(flt, js * body_len + kstar, m * body_len)
+        else:
+            n_a = n_c = m
+            steps_n = m * body_len
+        self.set_reg(ml.i_reg, self.regs[ml.i_reg] + m_eff, p)
+        self.set_reg(ml.j_reg, self.regs[ml.j_reg] + m_eff, p)
+        self.set_reg(ml.a_reg,
+                     jnp.take_along_axis(
+                         a_vals, jnp.clip(n_a - 1, 0, cap - 1)[:, None],
+                         axis=1)[:, 0], p & (n_a > 0))
+        if ml.is_zip:
+            n_b = jnp.where(flt, js + (kstar >= 3).astype(jnp.int64), m) \
+                if self.protect else m
+            self.set_reg(ml.b_reg,
+                         jnp.take_along_axis(
+                             b_vals, jnp.clip(n_b - 1, 0, cap - 1)[:, None],
+                             axis=1)[:, 0], p & (n_b > 0))
+        self.set_reg(ml.c_reg,
+                     jnp.take_along_axis(
+                         c_vals, jnp.clip(n_c - 1, 0, cap - 1)[:, None],
+                         axis=1)[:, 0], p & (n_c > 0))
+        self.steps = self.steps + jnp.where(p, steps_n, 0)
+
     # -- segment emission ---------------------------------------------------
 
     def emit_segment(self, lo: int, hi: int, pred) -> Dict[int, jnp.ndarray]:
@@ -811,6 +1209,23 @@ class _Tracer:
                     self._fused_gather_chain(g, m, p)
                     pc = body_hi
                     continue
+                if self.superops and cap > 0:
+                    # scatter-reduce fusion is exact only under the wave
+                    # conflict proof plus the static within-lane address-
+                    # uniqueness check (see ScatterReduce docstring)
+                    sr = match_scatter_reduce(self.instrs, l) \
+                        if self.noconflict else None
+                    if sr is not None and \
+                            abs(sr.stride) * cap <= int(
+                                self.mask[sr.acc_rid]) + 1:
+                        self._fused_scatter_reduce(sr, m, p)
+                        pc = body_hi
+                        continue
+                    ml = match_map_loop(self.instrs, l)
+                    if ml is not None:
+                        self._fused_map_loop(ml, m, p)
+                        pc = body_hi
+                        continue
                 broken = jnp.zeros(self.B, bool)
                 for it in range(cap):
                     it_pred = pred & (it < m) & ~broken
@@ -904,15 +1319,25 @@ def _finalize_fault(tracer: _Tracer):
         if x is not None:
             aux = aux + fi * x
     site = site - 1
-    pc_t, op_t, dev_t, chain_t = (jnp.asarray(np.asarray(col, np.int64))
-                                  for col in zip(*tracer.sites))
+    pc_t, op_t, dev_t, kind_t = (jnp.asarray(np.asarray(col, np.int64))
+                                 for col in zip(*tracer.sites))
     sidx = jnp.maximum(site, 0)
     pcs, opv, devc = pc_t[sidx], op_t[sidx], dev_t[sidx]
-    chain = chain_t[sidx] != 0
+    kind = kind_t[sidx]
+    chain = kind != 0
+    # fused sites latch the faulting body-instruction index k* in `aux`;
+    # body starts at loop_pc + 1, so the faulting pc is loop_pc + k*,
+    # and the opcode follows from the shape (gather chain: k*=3 is the
+    # MEMCPY; scatter-reduce: k*=2 is the CAA; map/zip loop: the STORE
+    # sits at k*=3/4; everything earlier is a LOAD)
     f_pc = jnp.where(chain, pcs + aux, pcs)
-    f_op = jnp.where(chain,
-                     jnp.where(aux == 3, int(Op.MEMCPY),
-                               int(Op.LOAD)), opv)
+    fused_op = jnp.where(
+        kind == 1, jnp.where(aux == 3, int(Op.MEMCPY), int(Op.LOAD)),
+        jnp.where(kind == 2,
+                  jnp.where(aux == 2, int(Op.CAA), int(Op.LOAD)),
+                  jnp.where(aux == jnp.where(kind == 4, 4, 3),
+                            int(Op.STORE), int(Op.LOAD))))
+    f_op = jnp.where(chain, fused_op, opv)
     f_dev = jnp.where(devc == _DEV_LATCHED, devp,
                       jnp.where(devc == _DEV_HOME, tracer.homes, devc))
     faulted = site >= 0
@@ -927,6 +1352,7 @@ def build_compiled(op: VerifiedOperator, regions: RegionTable,
                    n_devices: int, batch: int, *, impl: str = "xla",
                    superops: bool = True, double_buffer: bool = False,
                    protect: bool = True, check_failed: bool = True,
+                   noconflict: bool = False,
                    unroll_limit: int = DEFAULT_UNROLL_LIMIT):
     """Trace-compile a verified operator; returns a jit-compiled
     ``f(mem, params, homes, failed) -> vm.VMResult`` with batched fields
@@ -947,6 +1373,12 @@ def build_compiled(op: VerifiedOperator, regions: RegionTable,
     (the ``failed`` argument is accepted and ignored) — the variant the
     invoke path builds for the fault-free hot path, where no device is
     down and the per-op mask gather would be pure overhead.
+
+    ``noconflict=True`` asserts the caller holds a registration-time
+    proof (``access.prove_wave_noconflict``) that no word written by one
+    request is touched by another in the waves this engine will run.
+    It unlocks the scatter-reduce superoperator fusion, whose
+    snapshot-read lowering is exact only under that proof.
     """
     reason = why_not_compilable(op, unroll_limit)
     if reason is not None:
@@ -972,7 +1404,7 @@ def build_compiled(op: VerifiedOperator, regions: RegionTable,
             pool_words=int(pool_words), batch=B, homes=homes, failed=failed,
             mem_flat=mem.reshape(-1), regs=regs, impl=impl,
             superops=superops, double_buffer=double_buffer, protect=protect,
-            check_failed=check_failed)
+            check_failed=check_failed, noconflict=noconflict)
         esc = tracer.emit_segment(0, n_instr, jnp.ones(B, bool))
         assert not esc, "verifier admitted a jump past the program end"
         status, fault = _finalize_fault(tracer)
@@ -991,27 +1423,31 @@ def compiled_cached(op: VerifiedOperator, regions: RegionTable,
                     n_dev: int, batch: int, impl: str = "xla",
                     superops: bool = True, double_buffer: bool = False,
                     protect: bool = True,
-                    failed: Optional[Set[int]] = None) -> bool:
+                    failed: Optional[Set[int]] = None,
+                    noconflict: bool = False) -> bool:
     """True iff the compiled trace for this (op, batch) is already
     built (see :func:`vm.engine_cached`).  ``failed`` mirrors the invoke
     argument: the fault-free hot path (``failed=None``) and the
     degraded-mode path compile to different variants."""
     return _vm.engine_key(op, regions, n_dev, batch, impl, superops,
                           double_buffer, bool(protect),
-                          failed is not None) in _COMPILED_CACHE
+                          failed is not None,
+                          bool(noconflict)) in _COMPILED_CACHE
 
 
 def _cached_compiled(op: VerifiedOperator, regions: RegionTable, n_dev: int,
                      batch: int, impl: str, superops: bool,
                      double_buffer: bool = False, protect: bool = True,
-                     check_failed: bool = True):
+                     check_failed: bool = True, noconflict: bool = False):
     key = _vm.engine_key(op, regions, n_dev, batch, impl, superops,
-                         double_buffer, bool(protect), bool(check_failed))
+                         double_buffer, bool(protect), bool(check_failed),
+                         bool(noconflict))
     fn = _COMPILED_CACHE.get(key)
     if fn is None:
         fn = build_compiled(op, regions, n_dev, batch, impl=impl,
                             superops=superops, double_buffer=double_buffer,
-                            protect=protect, check_failed=check_failed)
+                            protect=protect, check_failed=check_failed,
+                            noconflict=noconflict)
         _COMPILED_CACHE[key] = fn
     return fn
 
@@ -1021,14 +1457,17 @@ def invoke_compiled(op: VerifiedOperator, regions: RegionTable,
                     *, homes: Union[int, Sequence[int]] = 0,
                     failed: Optional[Set[int]] = None, impl: str = "xla",
                     superops: bool = True, double_buffer: bool = False,
-                    protect: bool = True,
+                    protect: bool = True, noconflict: bool = False,
                     block: bool = True) -> "_vm.BatchedInvokeResult":
     """Numpy-in/numpy-out batched execution on the compiled fast path
     (same contract as :func:`vm.invoke_batched`).  ``failed=None``
     selects the variant with every failed-device check statically
-    elided — the fault-free hot path pays nothing for the fencing."""
+    elided — the fault-free hot path pays nothing for the fencing.
+    ``noconflict=True`` asserts the wave conflict proof (see
+    :func:`build_compiled`)."""
     p, h = _vm._marshal_batch(params, homes)
     fn = _cached_compiled(op, regions, int(mem.shape[0]), p.shape[0],
                           impl, superops, double_buffer, protect,
-                          check_failed=failed is not None)
+                          check_failed=failed is not None,
+                          noconflict=noconflict)
     return _vm.run_batched_fn(fn, mem, p, h, failed, block=block)

@@ -365,7 +365,8 @@ class EngineCost:
     def sharded_us(self, batch: int, n_devices: int, steps: int,
                    contention_rate: float = 0.0, *,
                    batch_per_device: Optional[int] = None,
-                   cached: bool = True) -> float:
+                   cached: bool = True,
+                   noconflict: bool = False) -> float:
         """One shard_map launch over the device mesh: per-device
         sub-waves advance in lockstep, each macro-step paying the fixed
         collective group that routes remote LOAD/MEMCPY traffic.  The
@@ -377,15 +378,24 @@ class EngineCost:
         serializes over the *global* batch with a psum-routed read per
         lane — the term that makes contention catastrophically
         expensive on a mesh, which is exactly the signal placement
-        decisions need."""
+        decisions need.
+
+        ``noconflict=True`` prices a statically-proven-conflict-free
+        wave: the per-step footprint all_gather (one collective of the
+        group) is skipped along with the sweep, and the serialized-
+        fallback term vanishes — the proof replaces the contention
+        guess entirely."""
         bpd = batch_per_device if batch_per_device is not None \
             else -(-batch // max(n_devices, 1))     # balanced ceil
+        if noconflict:
+            contention_rate = 0.0
         contended = min(max(contention_rate, 0.0), 1.0) * steps
         clean = steps - contended
         coll = self.collective_us if n_devices > 1 else 0.0
+        colls = self.collectives_per_step - (1 if noconflict else 0)
         return (self._miss(cached) + self.launch_us
                 + clean * (self.vstep_us + bpd * self.vlane_us
-                           + self.collectives_per_step * coll)
+                           + colls * coll)
                 + contended * (self.vstep_us
                                + batch * (self.serial_lane_us + coll)))
 
@@ -444,6 +454,10 @@ class DispatchDecision:
     costs: Dict[str, float]
     entropy_bits: float = 0.0
     contention_rate: float = 0.0
+    # True when a registration-time conflict proof covered the wave: the
+    # caller's contention_rate guess was discarded (forced to 0.0) and
+    # the engines run with the runtime sweep statically skipped.
+    static_noconflict: bool = False
 
     def __post_init__(self):
         if self.mode not in self.costs:
@@ -621,7 +635,8 @@ class DispatchCostModel:
                        batched_cached: bool = True,
                        compiled_cached: bool = True,
                        dbuf_cached: bool = True,
-                       key: Optional[int] = None) -> DispatchDecision:
+                       key: Optional[int] = None,
+                       static_noconflict: bool = False) -> DispatchDecision:
         """Pick the engine for a single-op wave: "batched" (the lockstep
         interpreter; at B=1 this *is* the classic scalar MP datapath),
         "compiled" (the straight-line trace), or "compiled_dbuf" (the
@@ -633,7 +648,14 @@ class DispatchCostModel:
         batch size.  ``key`` (the operator's slot id) applies that
         slot's online-learned wall-clock scales to every candidate, so
         the argmin adapts to the running host (see
-        :meth:`observe_dispatch`)."""
+        :meth:`observe_dispatch`).
+
+        ``static_noconflict=True`` reports a registration-time conflict
+        proof over the wave: the ``contention_rate`` guess is discarded
+        (a proven wave never prices the serialized-fallback risk) and
+        the compiled candidates stay eligible."""
+        if static_noconflict:
+            contention_rate = 0.0
         costs = {"batched": self.cost.batched_us(batch, step_bound,
                                                  contention_rate,
                                                  cached=batched_cached)
@@ -648,7 +670,8 @@ class DispatchCostModel:
                     * self.dispatch_scale(key, "compiled_dbuf")
         mode = min(costs, key=costs.get)
         return DispatchDecision(mode=mode, costs=costs,
-                                contention_rate=contention_rate)
+                                contention_rate=contention_rate,
+                                static_noconflict=static_noconflict)
 
     # -- mixed-op waves ---------------------------------------------------
 
@@ -688,7 +711,8 @@ class DispatchCostModel:
                          sharded_feasible: bool = True,
                          mixed_cached: bool = True,
                          sharded_cached: bool = True,
-                         segments: Optional[Sequence[SegmentStats]] = None
+                         segments: Optional[Sequence[SegmentStats]] = None,
+                         static_noconflict: bool = False
                          ) -> DispatchDecision:
         """Pick where a mixed wave executes: ``"single"`` (the dense
         one-launch mixed engine — every request against the whole pool
@@ -720,7 +744,15 @@ class DispatchCostModel:
         contention segmentation is excluded (it reorders requests
         across ops — see :meth:`choose_mixed`), and without ``segments``
         the mixed engine alone is priced, as before.  The audit entries
-        ``single_mixed``/``single_segmented`` record both candidates."""
+        ``single_mixed``/``single_segmented`` record both candidates.
+
+        ``static_noconflict=True`` reports a registration-time conflict
+        proof: the contention guess is discarded, and the sharded
+        candidate is priced with the footprint all_gather skipped (see
+        :meth:`EngineCost.sharded_us`) — the proof is what lets a
+        collective leave the mesh's per-step schedule."""
+        if static_noconflict:
+            contention_rate = 0.0
         costs = {"single": self.cost.batched_us(batch, step_bound,
                                                 contention_rate,
                                                 cached=mixed_cached)}
@@ -734,15 +766,17 @@ class DispatchCostModel:
             costs["sharded"] = self.cost.sharded_us(
                 batch, n_devices, step_bound, contention_rate,
                 batch_per_device=batch_per_device,
-                cached=sharded_cached)
+                cached=sharded_cached, noconflict=static_noconflict)
         mode = min(costs, key=costs.get)
         return DispatchDecision(mode=mode, costs=costs,
-                                contention_rate=contention_rate)
+                                contention_rate=contention_rate,
+                                static_noconflict=static_noconflict)
 
     def choose_mixed(self, *, segments: Sequence[SegmentStats],
                      contention_rate: float = 0.0,
                      mixed_cached: bool = True,
-                     key: Optional[int] = None) -> DispatchDecision:
+                     key: Optional[int] = None,
+                     static_noconflict: bool = False) -> DispatchDecision:
         """Pick the engine for a mixed-op wave: "mixed" (one lockstep
         launch over the merged instruction store) vs "segmented"
         (stable-sort, one compiled/batched launch per same-op segment).
@@ -759,9 +793,16 @@ class DispatchCostModel:
         round-robin interleaving when cross-segment footprints are
         disjoint — exactly what the contention hint denies.  This
         mirrors :meth:`choose_batched` excluding the compiled trace.
+
+        ``static_noconflict=True`` reports a registration-time conflict
+        proof over the wave: the contention guess is discarded, so the
+        segmented candidate (which *requires* cross-segment
+        disjointness — now proven, not assumed) stays eligible.
         """
         if not segments:
             raise ValueError("mixed wave needs at least one segment")
+        if static_noconflict:
+            contention_rate = 0.0
         entropy = _entropy_bits([s.size for s in segments])
         costs = {"mixed": self.mixed_us(segments, contention_rate,
                                         cached=mixed_cached)
@@ -773,4 +814,5 @@ class DispatchCostModel:
         mode = min(costs, key=costs.get)
         return DispatchDecision(mode=mode, costs=costs,
                                 entropy_bits=entropy,
-                                contention_rate=contention_rate)
+                                contention_rate=contention_rate,
+                                static_noconflict=static_noconflict)

@@ -705,6 +705,15 @@ class TiaraEndpoint:
     def outstanding(self) -> int:
         return self._outstanding
 
+    @property
+    def last_noconflict(self) -> Optional[bool]:
+        """Did the last doorbell wave carry a static no-conflict proof
+        (registration-time footprints with that wave's concrete params —
+        ``registry.prove_wave_noconflict``)?  ``True`` means the engines
+        ran with the runtime sweep compiled out; ``None`` before any
+        wave."""
+        return self.registry.last_noconflict
+
     def doorbell(self, *, mode: str = "auto",
                  contention_rate: float = 0.0,
                  placement: str = "single",

@@ -36,10 +36,12 @@ shared store and enforce the aggregate capacity.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Set, Union
+from typing import (Dict, Iterator, List, Optional, Sequence, Set, Tuple,
+                    Union)
 
 import numpy as np
 
+from repro.core import access
 from repro.core import compile as tcompile
 from repro.core import isa, vm
 from repro.core.costmodel import (DispatchCostModel, DispatchDecision,
@@ -81,10 +83,33 @@ class Slot:
     # discount or the dbuf candidate would price a win that the emitted
     # schedule cannot deliver).
     chain_iters: int = 0
+    # Registration-time introspection (see ``tcompile.superop_report``):
+    # every (superop kind, loop pc) the trace compiler will fuse, and —
+    # when some loop matched nothing — the first structural reason the
+    # gather-chain matcher bailed on it.
+    superops: Tuple[Tuple[str, int], ...] = ()
+    superop_near_miss: Optional[str] = None
 
     @property
     def compilable(self) -> bool:
         return self.compile_reason is None
+
+    @property
+    def footprint(self) -> Optional[access.OpFootprint]:
+        """The operator's registration-time symbolic access footprint."""
+        return self.verified.footprint
+
+    def describe_analysis(self) -> str:
+        """One-line summary of the static analysis artifacts: derived
+        footprint, matched superoperators, and the nearest superop miss."""
+        bits = ["footprint: "
+                + access.describe_footprint(self.footprint, self.regions)]
+        if self.superops:
+            bits.append("superops: " + ", ".join(
+                f"{kind}@pc{pc}" for kind, pc in self.superops))
+        if self.superop_near_miss is not None:
+            bits.append(f"superop near-miss: {self.superop_near_miss}")
+        return "; ".join(bits)
 
     def interp(self, mem: np.ndarray, params: Sequence[int] = (), *,
                home: int = 0,
@@ -95,15 +120,18 @@ class Slot:
     def batched(self, mem: np.ndarray, params: Sequence[Sequence[int]], *,
                 homes: Union[int, Sequence[int]] = 0,
                 failed: Optional[Set[int]] = None,
-                block: bool = True) -> vm.BatchedInvokeResult:
+                block: bool = True,
+                static_noconflict: bool = False) -> vm.BatchedInvokeResult:
         return vm.invoke_batched(self.verified, self.regions, mem, params,
-                                 homes=homes, failed=failed, block=block)
+                                 homes=homes, failed=failed, block=block,
+                                 static_noconflict=static_noconflict)
 
     def compiled(self, mem: np.ndarray, params: Sequence[Sequence[int]], *,
                  homes: Union[int, Sequence[int]] = 0,
                  failed: Optional[Set[int]] = None,
                  impl: str = "xla", double_buffer: bool = False,
-                 block: bool = True) -> vm.BatchedInvokeResult:
+                 block: bool = True,
+                 static_noconflict: bool = False) -> vm.BatchedInvokeResult:
         if not self.compilable:
             raise ValueError(
                 f"op {self.op_id} has no compiled entry point: "
@@ -112,23 +140,42 @@ class Slot:
                                         params, homes=homes, failed=failed,
                                         impl=impl,
                                         double_buffer=double_buffer,
+                                        noconflict=static_noconflict,
                                         block=block)
+
+
+_PROOF_CACHE_MAX = 512
 
 
 class OperatorRegistry:
     def __init__(self, regions: RegionTable, *, n_devices: int = 1,
                  max_steps: Optional[int] = None,
-                 cost_model: Optional[DispatchCostModel] = None):
+                 cost_model: Optional[DispatchCostModel] = None,
+                 static_analysis: bool = True):
         self.regions = regions
         self.n_devices = int(n_devices)
         self.max_steps = max_steps
         self.cost_model = cost_model or DispatchCostModel()
+        # static_analysis=False disables the registration-time conflict
+        # proofs at dispatch: every wave runs with the runtime sweep,
+        # exactly the pre-analysis behaviour (escape hatch + A/B lever
+        # for benchmarks).
+        self.static_analysis = bool(static_analysis)
         self.last_decision: Optional[DispatchDecision] = None
         self.last_placement: Optional[DispatchDecision] = None
+        # Audit hooks: did the last wave carry a static no-conflict
+        # proof, and which segmented-wave op groups were coalesced into
+        # one launch because their programs are bit-identical.
+        self.last_noconflict: Optional[bool] = None
+        self.last_fused_groups: Optional[List[List[int]]] = None
         self._grants: Dict[str, Grant] = {}
         self._slots: Dict[int, Slot] = {}
         self._by_name: Dict[str, int] = {}
         self._store_used = 0
+        # Bounded memo of wave-proof verdicts: the serving loop re-forms
+        # near-identical waves, and the proof is pure in
+        # (op_ids, params, homes, n_devices).
+        self._proof_cache: Dict[tuple, bool] = {}
 
     # -- tenants --------------------------------------------------------
 
@@ -162,13 +209,31 @@ class OperatorRegistry:
                 f"{program.n_instr} > {isa.INSTR_STORE_SIZE}")
         op_id = len(self._slots)
         chains = tcompile.find_gather_chains(verified)
+        report = tcompile.superop_report(verified)
+        matched = tuple(report["matched"])  # type: ignore[arg-type]
+        near_miss = report["near_miss"]
+        reason = tcompile.why_not_compilable(verified)
+        if reason is not None:
+            # interp-only slots surface the full analysis in the reason
+            # itself — the one string a "why is this slow" caller reads
+            extra = ["footprint: "
+                     + access.describe_footprint(verified.footprint,
+                                                 self.regions)]
+            if matched:
+                extra.append("superops: " + ", ".join(
+                    f"{kind}@pc{pc}" for kind, pc in matched))
+            if near_miss is not None:
+                extra.append(f"superop near-miss: {near_miss}")
+            reason = "; ".join([reason] + extra)
         self._slots[op_id] = Slot(
             op_id=op_id, tenant=tenant, verified=verified,
             start_pc=self._store_used, regions=self.regions,
-            compile_reason=tcompile.why_not_compilable(verified),
+            compile_reason=reason,
             n_gather_chains=len(chains),
             chain_iters=sum(g.cap for g in chains
-                            if g.cap > tcompile.DBUF_CHUNK))
+                            if g.cap > tcompile.DBUF_CHUNK),
+            superops=matched,
+            superop_near_miss=near_miss)
         self._store_used += program.n_instr
         self._by_name[f"{tenant}/{program.name}"] = op_id
         return op_id
@@ -192,6 +257,53 @@ class OperatorRegistry:
         for op_id, slot in self._slots.items():
             t[op_id] = slot.start_pc
         return t
+
+    # -- static conflict proofs (wave formation) --------------------------
+
+    def prove_wave_noconflict(self, op_ids: Sequence[int],
+                              params: Sequence[Sequence[int]],
+                              homes: Union[int, Sequence[int]] = 0, *,
+                              n_devices: Optional[int] = None) -> bool:
+        """Substitute the wave's concrete params into the registration-time
+        footprints and try to prove the wave conflict-free.
+
+        ``True`` is a proof: no macro-step of this wave can make the
+        runtime sweep flag a conflict, so the lockstep engines may run
+        with the sweep (and the sharded footprint all_gather) compiled
+        out.  ``False`` is *not* a disproof — it just means "could not
+        prove" (a ⊤ footprint, a disabled analysis, an unregistered
+        footprint) and the engines keep the runtime sweep.  Verdicts are
+        memoized; the serving loop re-forms near-identical waves.
+        """
+        if not self.static_analysis:
+            return False
+        ids = np.asarray(list(op_ids), dtype=np.int64)
+        B = int(ids.size)
+        if B != len(params):
+            raise ValueError(f"{B} op_ids for {len(params)} param rows")
+        if B == 0:
+            return True
+        # (B == 1 still runs the proof: a lone lane's MEMCPY sites must
+        # be src/dst self-disjoint or the sweep would flag them)
+        n_dev = self.n_devices if n_devices is None else int(n_devices)
+        h = vm.homes_array(homes, B)
+        key = (ids.tobytes(), h.tobytes(), n_dev,
+               tuple(tuple(int(x) for x in row) for row in params))
+        hit = self._proof_cache.get(key)
+        if hit is not None:
+            return hit
+        fps = []
+        for i in ids:
+            fp = self._slots[int(i)].verified.footprint
+            if fp is None:
+                return False
+            fps.append(fp)
+        verdict = access.prove_wave_noconflict(fps, params, h, self.regions,
+                                               n_devices=n_dev)
+        if len(self._proof_cache) >= _PROOF_CACHE_MAX:
+            self._proof_cache.pop(next(iter(self._proof_cache)))
+        self._proof_cache[key] = verdict
+        return verdict
 
     # -- invocation (data path) -------------------------------------------
 
@@ -236,7 +348,9 @@ class OperatorRegistry:
                         failed: Optional[Set[int]] = None,
                         mode: str = "auto",
                         contention_rate: float = 0.0,
-                        block: bool = True) -> vm.BatchedInvokeResult:
+                        block: bool = True,
+                        static_noconflict: Optional[bool] = None
+                        ) -> vm.BatchedInvokeResult:
         """Line-rate dispatch: B requests, one XLA launch.  ``mode``:
         "auto" (cost-model pick), "batched" (force the lockstep
         interpreter — always exact, even under contention), "compiled"
@@ -246,35 +360,50 @@ class OperatorRegistry:
         footprints collide; any positive value steers "auto" to the
         interpreter, whose per-step conflict check serializes exactly.
         ``block=False`` defers result retirement (the endpoint's
-        split-phase doorbell)."""
+        split-phase doorbell).
+
+        ``static_noconflict``: None (default) derives the wave's static
+        conflict proof from the registered footprints; an explicit bool
+        is a caller-supplied verdict (a mixed wave's proof covers each
+        of its segments).  A proven wave runs the engines with the
+        runtime sweep compiled out and overrides ``contention_rate``."""
         self._check_mode(mode, _BATCHED_MODES)
         slot = self._slots[op_id]
+        n_dev = int(mem.shape[0])
+        B = len(params)
+        nc = static_noconflict
+        if nc is None:
+            nc = B > 1 and self.prove_wave_noconflict(
+                np.full(B, op_id, dtype=np.int64), params, homes,
+                n_devices=n_dev)
+        nc = bool(nc)
+        self.last_noconflict = nc
         if mode == "auto":
-            n_dev = int(mem.shape[0])
-            B = len(params)
             decision = self.cost_model.choose_batched(
                 batch=B, step_bound=slot.verified.step_bound,
                 compilable=slot.compilable, key=op_id,
                 contention_rate=contention_rate,
                 chain_iters=slot.chain_iters,
+                static_noconflict=nc,
                 batched_cached=vm.engine_cached(
-                    slot.verified, self.regions, n_dev, B),
+                    slot.verified, self.regions, n_dev, B,
+                    static_noconflict=nc),
                 compiled_cached=tcompile.compiled_cached(
-                    slot.verified, self.regions, n_dev, B),
+                    slot.verified, self.regions, n_dev, B, noconflict=nc),
                 # only worth a cache-key hash when the dbuf candidate
                 # can actually be priced (the op has gather chains)
                 dbuf_cached=(slot.chain_iters > 0
                              and tcompile.compiled_cached(
                                  slot.verified, self.regions, n_dev, B,
-                                 double_buffer=True)))
+                                 double_buffer=True, noconflict=nc)))
             self.last_decision = decision
             mode = decision.mode
         if mode == "batched":
             return slot.batched(mem, params, homes=homes, failed=failed,
-                                block=block)
+                                block=block, static_noconflict=nc)
         return slot.compiled(mem, params, homes=homes, failed=failed,
                              double_buffer=(mode == "compiled_dbuf"),
-                             block=block)
+                             block=block, static_noconflict=nc)
 
     # -- mixed-op invocation (the multi-tenant line-rate path) -------------
 
@@ -361,16 +490,25 @@ class OperatorRegistry:
         for i in np.unique(ids):
             if int(i) not in self._slots:
                 raise KeyError(f"op_id {int(i)} not registered")
+        self.last_fused_groups = None
+        # Static conflict proof over the whole wave, formed once at plan
+        # time: a True lets every engine below (dense mixed, segmented
+        # sub-launches, the sharded mesh) run with the runtime sweep —
+        # and the mesh's footprint all_gather — compiled out.
+        nc = ids.size > 1 and self.prove_wave_noconflict(
+            ids, params, homes, n_devices=int(mem.shape[0]))
         if placement != "single":
             out = self._invoke_placed(ids, mem, params, homes=homes,
                                       failed=failed, mode=mode,
                                       contention_rate=contention_rate,
-                                      placement=placement)
+                                      placement=placement,
+                                      static_noconflict=nc)
             if out is not None:
                 # the wave ran on the mesh: no engine-mode decision was
                 # made, so clear the audit hook rather than leave an
                 # earlier wave's pick looking current
                 self.last_decision = None
+                self.last_noconflict = nc
                 return out
         plan = tcompile.plan_mixed_batch(ids)
         decision = None
@@ -379,33 +517,37 @@ class OperatorRegistry:
                 return self._invoke_batched(
                     int(ids[0]), mem, params, homes=homes, failed=failed,
                     mode="auto", contention_rate=contention_rate,
-                    block=block)
+                    block=block, static_noconflict=nc)
             n_dev = int(mem.shape[0])
             decision = self.cost_model.choose_mixed(
                 segments=self._segment_stats(plan, n_dev),
                 contention_rate=contention_rate,
+                static_noconflict=nc,
                 mixed_cached=vm.mixed_engine_cached(
-                    self.store_ops(), self.regions, n_dev, plan.batch))
+                    self.store_ops(), self.regions, n_dev, plan.batch,
+                    static_noconflict=nc))
             mode = decision.mode
         if mode == "mixed":
             out = vm.invoke_batched_mixed(
                 self.store_ops(), self.regions, mem, ids, params,
-                homes=homes, failed=failed, block=block)
+                homes=homes, failed=failed, block=block,
+                static_noconflict=nc)
         elif mode == "segmented":
             out = self._invoke_groups(
-                ((seg.op_id, plan.segment_indices(seg))
-                 for seg in plan.segments),
+                self._coalesced_segments(plan),
                 mem, params, homes=homes, failed=failed,
-                contention_rate=contention_rate, block=block)
+                contention_rate=contention_rate, block=block,
+                static_noconflict=nc)
         else:
             out = self._invoke_groups(
                 self._arrival_runs(ids), mem, params, homes=homes,
                 failed=failed, contention_rate=contention_rate,
-                block=block)
+                block=block, static_noconflict=nc)
         if decision is not None:
             # nested per-group dispatches recorded their own decisions;
             # the wave-level pick is what callers audit
             self.last_decision = decision
+        self.last_noconflict = nc
         return out
 
     def _invoke_placed(self, ids: np.ndarray, mem: np.ndarray,
@@ -413,11 +555,14 @@ class OperatorRegistry:
                        homes: Union[int, Sequence[int]],
                        failed: Optional[Set[int]],
                        mode: str, contention_rate: float,
-                       placement: str
+                       placement: str,
+                       static_noconflict: bool = False
                        ) -> Optional[vm.BatchedInvokeResult]:
         """Resolve a non-"single" placement: run the wave on the sharded
         mesh engine, or return None when the cost model sends an "auto"
-        wave back to single-chip execution."""
+        wave back to single-chip execution.  A statically-proven wave
+        (``static_noconflict``) runs the mesh step without the footprint
+        all_gather or the sweep, and is priced accordingly."""
         if mode not in ("auto", "mixed"):
             raise ValueError(
                 f"placement={placement!r} executes the mixed lockstep "
@@ -448,16 +593,42 @@ class OperatorRegistry:
                 sharded_feasible=(jaxcompat.device_count() >= n_dev
                                   and not failed),
                 mixed_cached=vm.mixed_engine_cached(
-                    self.store_ops(), self.regions, n_dev, int(ids.size)),
+                    self.store_ops(), self.regions, n_dev, int(ids.size),
+                    static_noconflict=static_noconflict),
                 sharded_cached=vm.sharded_engine_cached(
                     self.store_ops(), self.regions, n_dev,
-                    plan.batch_per_device),
-                segments=self._segment_stats(dense_plan, n_dev))
+                    plan.batch_per_device,
+                    static_noconflict=static_noconflict),
+                segments=self._segment_stats(dense_plan, n_dev),
+                static_noconflict=static_noconflict)
             self.last_placement = decision
             if decision.mode != "sharded":
                 return None
         return vm.invoke_sharded_mixed(self.store_ops(), self.regions,
-                                       mem, plan, params, failed=failed)
+                                       mem, plan, params, failed=failed,
+                                       static_noconflict=static_noconflict)
+
+    def _coalesced_segments(self, plan: "tcompile.MixedPlan"
+                            ) -> Iterator[Tuple[int, np.ndarray]]:
+        """Cross-op fusion for the segmented path: plan segments whose
+        slots hold *bit-identical* programs (two tenants registering the
+        same gather-chain kernel get distinct op_ids but the same code)
+        coalesce into one engine launch on the first op_id — identical
+        code means identical semantics, and the merged arrival indices
+        scatter each request's outputs back exactly as before.  Fused
+        groups (>1 op_id per launch) are recorded in
+        :attr:`last_fused_groups` for auditing."""
+        buckets: Dict[bytes, Tuple[int, List[np.ndarray], List[int]]] = {}
+        for seg in plan.segments:
+            code = vm._code_bytes(self._slots[seg.op_id].verified)
+            if code not in buckets:
+                buckets[code] = (seg.op_id, [], [])
+            buckets[code][1].append(plan.segment_indices(seg))
+            buckets[code][2].append(seg.op_id)
+        self.last_fused_groups = [ops for _, _, ops in buckets.values()
+                                  if len(ops) > 1]
+        for rep_op, idx_lists, _ in buckets.values():
+            yield rep_op, np.concatenate(idx_lists)
 
     @staticmethod
     def _arrival_runs(ids: np.ndarray):
@@ -476,7 +647,9 @@ class OperatorRegistry:
                        homes: Union[int, Sequence[int]],
                        failed: Optional[Set[int]],
                        contention_rate: float = 0.0,
-                       block: bool = True) -> vm.BatchedInvokeResult:
+                       block: bool = True,
+                       static_noconflict: Optional[bool] = None
+                       ) -> vm.BatchedInvokeResult:
         """Launch each ``(op_id, arrival_indices)`` group on its own
         (best-engine auto dispatch), threading the pool through in group
         order and scattering per-request outputs back to arrival order.
@@ -510,7 +683,7 @@ class OperatorRegistry:
                     int(op_id), mem_cur, [list(params[i]) for i in idx],
                     homes=[int(h[i]) for i in idx], failed=failed,
                     mode="auto", contention_rate=contention_rate,
-                    block=block)
+                    block=block, static_noconflict=static_noconflict)
                 mem_cur = r.mem
                 if block:
                     ret[idx], status[idx] = r.ret, r.status
@@ -538,4 +711,7 @@ class OperatorRegistry:
                 f"bound={slot.verified.step_bound:<8d} "
                 f"regions r={p.regions_read} w={p.regions_written} "
                 f"[{fast}{chains}]")
+            # registration-time analysis artifacts: derived footprint,
+            # matched superoperators, nearest superop near-miss
+            lines.append("         " + slot.describe_analysis())
         return "\n".join(lines)

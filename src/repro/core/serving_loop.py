@@ -458,11 +458,23 @@ class ServingLoop:
         candidate wave: the slot id for single-op waves (per-slot EWMA
         scales apply), the wave-global bucket otherwise; contention is
         the max of the selected slots' learned conflict rates — any
-        contended slot pins the wave to the conflict-exact engine."""
+        contended slot pins the wave to the conflict-exact engine.
+
+        A static no-conflict proof over the candidate's concrete params
+        (``registry.prove_wave_noconflict``) overrides the learned rate
+        with 0.0: the EWMA is a guess about past waves, the proof is a
+        fact about this one — so a provably-disjoint wave forms and
+        prices as conflict-free even on a slot with a contended
+        history."""
         reg = self.ep.registry
         ids = sorted({c.op_id for c in picked})
         steps = max(reg[i].verified.step_bound for i in ids)
         contention = max(self.ep.cost_model.conflict_hint(i) for i in ids)
+        if contention > 0.0 and reg.prove_wave_noconflict(
+                [c.op_id for c in picked],
+                [list(c.params) for c in picked],
+                [c.home for c in picked]):
+            contention = 0.0
         key = ids[0] if len(ids) == 1 else None
         return key, steps, contention
 

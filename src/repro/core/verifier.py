@@ -32,11 +32,11 @@ Structural rules enforced:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import FrozenSet, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import isa
+from repro.core import access, isa
 from repro.core.isa import (Alu, Instr, Op, FLAG_DEV_REG, FLAG_DSTDEV_REG,
                             FLAG_IMMB, FLAG_LEN_REG, FLAG_MREG,
                             FLAG_SRCDEV_REG, FLAG_THR_REG)
@@ -62,13 +62,21 @@ class LoopInfo:
 
 @dataclasses.dataclass(frozen=True)
 class VerifiedOperator:
-    """The registration artifact: program + proven facts."""
+    """The registration artifact: program + proven facts.
+
+    ``footprint`` is the registration-time symbolic access footprint
+    (``core/access``): per static access site an affine-in-params
+    offset, a trip-scaled loop window, or top (whole region).  It is
+    what wave-formation substitutes concrete params into to prove a
+    mixed wave conflict-free and skip the runtime sweep.
+    """
 
     program: TiaraProgram
     step_bound: int
     loops: Tuple[LoopInfo, ...]
     max_loop_depth: int
     n_async_sites: int
+    footprint: Optional[access.OpFootprint] = None
 
     @property
     def name(self) -> str:
@@ -129,7 +137,7 @@ def _check_nesting(loops: List[LoopInfo], errors: List[str]) -> int:
     return max_depth
 
 
-def _enclosing(loops: List[LoopInfo], pc: int) -> frozenset:
+def _enclosing(loops: List[LoopInfo], pc: int) -> FrozenSet[int]:
     return frozenset(l.pc for l in loops if l.start <= pc <= l.end)
 
 
@@ -149,7 +157,7 @@ def verify(program: TiaraProgram, *, grant: Optional[Grant] = None,
     instrs = isa.decode_program(program.code)
     n = len(instrs)
     if n == 0:
-        raise VerificationError(["empty program"])
+        raise VerificationError([f"{program.name}: empty program"])
     if n > isa.INSTR_STORE_SIZE:
         errors.append(f"program of {n} instructions exceeds the "
                       f"{isa.INSTR_STORE_SIZE}-entry instruction store")
@@ -272,7 +280,10 @@ def verify(program: TiaraProgram, *, grant: Optional[Grant] = None,
                       f"configured limit of {max_steps}")
 
     if errors:
-        raise VerificationError(errors)
+        # diagnostics carry the operator name so multi-operator
+        # registration failures stay attributable
+        raise VerificationError(
+            [f"{program.name}: {e}" for e in errors])
 
     return VerifiedOperator(
         program=program,
@@ -280,4 +291,5 @@ def verify(program: TiaraProgram, *, grant: Optional[Grant] = None,
         loops=tuple(loops),
         max_loop_depth=max_depth,
         n_async_sites=n_async,
+        footprint=access.analyze(program, loops, regions),
     )

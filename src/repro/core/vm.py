@@ -1000,7 +1000,8 @@ def _program_statics(codes, fuels):
 
 def _build_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
                   regions: RegionTable, n_devices: int, batch: int,
-                  protect: bool = True):
+                  protect: bool = True,
+                  static_noconflict: bool = False):
     """Build the lockstep engine over a *merged* instruction store.
 
     ``codes`` holds one program per dispatch-table slot, laid out back to
@@ -1017,6 +1018,16 @@ def _build_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
     executing-host ids; ``failed``: bool[n_devices].  Result fields
     ``ret/status/steps`` are [batch] and ``regs`` is [batch, 16].
     Call under ``vm.x64()`` (or use the ``invoke*`` wrappers).
+
+    ``static_noconflict=True`` builds the engine *without* the per-step
+    sweep-line conflict check: every macro-step takes the vectorized
+    path (the serialized branch stays compiled in behind a never-true
+    predicate — see the note in ``step`` — but the interval
+    computation and sort are gone).  The caller must hold a
+    registration-time proof (``access.prove_wave_noconflict``) that no
+    macro-step of any wave run on this engine can conflict; the engine
+    trusts the flag.  Top-footprint waves keep the default build — the
+    sweep is the verbatim fallback.
     """
     code_np, start_np, end_np, fuel_np, max_window = \
         _program_statics(codes, fuels)
@@ -1070,6 +1081,21 @@ def _build_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
                 # single request: the scalar switch interpreter, no
                 # conflict machinery — the classic Tiara MP datapath
                 s2, mem2 = serial_step(s, mem, rows, homes, active)
+            elif static_noconflict:
+                # statically proven conflict-free: the per-step sweep
+                # (lane_intervals + interval sort) is gone.  The cond
+                # and its serialized branch stay: XLA CPU outlines cond
+                # branches into their own computations, and inlining
+                # vector_step into the while body instead measures ~2x
+                # slower at B=1024 (fusion boundaries vanish).  The
+                # predicate can never fire (pc is clipped non-negative),
+                # and if it somehow did, serial_step is semantically
+                # correct — it is the conservative fallback.
+                s2, mem2 = lax.cond(
+                    jnp.any(s.pc < -1),
+                    lambda s_, m_, r_, a_: serial_step(s_, m_, r_, homes,
+                                                       a_),
+                    vector_step, s, mem, rows, active)
             else:
                 s2, mem2 = lax.cond(
                     _sweep_conflict(*lane_intervals(s, rows, active)),
@@ -1108,7 +1134,8 @@ def _build_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
 def _build_sharded_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
                           regions: RegionTable, n_devices: int,
                           batch_per_device: int, axis: str = "pool",
-                          protect: bool = True):
+                          protect: bool = True,
+                          static_noconflict: bool = False):
     """Build the mesh-sharded lockstep engine: the pool's leading
     ``n_devices`` axis is sharded over a 1-D device mesh (``shard_map``),
     each device executes the home-bucketed sub-wave it owns, and remote
@@ -1226,6 +1253,18 @@ def _build_sharded_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
             s, mem = carry
             active = live_mask(s)
             rows = code[jnp.clip(s.pc, 0, n_instr - 1)]
+            if static_noconflict:
+                # statically proven conflict-free: skip both the
+                # footprint all_gather (a collective per macro-step)
+                # and the sweep.  The cond + serial branch stay (same
+                # reason as the dense engine: the XLA CPU backend keeps
+                # cond branches outlined, and inlining vector_step into
+                # the while body compiles measurably worse); the
+                # predicate is device-local and identically false on
+                # every shard, so the branch-agreement requirement for
+                # the collectives inside serial_macro still holds
+                return lax.cond(jnp.any(s.pc < -1), serial_macro,
+                                vector_step, s, mem, rows, active)
             # conflict existence is a GLOBAL question: gather every
             # device's footprint intervals before the sweep, so all
             # devices agree on the branch (divergence would deadlock
@@ -1276,14 +1315,16 @@ def _build_sharded_engine(codes: Sequence[np.ndarray], fuels: Sequence[int],
 
 
 def build_batched_vm(op: VerifiedOperator, regions: RegionTable,
-                     n_devices: int, batch: int, protect: bool = True):
+                     n_devices: int, batch: int, protect: bool = True,
+                     static_noconflict: bool = False):
     """Returns jit-compiled ``f(mem, params, homes, failed) -> VMResult`` —
     the one-program specialization of :func:`_build_engine` (its merged
     store holds a single program and every request dispatches to slot 0).
     Call under ``vm.x64()`` (or use :func:`invoke` / :func:`invoke_batched`).
     """
     eng = _build_engine([op.code], [op.step_bound], regions, n_devices,
-                        batch, protect=protect)
+                        batch, protect=protect,
+                        static_noconflict=static_noconflict)
     sel0 = np.zeros(int(batch), dtype=np.int64)
 
     def run(mem, params, homes, failed):
@@ -1294,7 +1335,8 @@ def build_batched_vm(op: VerifiedOperator, regions: RegionTable,
 
 def build_mixed_batched_vm(ops: Sequence[VerifiedOperator],
                            regions: RegionTable, n_devices: int,
-                           batch: int, protect: bool = True):
+                           batch: int, protect: bool = True,
+                           static_noconflict: bool = False):
     """The multi-tenant engine: one lockstep launch executing a batch of
     requests whose per-request ``op_sel`` picks among the ``ops`` programs
     (laid out back to back like the registry's instruction store, so
@@ -1303,13 +1345,15 @@ def build_mixed_batched_vm(ops: Sequence[VerifiedOperator],
     ``f(mem, params, homes, failed, op_sel) -> VMResult``."""
     return _build_engine([o.code for o in ops],
                          [o.step_bound for o in ops],
-                         regions, n_devices, batch, protect=protect)
+                         regions, n_devices, batch, protect=protect,
+                         static_noconflict=static_noconflict)
 
 
 def build_sharded_mixed_vm(ops: Sequence[VerifiedOperator],
                            regions: RegionTable, n_devices: int,
                            batch_per_device: int, axis: str = "pool",
-                           protect: bool = True):
+                           protect: bool = True,
+                           static_noconflict: bool = False):
     """The pod-scale engine: the pool's leading axis sharded over a 1-D
     device mesh, one home-bucketed sub-wave per device, cross-device
     LOAD/MEMCPY lowered to collectives (see :func:`_build_sharded_engine`
@@ -1319,7 +1363,8 @@ def build_sharded_mixed_vm(ops: Sequence[VerifiedOperator],
     return _build_sharded_engine([o.code for o in ops],
                                  [o.step_bound for o in ops],
                                  regions, n_devices, batch_per_device,
-                                 axis, protect=protect)
+                                 axis, protect=protect,
+                                 static_noconflict=static_noconflict)
 
 
 def build_vm(op: VerifiedOperator, regions: RegionTable, n_devices: int,
@@ -1384,39 +1429,47 @@ _VM_CACHE: Dict[Tuple, object] = {}
 
 
 def engine_cached(op: VerifiedOperator, regions: RegionTable, n_dev: int,
-                  batch: int, protect: bool = True) -> bool:
+                  batch: int, protect: bool = True,
+                  static_noconflict: bool = False) -> bool:
     """True iff the batched interpreter engine for this (op, batch) is
     already built — a cache miss costs an XLA compile, which the
     dispatch cost model charges for."""
-    return engine_key(op, regions, n_dev, batch,
-                      bool(protect)) in _VM_CACHE
+    return engine_key(op, regions, n_dev, batch, bool(protect),
+                      bool(static_noconflict)) in _VM_CACHE
 
 
 def mixed_engine_cached(ops: Sequence[VerifiedOperator],
                         regions: RegionTable, n_dev: int,
-                        batch: int, protect: bool = True) -> bool:
-    return mixed_engine_key(ops, regions, n_dev, batch,
-                            bool(protect)) in _VM_CACHE
+                        batch: int, protect: bool = True,
+                        static_noconflict: bool = False) -> bool:
+    return mixed_engine_key(ops, regions, n_dev, batch, bool(protect),
+                            bool(static_noconflict)) in _VM_CACHE
 
 
 def _cached_engine(op: VerifiedOperator, regions: RegionTable, n_dev: int,
-                   batch: int, protect: bool = True):
-    key = engine_key(op, regions, n_dev, batch, bool(protect))
+                   batch: int, protect: bool = True,
+                   static_noconflict: bool = False):
+    key = engine_key(op, regions, n_dev, batch, bool(protect),
+                     bool(static_noconflict))
     fn = _VM_CACHE.get(key)
     if fn is None:
-        fn = build_batched_vm(op, regions, n_dev, batch, protect=protect)
+        fn = build_batched_vm(op, regions, n_dev, batch, protect=protect,
+                              static_noconflict=static_noconflict)
         _VM_CACHE[key] = fn
     return fn
 
 
 def _cached_mixed_engine(ops: Sequence[VerifiedOperator],
                          regions: RegionTable, n_dev: int, batch: int,
-                         protect: bool = True):
-    key = mixed_engine_key(ops, regions, n_dev, batch, bool(protect))
+                         protect: bool = True,
+                         static_noconflict: bool = False):
+    key = mixed_engine_key(ops, regions, n_dev, batch, bool(protect),
+                           bool(static_noconflict))
     fn = _VM_CACHE.get(key)
     if fn is None:
         fn = build_mixed_batched_vm(ops, regions, n_dev, batch,
-                                    protect=protect)
+                                    protect=protect,
+                                    static_noconflict=static_noconflict)
         _VM_CACHE[key] = fn
     return fn
 
@@ -1424,35 +1477,40 @@ def _cached_mixed_engine(ops: Sequence[VerifiedOperator],
 def _sharded_engine_key(ops: Sequence[VerifiedOperator],
                         regions: RegionTable, n_dev: int,
                         batch_per_device: int, axis: str,
-                        protect: bool = True) -> Tuple:
+                        protect: bool = True,
+                        static_noconflict: bool = False) -> Tuple:
     import jax as _jax
     dev_ids = tuple(d.id for d in _jax.devices()[:n_dev])
     return mixed_engine_key(ops, regions, n_dev, batch_per_device,
-                            "sharded", axis, dev_ids, bool(protect))
+                            "sharded", axis, dev_ids, bool(protect),
+                            bool(static_noconflict))
 
 
 def sharded_engine_cached(ops: Sequence[VerifiedOperator],
                           regions: RegionTable, n_dev: int,
                           batch_per_device: int,
                           axis: str = "pool",
-                          protect: bool = True) -> bool:
+                          protect: bool = True,
+                          static_noconflict: bool = False) -> bool:
     """True iff the sharded mesh engine for this (ops, sub-wave size) is
     already built — a miss costs an XLA compile of the whole shard_map
     program, which the dispatch cost model charges for."""
     return _sharded_engine_key(ops, regions, n_dev, batch_per_device,
-                               axis, protect) in _VM_CACHE
+                               axis, protect, static_noconflict) in _VM_CACHE
 
 
 def _cached_sharded_engine(ops: Sequence[VerifiedOperator],
                            regions: RegionTable, n_dev: int,
                            batch_per_device: int, axis: str = "pool",
-                           protect: bool = True):
+                           protect: bool = True,
+                           static_noconflict: bool = False):
     key = _sharded_engine_key(ops, regions, n_dev, batch_per_device, axis,
-                              protect)
+                              protect, static_noconflict)
     fn = _VM_CACHE.get(key)
     if fn is None:
         fn = build_sharded_mixed_vm(ops, regions, n_dev, batch_per_device,
-                                    axis, protect=protect)
+                                    axis, protect=protect,
+                                    static_noconflict=static_noconflict)
         _VM_CACHE[key] = fn
     return fn
 
@@ -1568,16 +1626,21 @@ def invoke_batched(op: VerifiedOperator, regions: RegionTable,
                    *, homes: Union[int, Sequence[int]] = 0,
                    failed: Optional[Set[int]] = None,
                    block: bool = True,
-                   protect: bool = True) -> "BatchedInvokeResult":
+                   protect: bool = True,
+                   static_noconflict: bool = False) -> "BatchedInvokeResult":
     """Run a batch of requests against one shared pool: numpy in/out.
 
     ``params`` is a [B][k] nested sequence (one row per request); ``homes``
     is a scalar (all requests from the same host) or a [B] sequence.
     ``block=False`` defers retirement (see :func:`run_batched_fn`).
+    ``static_noconflict=True`` asserts the caller holds a registration-time
+    proof that the wave is conflict-free; the engine then skips the
+    per-step runtime sweep (see :func:`_build_engine`).
     """
     p, h = _marshal_batch(params, homes)
     fn = _cached_engine(op, regions, int(mem.shape[0]), p.shape[0],
-                        protect=protect)
+                        protect=protect,
+                        static_noconflict=static_noconflict)
     return run_batched_fn(fn, mem, p, h, failed, block=block)
 
 
@@ -1588,7 +1651,9 @@ def invoke_batched_mixed(ops: Sequence[VerifiedOperator],
                          homes: Union[int, Sequence[int]] = 0,
                          failed: Optional[Set[int]] = None,
                          block: bool = True,
-                         protect: bool = True) -> "BatchedInvokeResult":
+                         protect: bool = True,
+                         static_noconflict: bool = False
+                         ) -> "BatchedInvokeResult":
     """Run a *mixed* batch — request ``b`` executes ``ops[op_sel[b]]`` —
     against one shared pool in one lockstep launch: numpy in/out.
 
@@ -1596,7 +1661,9 @@ def invoke_batched_mixed(ops: Sequence[VerifiedOperator],
     across programs: each macro-step, request ``i`` executes the next
     instruction *of its own operator* and observes all same-step memory
     effects of requests ``j < i``.  ``block=False`` defers retirement
-    (see :func:`run_batched_fn`).
+    (see :func:`run_batched_fn`).  ``static_noconflict=True`` asserts a
+    registration-time proof that the wave is conflict-free; the engine
+    then skips the per-step runtime sweep (see :func:`_build_engine`).
     """
     p, h = _marshal_batch(params, homes)
     B = p.shape[0]
@@ -1608,7 +1675,8 @@ def invoke_batched_mixed(ops: Sequence[VerifiedOperator],
             f"op_sel entries must be in [0, {len(ops)}) for {len(ops)} "
             f"programs; got range [{sel.min()}, {sel.max()}]")
     eng = _cached_mixed_engine(tuple(ops), regions, int(mem.shape[0]), B,
-                               protect=protect)
+                               protect=protect,
+                               static_noconflict=static_noconflict)
 
     def fn(mem_j, p_j, h_j, failed_j):
         return eng(mem_j, p_j, h_j, failed_j, sel)
@@ -1621,8 +1689,13 @@ def invoke_sharded_mixed(ops: Sequence[VerifiedOperator],
                          plan, params: Sequence[Sequence[int]], *,
                          failed: Optional[Set[int]] = None,
                          axis: str = "pool",
-                         protect: bool = True) -> "BatchedInvokeResult":
+                         protect: bool = True,
+                         static_noconflict: bool = False
+                         ) -> "BatchedInvokeResult":
     """Run a mixed wave on the mesh-sharded engine: numpy in/out.
+    ``static_noconflict=True`` asserts a registration-time conflict proof;
+    the sharded engine then skips both the per-step footprint all_gather
+    and the sweep (see :func:`_build_sharded_engine`).
 
     ``plan`` is a home-bucketed :class:`~repro.core.compile.MixedPlan`
     (built with ``plan_mixed_batch(op_ids, homes=..., n_devices=...)``):
@@ -1665,7 +1738,8 @@ def invoke_sharded_mixed(ops: Sequence[VerifiedOperator],
         az[d, :c] = lanes            # arrival rank = arrival index
         pos += c
     eng = _cached_sharded_engine(tuple(ops), regions, n_dev, Bp, axis,
-                                 protect=protect)
+                                 protect=protect,
+                                 static_noconflict=static_noconflict)
     from repro.core import memory as _memory
     with x64():
         mem_dev = _memory.shard_pool(np.asarray(mem, dtype=np.int64),

@@ -387,7 +387,18 @@ def test_registry_last_decision_recorded():
     assert reg.last_decision is not None
     assert reg.last_decision.mode in ("batched", "compiled")
     assert set(reg.last_decision.costs) >= {"batched"}
-    # contention hint steers auto to the exact interpreter
+    # this wave is statically provable (disjoint affine reply windows,
+    # graph is read-only), so the conflict proof discards the caller's
+    # contention guess — the proof is a fact, the hint was an estimate
     reg._invoke_batched(op_id, mem, params, mode="auto",
                        contention_rate=0.9)
+    assert reg.last_decision.static_noconflict
+    assert reg.last_decision.contention_rate == 0.0
+    # without the proof, the contention hint steers auto to the exact
+    # interpreter, whose per-step conflict check serializes exactly
+    reg.static_analysis = False
+    reg._invoke_batched(op_id, mem, params, mode="auto",
+                       contention_rate=0.9)
+    assert not reg.last_decision.static_noconflict
     assert reg.last_decision.mode == "batched"
+    reg.static_analysis = True

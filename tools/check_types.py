@@ -1,0 +1,91 @@
+"""Static-typing ratchet gate for ``src/repro/core`` (CI lint job).
+
+Runs mypy with the repo's ``mypy.ini`` and compares the findings
+against the committed baseline (``tools/mypy_baseline.txt``):
+
+  * an error whose ``path [error-code]`` key is NOT in the baseline
+    fails the gate — new code (and the fully-typed seed modules
+    ``access``/``verifier``) must type-check clean;
+  * baseline keys that no longer fire are reported so the baseline can
+    be shrunk — the gate only ratchets, it never loosens.
+
+Baseline keys deliberately omit line numbers and messages: unrelated
+edits move lines, and message wording drifts across mypy versions.
+Coarse per-(file, code) admission is the stable contract.  The
+module-level suppressions live in ``mypy.ini`` (``ignore_errors`` per
+pre-lane module); this file catches whatever still escapes them.
+
+Usage:  python tools/check_types.py   (requires mypy on PATH)
+"""
+
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+BASELINE = Path(__file__).resolve().parent / "mypy_baseline.txt"
+# "src/repro/core/foo.py:123: error: message  [error-code]"
+_LINE = re.compile(r"^(?P<path>[^:]+\.py):\d+(?::\d+)?: error: "
+                   r".*\[(?P<code>[\w-]+)\]\s*$")
+
+
+def _load_baseline() -> set:
+    keys = set()
+    if BASELINE.exists():
+        for raw in BASELINE.read_text().splitlines():
+            line = raw.strip()
+            if line and not line.startswith("#"):
+                keys.add(line)
+    return keys
+
+
+def main() -> int:
+    proc = subprocess.run(
+        [sys.executable, "-m", "mypy", "--config-file",
+         str(ROOT / "mypy.ini"), "--no-error-summary"],
+        cwd=ROOT, capture_output=True, text=True)
+    if proc.returncode not in (0, 1) or "No module named" in proc.stderr:
+        # 2 = usage/config/crash; a missing mypy exits 1 with empty
+        # stdout, which must not read as a clean pass
+        sys.stderr.write(proc.stdout + proc.stderr)
+        print("::error::mypy did not run cleanly (missing, config "
+              "error, or crash)")
+        return 2
+
+    baseline = _load_baseline()
+    seen = set()
+    fresh = []
+    for line in proc.stdout.splitlines():
+        m = _LINE.match(line.strip())
+        if not m:
+            continue
+        key = f"{m.group('path')} [{m.group('code')}]"
+        seen.add(key)
+        if key not in baseline:
+            fresh.append(line.strip())
+
+    stale = sorted(baseline - seen)
+    if stale:
+        print("baseline entries that no longer fire — remove them from "
+              f"{BASELINE.name} to ratchet:")
+        for key in stale:
+            print(f"  {key}")
+
+    if fresh:
+        print(f"{len(fresh)} typing error(s) not admitted by the "
+              "baseline:")
+        for line in fresh:
+            print(f"  {line}")
+        print("::error::new mypy errors in src/repro/core — fix them "
+              "(do not add baseline entries for new code)")
+        return 1
+    print(f"type gate passed ({len(seen)} baselined finding(s), "
+          f"0 new)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
