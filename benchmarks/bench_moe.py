@@ -18,8 +18,8 @@ import numpy as np
 
 from repro.core import costmodel as cm
 from repro.core import memory
-from repro.core import operators as ops
 from repro.core import simulator as sim
+from repro.serving.resolver import expert_layout
 
 from benchmarks._workbench import Row, run_traced
 
@@ -27,7 +27,9 @@ KS = (4, 8, 16, 32, 64)
 
 
 def tiara_moe_latency(k: int, hw: cm.HW):
-    m = ops.MoEExpertGather(n_experts=256, max_k=64)
+    # the serving resolver's layout export at the paper's 8 KB slabs —
+    # same region geometry as the engine's expert gather path
+    m = expert_layout(256, max_k=64, slab_bytes=8192)
     rng = np.random.default_rng(1)
     eids = rng.choice(256, size=k, replace=False)
 

@@ -18,8 +18,8 @@ from typing import List
 import numpy as np
 
 from repro.core import costmodel as cm
-from repro.core import operators as ops
 from repro.core import simulator as sim
+from repro.serving.allocator import BlockAllocator
 
 from benchmarks._workbench import Row, run_traced
 
@@ -31,8 +31,11 @@ POOL_BLOCKS = 128            # physical pool (ids repeat; trace shape is
 
 def tiara_gather_gbs(block_bytes: int, hw: cm.HW) -> float:
     n_req = TOTAL_BYTES // block_bytes
-    k = ops.PagedKVFetch(n_blocks_pool=POOL_BLOCKS, block_bytes=block_bytes,
-                         max_req_blocks=n_req)
+    # the bench's region geometry comes from the serving allocator's
+    # layout export — the exact table the engine registers, so the
+    # bench path and the serving path cannot drift
+    k = BlockAllocator(POOL_BLOCKS).region_layout(
+        block_bytes=block_bytes, max_req_blocks=n_req)
     rng = np.random.default_rng(0)
     ids = rng.integers(0, POOL_BLOCKS, size=n_req)
 

@@ -46,7 +46,16 @@ _MEASURED = ("us_per_call", "ops_per_s", "subwave_ops_per_s", "parity_ok",
              # bench_static_analysis: the always-sweep side of the gated
              # speedup_sweep_skip ratio and the soundness-corpus tallies
              "us_per_call_sweep", "ops_per_s_sweep", "soundness_ok",
-             "proven_waves", "refused_waves", "unsound_clears")
+             "proven_waves", "refused_waves", "unsound_clears",
+             # bench_e2e_paged: token counts, fabric times and rehome
+             # audit — measurements feeding the gated speedups and hard
+             # bits, not identity
+             "tokens", "posts", "waves", "exec_us_per_post", "bottleneck",
+             "fabric_us_host", "fabric_us_tiara", "tokens_per_s_host",
+             "tokens_per_s_tiara", "p99_resolve_us", "rehomes",
+             "rehomed_words", "home_skew", "cross_words_rehome",
+             "cross_words_static", "tiara_not_slower_ok",
+             "rehome_reduces_traffic_ok")
 
 # gated non-speedup metrics.  Lower-bounded metrics fail when the
 # current value drops more than the band below baseline (like
@@ -67,6 +76,12 @@ _HARD_BITS = {
     "soundness_ok": "static conflict proof cleared a wave the dynamic "
                     "sweep would have flagged (or the corpus was "
                     "vacuous)",
+    "tiara_not_slower_ok": "tiara-resolved decode fell below 1.0x the "
+                           "host-resolve baseline at the resolution "
+                           "fabric",
+    "rehome_reduces_traffic_ok": "adaptive re-homing failed to reduce "
+                                 "cross-device reply words vs the "
+                                 "static-home run",
 }
 
 # per-metric thresholds overriding --threshold: some normalizers are
@@ -101,7 +116,12 @@ _METRIC_THRESHOLDS = {"speedup_vs_single": 0.75,
                       # the sweep's share of a doorbell swings with host
                       # load; the band catches losing the skip entirely
                       # (ratio -> ~1.0 from a >1 baseline), not jitter
-                      "speedup_sweep_skip": 0.4}
+                      "speedup_sweep_skip": 0.4,
+                      # bench_e2e_paged prices both sides on a seeded
+                      # VirtualClock + cycle sim — bit-stable; tight
+                      # bands absorb intentional retunes only
+                      "speedup_tiara_resolve": 0.05,
+                      "speedup_rehome_traffic": 0.05}
 
 
 def _identity(rec: dict) -> Tuple:

@@ -22,12 +22,12 @@ import time
 import traceback
 import warnings
 
-from benchmarks import (bench_async_overlap, bench_fault_overhead,
-                        bench_graph, bench_lock, bench_mixed_batch,
-                        bench_moe, bench_offload, bench_paged_attention,
-                        bench_ptw, bench_serving, bench_sharded,
-                        bench_static_analysis, bench_table1,
-                        bench_vm_throughput)
+from benchmarks import (bench_async_overlap, bench_e2e_paged,
+                        bench_fault_overhead, bench_graph, bench_lock,
+                        bench_mixed_batch, bench_moe, bench_offload,
+                        bench_paged_attention, bench_ptw, bench_serving,
+                        bench_sharded, bench_static_analysis,
+                        bench_table1, bench_vm_throughput)
 from benchmarks._workbench import fmt_table
 
 # Per-module wall-clock budget: one hung bench (an XLA compile gone
@@ -94,6 +94,8 @@ MODULES = [
      bench_serving),
     ("static_analysis", "Static conflict proofs: sweep-skip + soundness",
      bench_static_analysis),
+    ("e2e_paged", "End-to-end disaggregated paged decode vs host resolve",
+     bench_e2e_paged),
 ]
 
 

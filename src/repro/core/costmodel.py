@@ -485,6 +485,10 @@ class DispatchCostModel:
         # conflict-rate EWMAs, both fed by the endpoint while serving
         self._scales: Dict[Tuple[Optional[int], str], float] = {}
         self._conflicts: Dict[Optional[int], float] = {}
+        # learned home-access skew (see observe_home_access): EWMA of the
+        # hottest device's share of region-access words, fed by the
+        # endpoint's per-region access audit while serving
+        self._home_skew: Optional[float] = None
 
     # -- online overlap learning ------------------------------------------
 
@@ -594,6 +598,33 @@ class DispatchCostModel:
         if c is None:
             c = self._conflicts.get(None, 0.0)
         return c
+
+    # EWMA weight of one home-access skew sample
+    HOME_EWMA_ALPHA = 0.25
+
+    def observe_home_access(self, counts: Sequence[float]) -> float:
+        """Learn home skew from one per-device access-word vector (the
+        endpoint's region-access audit, see
+        ``TiaraEndpoint.note_access``): EWMA the hottest device's share
+        of total accessed words.  ``choose_placement`` consumes it as
+        the default ``batch_per_device`` when no mixed-batch plan is
+        supplied, so a skewed access pattern prices sharding honestly
+        (the hot home's sub-wave is the critical path) instead of
+        assuming a uniform split."""
+        vec = [max(float(c), 0.0) for c in counts]
+        total = sum(vec)
+        if total <= 0.0 or not vec:
+            return self._home_skew if self._home_skew is not None else 0.0
+        share = max(vec) / total
+        a = self.HOME_EWMA_ALPHA
+        prev = self._home_skew if self._home_skew is not None else share
+        self._home_skew = (1 - a) * prev + a * share
+        return self._home_skew
+
+    def home_skew(self) -> Optional[float]:
+        """The learned hottest-home share (None before any
+        observation; 1/n_devices means perfectly balanced)."""
+        return self._home_skew
 
     def wave_us(self, *, batch: int, step_bound: int,
                 key: Optional[int] = None, mode: str = "mixed",
@@ -753,6 +784,13 @@ class DispatchCostModel:
         collective leave the mesh's per-step schedule."""
         if static_noconflict:
             contention_rate = 0.0
+        if (batch_per_device is None and n_devices > 1
+                and self._home_skew is not None):
+            # no plan supplied: price the sharded critical path from the
+            # learned access skew (hottest home's share of the batch)
+            share = max(self._home_skew, 1.0 / n_devices)
+            batch_per_device = max(1, min(batch,
+                                          int(np.ceil(batch * share))))
         costs = {"single": self.cost.batched_us(batch, step_bound,
                                                 contention_rate,
                                                 cached=mixed_cached)}

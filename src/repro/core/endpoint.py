@@ -527,6 +527,15 @@ class TiaraEndpoint:
         self._poison_left = 0
         self._pending_delays: List[float] = []
         self._stalls: Dict[str, float] = {}      # tenant -> stalled until
+        # adaptive re-homing state (INDIGO-style, see note_access /
+        # rehome): which device row holds each region's live copy, the
+        # per-region per-device access audit, and the migration audit
+        self._region_home: Dict[str, int] = {}
+        self._region_access: Dict[str, np.ndarray] = {}
+        self._dev_access = np.zeros(self.n_devices, dtype=np.int64)
+        self.cross_device_words = 0      # words served home != accessor
+        self.rehome_count = 0
+        self.rehomed_words = 0
 
     @classmethod
     def for_tenants(cls, named: Sequence[Tuple[str, RegionTable]], *,
@@ -650,6 +659,93 @@ class TiaraEndpoint:
         """Is the tenant's SQ currently withheld from doorbell drains
         (an injected ``stall_tenant`` still in effect)?"""
         return self._stalls.get(tenant, 0.0) > self._clock()
+
+    # -- adaptive re-homing (INDIGO-style access audit + control-path
+    #    migration) --------------------------------------------------------
+    #
+    # A region's *home* is the device row that holds its live copy —
+    # posts against it execute there, and an accessor on another device
+    # pays cross-device reply traffic.  The endpoint keeps a per-region
+    # per-device access audit (``note_access``, fed by serving-side
+    # resolvers per post), and ``rehome`` migrates a region's content
+    # between device rows on the control path — between doorbells, never
+    # under an in-flight wave.  The audit also feeds the cost model's
+    # home-skew EWMA, so ``choose_placement`` prices the hot home's
+    # sub-wave as the sharded critical path.
+
+    def home_of(self, region: str) -> int:
+        """The device row holding ``region``'s live copy (0 until the
+        first ``rehome``)."""
+        return self._region_home.get(region, 0)
+
+    def note_access(self, region: str, device: int, words: int = 1) -> None:
+        """Audit one access of ``words`` pool words against ``region``
+        from ``device`` (the accessor's device — e.g. the client a reply
+        streams to).  Accumulates the per-region and per-device counts,
+        charges ``cross_device_words`` when the accessor is not the
+        region's home, and feeds the cost model's home-skew EWMA."""
+        try:
+            self.regions[region]
+        except KeyError:
+            raise EndpointError(
+                f"note_access: unknown region {region!r}") from None
+        if not 0 <= int(device) < self.n_devices:
+            raise EndpointError(
+                f"note_access: device {device} outside mesh of "
+                f"{self.n_devices}")
+        counts = self._region_access.get(region)
+        if counts is None:
+            counts = self._region_access[region] = np.zeros(
+                self.n_devices, dtype=np.int64)
+        counts[int(device)] += int(words)
+        self._dev_access[int(device)] += int(words)
+        if int(device) != self.home_of(region):
+            self.cross_device_words += int(words)
+        self.cost_model.observe_home_access(self._dev_access)
+
+    def access_counts(self, region: str) -> np.ndarray:
+        """Per-device access-word counts for ``region`` since its last
+        rehome (a copy; zeros before any access)."""
+        counts = self._region_access.get(region)
+        if counts is None:
+            return np.zeros(self.n_devices, dtype=np.int64)
+        return counts.copy()
+
+    def rehome(self, region: str, device: int) -> int:
+        """Control-path migration: copy ``region``'s content from its
+        current home row to ``device``'s row and make that the home.
+        Returns the words moved (0 when already home).  The access
+        window resets, so the next rehome decision is made on fresh
+        traffic.  Raises on unknown regions, out-of-mesh or failed
+        target devices, and while waves are in flight (migration is a
+        between-doorbells operation, like fault injection)."""
+        try:
+            r = self.regions[region]
+        except KeyError:
+            raise EndpointError(
+                f"rehome: unknown region {region!r}") from None
+        if not 0 <= int(device) < self.n_devices:
+            raise EndpointError(
+                f"rehome: device {device} outside mesh of "
+                f"{self.n_devices}")
+        if int(device) in self.failed_devices:
+            raise EndpointError(
+                f"rehome: target device {device} is failed")
+        if self._inflight:
+            raise EndpointError(
+                "rehome: waves in flight — retire them first "
+                "(wait_all) before migrating regions")
+        src = self.home_of(region)
+        self._region_access.pop(region, None)
+        if src == int(device):
+            return 0
+        mem = self.host_mem()
+        mem[int(device), r.base:r.base + r.size] = \
+            mem[src, r.base:r.base + r.size]
+        self._region_home[region] = int(device)
+        self.rehome_count += 1
+        self.rehomed_words += int(r.size)
+        return int(r.size)
 
     def _retire_immediate(self, c: Completion, status: int) -> None:
         """Retire a post immediately with the given no-execution status

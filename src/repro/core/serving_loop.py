@@ -425,6 +425,13 @@ class ServingLoop:
         self._launched = still
         return n
 
+    def harvest(self) -> int:
+        """Public harvest: collect stats/latencies for launched posts
+        that have retired since the last pump.  For callers that drive
+        retirement themselves (``ep.wait_all()`` between their own
+        pumps) instead of going through :meth:`drain`."""
+        return self._harvest()
+
     # -- wave formation ---------------------------------------------------
 
     def _selectable(self) -> List[Tuple[float, Completion]]:
@@ -521,6 +528,19 @@ class ServingLoop:
                 predicted_us = ep.cost_model.wave_us(
                     batch=len(picked), step_bound=steps, key=key,
                     mode="mixed", contention_rate=contention)
+                if cfg.placement != "single" and ep.n_devices > 1:
+                    # non-single placements: price the wave through the
+                    # placement model (the learned home-skew EWMA sets
+                    # batch_per_device when no plan is supplied), not
+                    # the one-chip mixed engine
+                    decision = ep.cost_model.choose_placement(
+                        batch=len(picked), n_devices=ep.n_devices,
+                        step_bound=steps, contention_rate=contention)
+                    if cfg.placement == "sharded":
+                        predicted_us = decision.costs.get(
+                            "sharded", predicted_us)
+                    else:                       # "auto": the pick's cost
+                        predicted_us = decision.costs[decision.mode]
                 handle = ep.doorbell(mode=cfg.mode,
                                      placement=cfg.placement,
                                      contention_rate=contention,

@@ -19,8 +19,9 @@ Per layer the wire carries O(B x QH x D) floats instead of O(KV bytes).
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Any, Callable, Tuple
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental.shard_map import shard_map
@@ -33,8 +34,11 @@ from repro.jaxcompat import axis_size as _axis_size
 NEG = -1e30
 
 
-def _partial_paged_attention(q, k_pages, v_pages, bt_local, lengths, *,
-                             base_page, scale):
+def _partial_paged_attention(
+        q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+        bt_local: jax.Array, lengths: jax.Array, *,
+        base_page: jax.Array, scale: float
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Flash partial over the locally-owned pages.
 
     q (B, KVH, G, D); k/v_pages (pp_local, page, KVH, D); bt_local
@@ -62,8 +66,11 @@ def _partial_paged_attention(q, k_pages, v_pages, bt_local, lengths, *,
     return acc, m, l
 
 
-def _partial_paged_attention_sliced(q, k_pages, v_pages, bt, lengths, *,
-                                    base_page, base_local, maxp, scale):
+def _partial_paged_attention_sliced(
+        q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+        bt: jax.Array, lengths: jax.Array, *,
+        base_page: jax.Array, base_local: jax.Array, maxp: int,
+        scale: float) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Contiguous-slab variant.  With the pool laid out (dp-major,
     model-minor) and per-sequence page slabs, each model rank's
     ``pp_local`` pages form one contiguous chunk of exactly ONE local
@@ -108,7 +115,7 @@ def _partial_paged_attention_sliced(q, k_pages, v_pages, bt, lengths, *,
 def sharded_paged_attention(mesh: Mesh, dp_axes: Tuple[str, ...],
                             model_axis: str = "model", *,
                             contiguous: bool = False,
-                            batch_sharded: bool = True):
+                            batch_sharded: bool = True) -> Callable[..., Any]:
     """Builds fn(q, k_pages, v_pages, new_k, new_v, bt, lengths) -> (out,
     k_pages, v_pages): appends the new token's KV to its owning chip and
     attends, all pages staying local.
@@ -123,7 +130,10 @@ def sharded_paged_attention(mesh: Mesh, dp_axes: Tuple[str, ...],
     masked gather over all maxp pages — 16x less HBM traffic."""
     all_axes = tuple(dp_axes) + (model_axis,)
 
-    def local(q, k_pages, v_pages, new_k, new_v, bt, lengths):
+    def local(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+              new_k: jax.Array, new_v: jax.Array, bt: jax.Array,
+              lengths: jax.Array
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
         # linear rank over (dp..., model); pool is laid out in the same
         # axis order so contiguous page ranges land per rank
         rank = 0

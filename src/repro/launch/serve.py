@@ -30,12 +30,12 @@ def main() -> None:
     eng = ServingEngine(cfg, params, max_slots=args.slots, max_seq=128,
                         temperature=args.temperature, eos_id=-1)
     rng = np.random.default_rng(0)
-    sids = [eng.submit(list(rng.integers(1, cfg.vocab, 5)),
-                       max_new=args.max_new)
-            for _ in range(args.requests)]
+    handles = [eng.submit(list(rng.integers(1, cfg.vocab, 5)),
+                          max_new=args.max_new)
+               for _ in range(args.requests)]
     out = eng.run_to_completion()
-    for sid in sids:
-        print(f"seq {sid}: {out[sid]}")
+    for h in handles:
+        print(f"seq {h.sid}: {out[h.sid]}")
 
 
 if __name__ == "__main__":

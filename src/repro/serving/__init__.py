@@ -1,5 +1,22 @@
+"""Model serving over the paged KV cache.
+
+Public surface (audited ``__all__``): the engine + its completion
+handle, the block allocator (with its endpoint region layout export),
+the Tiara-backed resolver, and the sampler.
+"""
+
 from repro.serving.allocator import BlockAllocator, OutOfPages
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import Sequence, SequenceHandle, ServingEngine
+from repro.serving.resolver import TiaraResolver, expert_layout
 from repro.serving.sampler import sample_tokens
 
-__all__ = ["BlockAllocator", "OutOfPages", "ServingEngine", "sample_tokens"]
+__all__ = [
+    "BlockAllocator",
+    "OutOfPages",
+    "Sequence",
+    "SequenceHandle",
+    "ServingEngine",
+    "TiaraResolver",
+    "expert_layout",
+    "sample_tokens",
+]

@@ -5,6 +5,20 @@ paper targets).  Fixed B decode slots; prompts prefill into a free slot's
 pages (bucketed-by-length compilations), then every engine step decodes
 all active slots in one batched call through the paged-attention path.
 
+Block-table resolution is pluggable (``resolver=``):
+
+* ``"host"`` (default) — today's local path, bit-for-bit: the engine
+  indexes its own ``block_tables`` array.
+* ``"tiara"`` — the disaggregated path: block tables, the KV page pool
+  and (for MoE archs) the expert routing tables live as regions on a
+  :class:`~repro.core.endpoint.TiaraEndpoint`, and every decode step
+  resolves them by posting ``PagedKVFetch`` / ``MoEExpertGather``
+  operators from per-sequence sessions through the
+  :class:`~repro.core.serving_loop.ServingLoop` (see
+  ``serving/resolver.py``) — admission, deadlines, fault semantics and
+  adaptive region re-homing included.  Decode output is bit-identical
+  to ``"host"`` on healthy fabric.
+
 Recurrent/enc-dec archs are served via the transformer API directly (their
 state is batch-indexed, not paged); DESIGN.md §5 notes the Tiara technique
 has no indirection to collapse there.
@@ -13,15 +27,20 @@ has no indirection to collapse there.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import time
+import warnings
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ArchConfig
+from repro.core import isa
+from repro.core.endpoint import Completion, EndpointError
 from repro.models import transformer as tf
 from repro.serving.allocator import BlockAllocator
+from repro.serving.resolver import TiaraResolver, expert_layout
 from repro.serving.sampler import sample_tokens
 
 
@@ -36,10 +55,87 @@ class Sequence:
     done: bool = False
 
 
+_STATUS_NAMES = {
+    isa.STATUS_OK: "OK", isa.STATUS_FAIL: "FAIL",
+    isa.STATUS_EAGAIN: "EAGAIN", isa.STATUS_TIMEOUT: "TIMEOUT",
+    isa.STATUS_FLUSHED: "FLUSHED", isa.STATUS_PROT_FAULT: "PROT_FAULT",
+}
+
+
+@dataclasses.dataclass
+class SequenceHandle:
+    """One submitted sequence's completion handle — the engine-level
+    mirror of :class:`~repro.core.endpoint.Completion`: ``status``
+    reuses the ISA's CQE statuses (``STATUS_OK`` / ``STATUS_EAGAIN`` on
+    admission reject / ``STATUS_TIMEOUT`` on deadline expiry /
+    ``STATUS_PROT_FAULT`` / ``STATUS_FLUSHED`` surfaced from the tiara
+    resolver's fabric), ``poll()`` is the non-blocking check, and
+    ``result()`` runs the engine until this sequence finishes."""
+
+    sid: int
+    tenant: str
+    engine: "ServingEngine" = dataclasses.field(repr=False)
+    deadline: Optional[float] = None      # absolute engine-clock deadline
+    done: bool = False
+    status: int = isa.STATUS_OK
+    fault: Optional[isa.FaultInfo] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.done and self.status == isa.STATUS_OK
+
+    @property
+    def rejected(self) -> bool:
+        return self.done and self.status == isa.STATUS_EAGAIN
+
+    @property
+    def timed_out(self) -> bool:
+        return self.done and self.status == isa.STATUS_TIMEOUT
+
+    @property
+    def faulted(self) -> bool:
+        return self.done and self.status == isa.STATUS_PROT_FAULT
+
+    @property
+    def flushed(self) -> bool:
+        return self.done and self.status == isa.STATUS_FLUSHED
+
+    def poll(self) -> bool:
+        """Non-blocking: has this sequence reached a terminal state?"""
+        return self.done
+
+    @property
+    def tokens(self) -> List[int]:
+        """Tokens generated so far (the final output once done)."""
+        return self.engine._tokens_of(self.sid)
+
+    def result(self, *, max_steps: int = 10_000,
+               check: bool = True) -> List[int]:
+        """Run the engine until this sequence finishes and return its
+        tokens.  With ``check`` (default), a non-OK terminal status
+        raises :class:`~repro.core.endpoint.EndpointError` — mirroring
+        ``Completion.result()``."""
+        self.engine.run_until(self.sid, max_steps=max_steps)
+        if check and not self.ok:
+            name = _STATUS_NAMES.get(self.status, str(self.status))
+            raise EndpointError(
+                f"sequence {self.sid} ({self.tenant}) ended "
+                f"{name}" + (f": {self.fault}" if self.fault else ""))
+        return self.tokens
+
+
 class ServingEngine:
-    def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
+    def __init__(self, cfg: ArchConfig, params: Any, *,
+                 max_slots: int = 4,
                  max_seq: int = 512, n_pages: Optional[int] = None,
-                 eos_id: int = 0, temperature: float = 0.0, seed: int = 0):
+                 eos_id: int = 0, temperature: float = 0.0, seed: int = 0,
+                 resolver: str = "host", n_homes: int = 1,
+                 placement: str = "single",
+                 max_pending: Optional[int] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 sleep: Optional[Callable[[float], None]] = None,
+                 resolver_deadline_s: Optional[float] = None,
+                 rehome: bool = True, rehome_every: int = 8) -> None:
         assert not cfg.enc_dec and all(s.kind == "attn"
                                        for s in cfg.pattern), \
             "engine serves decoder-only attention archs"
@@ -72,6 +168,31 @@ class ServingEngine:
         self.completed: Dict[int, List[int]] = {}
         self._next_sid = 0
         self._rng = jax.random.PRNGKey(seed)
+        self._handles: Dict[int, SequenceHandle] = {}
+        self.max_pending = max_pending
+        self._clock: Callable[[], float] = \
+            clock if clock is not None else time.monotonic
+
+        self.resolver_name = str(resolver)
+        self._resolver: Optional[TiaraResolver] = None
+        self._moe = None
+        if resolver == "tiara":
+            moe_specs = [s.moe for s in cfg.pattern
+                         if s.mlp == "moe" and s.moe is not None]
+            if moe_specs:
+                spec = moe_specs[0]
+                self._moe = expert_layout(
+                    spec.n_experts,
+                    max_k=min(spec.top_k, spec.n_experts))
+            self._resolver = TiaraResolver(
+                self.allocator, max_slots=max_slots,
+                pages_per_seq=self.pages_per_seq, n_homes=n_homes,
+                moe=self._moe, deadline_s=resolver_deadline_s,
+                clock=clock, sleep=sleep, placement=placement,
+                rehome=rehome, rehome_every=rehome_every)
+        elif resolver != "host":
+            raise ValueError(
+                f"unknown resolver {resolver!r} (use 'host' or 'tiara')")
 
         self._prefill_jit = jax.jit(
             lambda p, b: tf.apply_model(p, cfg, b, mode="prefill"))
@@ -80,35 +201,124 @@ class ServingEngine:
 
     # -- client API -------------------------------------------------------
 
-    def submit(self, prompt: List[int], max_new: int = 32) -> int:
-        seq = Sequence(sid=self._next_sid, prompt=list(prompt),
-                       max_new=max_new)
+    def submit(self, prompt: List[int], *args: int, max_new: int = 32,
+               deadline_s: Optional[float] = None,
+               tenant: str = "default") -> Any:
+        """Admit one sequence; returns its :class:`SequenceHandle`
+        (``ServingLoop.submit`` semantics: exactly one terminal status
+        per submission).  An already-full waiting queue
+        (``max_pending``) rejects with ``STATUS_EAGAIN``; a
+        ``deadline_s`` that expires before the sequence is admitted to
+        a slot times out with ``STATUS_TIMEOUT`` and never prefills.
+
+        .. deprecated:: PR 9
+           The positional form ``submit(prompt, max_new)`` (which
+           returned the bare ``sid``) is kept for one release behind a
+           ``DeprecationWarning``; see the ROADMAP migration table.
+        """
+        if args:
+            warnings.warn(
+                "ServingEngine.submit(prompt, max_new) positional form "
+                "is deprecated; call submit(prompt, max_new=...) — it "
+                "returns a SequenceHandle (the old int sid is "
+                "handle.sid)", DeprecationWarning, stacklevel=2)
+            if len(args) != 1:
+                raise TypeError(
+                    f"submit() takes at most 2 positional arguments "
+                    f"({1 + len(args)} given)")
+            # old contract: the bare int sid
+            return self._submit(prompt, int(args[0]), None, "default").sid
+        return self._submit(prompt, max_new, deadline_s, tenant)
+
+    def _submit(self, prompt: List[int], max_new: int,
+                deadline_s: Optional[float],
+                tenant: str) -> SequenceHandle:
+        sid = self._next_sid
         self._next_sid += 1
+        deadline = None if deadline_s is None \
+            else self._clock() + float(deadline_s)
+        handle = SequenceHandle(sid=sid, tenant=tenant, engine=self,
+                                deadline=deadline)
+        self._handles[sid] = handle
+        seq = Sequence(sid=sid, prompt=list(prompt), max_new=max_new)
+        if self.max_pending is not None \
+                and len(self.waiting) >= self.max_pending:
+            self.completed[sid] = []
+            handle.done, handle.status = True, isa.STATUS_EAGAIN
+            return handle
+        if deadline is not None and deadline <= self._clock():
+            self.completed[sid] = []
+            handle.done, handle.status = True, isa.STATUS_TIMEOUT
+            return handle
         self.waiting.append(seq)
-        return seq.sid
+        return handle
+
+    def handle(self, sid: int) -> SequenceHandle:
+        return self._handles[sid]
+
+    def _tokens_of(self, sid: int) -> List[int]:
+        if sid in self.completed:
+            return list(self.completed[sid])
+        for seq in list(self.waiting) + [s for s in self.active if s]:
+            if seq.sid == sid:
+                return list(seq.output)
+        raise KeyError(f"unknown sequence {sid}")
 
     def finished(self) -> bool:
         return not self.waiting and all(s is None for s in self.active)
 
     # -- scheduling ---------------------------------------------------------
 
+    def _finish(self, seq: Sequence, *, status: int = isa.STATUS_OK,
+                fault: Optional[isa.FaultInfo] = None) -> None:
+        """Terminal transition for one sequence: record output, release
+        its slot/pages, resolve its handle with ``status``."""
+        seq.done = True
+        self.completed[seq.sid] = list(seq.output)
+        handle = self._handles.get(seq.sid)
+        if handle is not None:
+            handle.done = True
+            handle.status = int(status)
+            handle.fault = fault
+        if seq.slot is not None:
+            slot = seq.slot
+            if seq.pages:
+                self.allocator.free(seq.pages)
+            self.active[slot] = None
+            self.lengths[slot] = 0
+            self.block_tables[slot] = self.scratch_page
+            if self._resolver is not None:
+                self._resolver.unbind(slot)
+
     def _admit(self) -> None:
         for slot in range(self.max_slots):
-            if self.active[slot] is not None or not self.waiting:
+            if self.active[slot] is not None:
                 continue
-            seq = self.waiting.pop(0)
-            need = self.pages_per_seq
-            try:
-                pages = self.allocator.alloc(need, seq.sid)
-            except Exception:
-                self.waiting.insert(0, seq)
-                return
-            seq.slot, seq.pages = slot, pages
-            self.block_tables[slot] = np.asarray(pages, np.int32)
-            self._prefill(seq)
-            self.active[slot] = seq
+            while self.waiting:
+                seq = self.waiting.pop(0)
+                handle = self._handles.get(seq.sid)
+                if handle is not None and handle.deadline is not None \
+                        and handle.deadline <= self._clock():
+                    # expired while queued: times out, never prefills
+                    # (the ServingLoop's expired-before-launch rule)
+                    self._finish(seq, status=isa.STATUS_TIMEOUT)
+                    continue
+                need = self.pages_per_seq
+                try:
+                    pages = self.allocator.alloc(need, seq.sid)
+                except Exception:
+                    self.waiting.insert(0, seq)
+                    return
+                seq.slot, seq.pages = slot, pages
+                self.block_tables[slot] = np.asarray(pages, np.int32)
+                if self._resolver is not None:
+                    self._resolver.bind(slot, pages)
+                self._prefill(seq)
+                self.active[slot] = seq
+                break
 
     def _prefill(self, seq: Sequence) -> None:
+        assert seq.slot is not None
         slot = seq.slot
         plen = len(seq.prompt)
         # bucket prompt length to limit compilations
@@ -134,11 +344,58 @@ class ServingEngine:
     # Per-slot cache views: pages are global (shared pool), so attention
     # caches pass through whole; only batch-indexed leaves (none for
     # attention-only archs) would need slicing.
-    def _slot_caches(self, slot: int):
+    def _slot_caches(self, slot: Optional[int]) -> Any:
         return self.caches
 
-    def _merge_slot_caches(self, slot: int, new_caches) -> None:
+    def _merge_slot_caches(self, slot: Optional[int], new_caches: Any
+                           ) -> None:
         self.caches = new_caches
+
+    # -- disaggregated resolution (resolver="tiara") -----------------------
+
+    def _expert_request(self, seq: Sequence) -> List[int]:
+        """The expert routes this step resolves through the fabric.
+        The real router's top-k runs inside the jitted decode; the
+        descriptor-level resolution here derives a deterministic route
+        from the step's input token, so the *translation layer* (the
+        expert-id -> slab indirection of paper §4.5) is exercised and
+        audited end to end without forking the jitted compute graph."""
+        assert self._moe is not None
+        basis = seq.output[-1] if seq.output else \
+            (seq.prompt[-1] if seq.prompt else 0)
+        return [(int(basis) + j) % self._moe.n_experts
+                for j in range(self._moe.max_k)]
+
+    def _resolve_block_tables(self, slots: List[int]) -> np.ndarray:
+        """One fabric round trip: resolve every active slot's block
+        table (and expert routes) through the endpoint; sequences whose
+        resolution fails (timeout / fault / flush / reject) terminate
+        with that status through their handles.  Returns the decode
+        step's block tables built from the fabric replies."""
+        assert self._resolver is not None
+        expert_reqs: Dict[int, List[int]] = {}
+        if self._moe is not None:
+            for slot in slots:
+                seq = self.active[slot]
+                assert seq is not None
+                expert_reqs[slot] = self._expert_request(seq)
+        kv, experts = self._resolver.resolve_step(slots, expert_reqs)
+        bt = self.block_tables.copy()
+        for slot in slots:
+            seq = self.active[slot]
+            assert seq is not None
+            res = kv[slot]
+            failed: Optional[Completion] = None
+            if isinstance(res, Completion):
+                failed = res
+            elif experts.get(slot) is not None:
+                failed = experts[slot]
+            if failed is not None:
+                self._finish(seq, status=int(failed.status),
+                             fault=failed.fault)
+                continue
+            bt[slot] = np.asarray(res, np.int32)
+        return bt
 
     # -- engine step -----------------------------------------------------------
 
@@ -148,6 +405,14 @@ class ServingEngine:
         slots = [i for i, s in enumerate(self.active) if s is not None]
         if not slots:
             return self.results()
+        if self._resolver is not None:
+            bt = self._resolve_block_tables(slots)
+            slots = [i for i, s in enumerate(self.active)
+                     if s is not None]
+            if not slots:
+                return self.results()
+        else:
+            bt = self.block_tables
         tokens = np.zeros((self.max_slots, 1), np.int32)
         for i, seq in enumerate(self.active):
             if seq is not None and seq.output:
@@ -155,7 +420,7 @@ class ServingEngine:
         batch = {
             "tokens": jnp.asarray(tokens),
             "caches": self.caches,
-            "block_tables": jnp.asarray(self.block_tables),
+            "block_tables": jnp.asarray(bt),
             "lengths": jnp.asarray(self.lengths),
         }
         out = self._decode_jit(self.params, batch)
@@ -165,18 +430,14 @@ class ServingEngine:
                             self.temperature)
         for slot in slots:
             seq = self.active[slot]
+            assert seq is not None
             self.lengths[slot] += 1
             tok = int(nxt[slot])
             seq.output.append(tok)
             if (tok == self.eos_id
                     or len(seq.output) >= seq.max_new
                     or self.lengths[slot] >= self.max_seq - 1):
-                seq.done = True
-                self.completed[seq.sid] = list(seq.output)
-                self.allocator.free(seq.pages)
-                self.active[slot] = None
-                self.lengths[slot] = 0
-                self.block_tables[slot] = self.scratch_page
+                self._finish(seq)
         return self.results()
 
     def results(self) -> Dict[int, List[int]]:
@@ -185,6 +446,24 @@ class ServingEngine:
             out[seq.sid] = list(seq.output)
         return out
 
+    def run_until(self, sid: int, max_steps: int = 10_000
+                  ) -> SequenceHandle:
+        """Step the engine until sequence ``sid`` reaches a terminal
+        state (bounded; raises rather than hangs)."""
+        handle = self._handles[sid]
+        steps = 0
+        while not handle.done and not self.finished():
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(
+                    f"sequence {sid} did not finish in "
+                    f"{max_steps} steps")
+        if not handle.done:
+            # engine drained without the sequence reaching a slot
+            raise RuntimeError(f"sequence {sid} was never scheduled")
+        return handle
+
     def run_to_completion(self, max_steps: int = 10_000
                           ) -> Dict[int, List[int]]:
         steps = 0
@@ -192,3 +471,17 @@ class ServingEngine:
             self.step()
             steps += 1
         return self.results()
+
+    # -- audits -----------------------------------------------------------
+
+    @property
+    def resolver(self) -> Optional[TiaraResolver]:
+        """The tiara resolver backing this engine (None on the host
+        path) — exposed for benches/tests that instrument the fabric
+        (``resolver.on_wave``) or drive faults."""
+        return self._resolver
+
+    def resolver_audit(self) -> Dict[str, float]:
+        """The tiara resolver's rehome/traffic audit (empty dict on the
+        host path)."""
+        return {} if self._resolver is None else self._resolver.audit()

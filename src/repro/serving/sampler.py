@@ -9,7 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def sample_tokens(logits, key, temperature: float = 0.0,
+def sample_tokens(logits: jax.Array, key: jax.Array,
+                  temperature: float = 0.0,
                   top_k: Optional[int] = None) -> np.ndarray:
     """logits (B, V) -> (B,) int32."""
     logits = jnp.asarray(logits, jnp.float32)

@@ -66,7 +66,7 @@ def test_engine_greedy_matches_full_forward():
     prompt = [5, 9, 13, 2, 7, 11]
     eng = ServingEngine(cfg, params, max_slots=2, max_seq=64,
                         temperature=0.0, eos_id=-1)
-    sid = eng.submit(prompt, max_new=4)
+    sid = eng.submit(prompt, max_new=4).sid
     out = eng.run_to_completion()[sid]
     toks = list(prompt)
     raw = []
@@ -86,7 +86,8 @@ def test_engine_continuous_batching_many_sequences():
     eng = ServingEngine(cfg, params, max_slots=3, max_seq=64,
                         temperature=0.0, eos_id=-1)
     rng = np.random.default_rng(0)
-    sids = [eng.submit(list(rng.integers(1, cfg.vocab, 5 + i)), max_new=5)
+    sids = [eng.submit(list(rng.integers(1, cfg.vocab, 5 + i)),
+                       max_new=5).sid
             for i in range(7)]           # more sequences than slots
     out = eng.run_to_completion()
     assert set(out) == set(sids)

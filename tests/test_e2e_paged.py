@@ -1,0 +1,201 @@
+"""End-to-end disaggregated paged decode (PR 9).
+
+Token bit-parity of ``ServingEngine(resolver="tiara")`` against the
+host-resolve path, the unified submit surface (SequenceHandle +
+deprecated positional shim), the allocator API additions, the
+exactly-one-CQE-per-post identity through the resolver's serving loop,
+and fault surfacing (mid-decode device failure terminates sequences
+with ``STATUS_PROT_FAULT`` through their handles — never a hang).
+"""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.core import faults, isa
+from repro.core.endpoint import EndpointError
+from repro.core.serving_loop import VirtualClock
+from repro.models import transformer as tf
+from repro.serving import (BlockAllocator, OutOfPages, ServingEngine,
+                           TiaraResolver)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduce_config(get_config("tiny-lm"))
+    return cfg, tf.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, n, seed=3):
+    rng = np.random.default_rng(seed)
+    return [list(map(int, rng.integers(1, cfg.vocab, 4 + i)))
+            for i in range(n)]
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_seq", 64)
+    return ServingEngine(cfg, params, temperature=0.0, eos_id=-1, **kw)
+
+
+# -- allocator API (satellite 2) ------------------------------------------
+
+def test_alloc_many_all_or_nothing():
+    a = BlockAllocator(8)
+    got = a.alloc_many([(1, 3), (2, 4)])
+    assert sorted(got) == [1, 2]
+    assert len(got[1]) == 3 and len(got[2]) == 4
+    assert a.free_pages == 1
+    # total doesn't fit: nothing is allocated, free count untouched
+    with pytest.raises(OutOfPages) as ei:
+        a.alloc_many([(3, 1), (4, 1)])
+    assert ei.value.needed == 2 and ei.value.free == 1
+    assert a.free_pages == 1 and a.owned_by(3) == [] \
+        and a.owned_by(4) == []
+
+
+def test_out_of_pages_structured_fields():
+    a = BlockAllocator(4)
+    a.alloc(3, owner=1)
+    with pytest.raises(OutOfPages) as ei:
+        a.alloc(2, owner=2)
+    assert (ei.value.needed, ei.value.free) == (2, 1)
+    assert "2 pages" in str(ei.value) and "1 free" in str(ei.value)
+
+
+def test_region_layout_export():
+    k = BlockAllocator(16).region_layout(max_req_blocks=4)
+    rt = k.regions()
+    # the four regions the endpoint registers, addressable by name
+    for region in ("req", "blocktable", "kvpool", "reply"):
+        assert rt[region].size >= 1
+    assert k.block_words == 1          # descriptor granularity default
+
+
+# -- unified submit surface (satellite 1) ----------------------------------
+
+def test_submit_returns_handle_and_shim_warns(tiny):
+    cfg, params = tiny
+    eng = _engine(cfg, params)
+    h = eng.submit(_prompts(cfg, 1)[0], max_new=3)
+    assert h.sid == 0 and not h.done
+    toks = h.result()
+    assert h.ok and h.status == isa.STATUS_OK and toks == h.tokens
+    assert len(toks) == 3
+    # deprecated positional form: warns, returns the bare int sid
+    with pytest.warns(DeprecationWarning):
+        sid = eng.submit(_prompts(cfg, 1)[0], 3)
+    assert isinstance(sid, int) and sid == 1
+    out = eng.run_to_completion()
+    assert out[sid] == eng.handle(sid).tokens
+
+
+def test_submit_admission_statuses(tiny):
+    cfg, params = tiny
+    eng = _engine(cfg, params, max_pending=0)
+    h = eng.submit(_prompts(cfg, 1)[0], max_new=3)
+    assert h.rejected and h.status == isa.STATUS_EAGAIN
+    with pytest.raises(EndpointError):
+        h.result()
+    assert h.result(check=False) == []
+    eng2 = _engine(cfg, params)
+    h2 = eng2.submit(_prompts(cfg, 1)[0], max_new=3, deadline_s=0.0)
+    assert h2.timed_out and h2.status == isa.STATUS_TIMEOUT
+
+
+# -- parity (the acceptance bit) ------------------------------------------
+
+def test_tiara_parity_single_home(tiny):
+    cfg, params = tiny
+    prompts = _prompts(cfg, 3)
+    host = _engine(cfg, params)
+    for p in prompts:
+        host.submit(p, max_new=4)
+    want = host.run_to_completion()
+    eng = _engine(cfg, params, resolver="tiara")
+    hs = [eng.submit(p, max_new=4) for p in prompts]
+    assert eng.run_to_completion() == want
+    assert all(h.ok for h in hs)
+
+
+def test_tiara_parity_sharded_8dev_with_rehome(tiny):
+    cfg, params = tiny
+    prompts = _prompts(cfg, 5)
+    host = _engine(cfg, params, max_slots=3)
+    for p in prompts:
+        host.submit(p, max_new=4)
+    want = host.run_to_completion()
+    eng = _engine(cfg, params, max_slots=3, resolver="tiara",
+                  n_homes=8, placement="auto", rehome_every=2)
+    for p in prompts:
+        eng.submit(p, max_new=4)
+    assert eng.run_to_completion() == want
+    aud = eng.resolver_audit()
+    # clients are spread over the mesh: the audit saw cross-device
+    # traffic and the INDIGO sweep migrated hot regions toward it
+    assert aud["rehomes"] >= 1 and aud["rehomed_words"] > 0
+    assert aud["cross_device_words"] > 0
+
+
+def test_tiara_parity_moe_expert_gather():
+    cfg = reduce_config(get_config("llama4-scout-17b-a16e"))
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(cfg, 2)
+    host = _engine(cfg, params)
+    for p in prompts:
+        host.submit(p, max_new=3)
+    want = host.run_to_completion()
+    eng = _engine(cfg, params, resolver="tiara", n_homes=2)
+    for p in prompts:
+        eng.submit(p, max_new=3)
+    # resolve_step integrity-checks every gathered expert slab against
+    # the requested route and raises on mismatch, so completing at
+    # parity proves the MoEExpertGather path ran clean end to end
+    assert eng.run_to_completion() == want
+    assert eng.resolver is not None and eng.resolver.moe is not None
+    assert eng.resolver.loop.stats.executed > 0
+
+
+# -- exactly-one-CQE identity ---------------------------------------------
+
+def test_exactly_one_cqe_per_post_including_faults():
+    vc = VirtualClock()
+    a = BlockAllocator(8)
+    r = TiaraResolver(a, max_slots=2, pages_per_seq=4, n_homes=2,
+                      clock=vc, sleep=vc.sleep)
+    r.bind(0, [0, 1, 2, 3])
+    r.bind(1, [4, 5, 6, 7])
+    kv, _ = r.resolve_step([0, 1])
+    assert all(isinstance(v, np.ndarray) for v in kv.values())
+    assert list(kv[1]) == [4, 5, 6, 7]
+    # kill slot 0's home mid-serve: its post must still retire exactly
+    # one CQE (a failed one), and slot 1 keeps resolving
+    r.ep.inject(faults.fail_devices(0))
+    kv2, _ = r.resolve_step([0, 1])
+    assert not isinstance(kv2[0], np.ndarray)
+    assert int(kv2[0].status) in (isa.STATUS_PROT_FAULT,
+                                  isa.STATUS_FLUSHED)
+    st = r.loop.stats
+    assert st.submitted == 4
+    assert st.submitted == (st.executed + st.flushed + st.timed_out
+                            + st.rejected + st.shed)
+
+
+# -- fault surfacing through SequenceHandle --------------------------------
+
+def test_mid_decode_device_failure_surfaces_cleanly(tiny):
+    cfg, params = tiny
+    eng = _engine(cfg, params, resolver="tiara", n_homes=1)
+    hs = [eng.submit(p, max_new=8) for p in _prompts(cfg, 2)]
+    eng.step()                      # healthy first decode step
+    assert eng.resolver is not None
+    eng.resolver.ep.inject(faults.fail_devices(0))
+    out = eng.run_to_completion(max_steps=100)   # bounded: never hangs
+    assert eng.finished()
+    for h in hs:
+        assert h.done and (h.faulted or h.flushed)
+        assert h.status in (isa.STATUS_PROT_FAULT, isa.STATUS_FLUSHED)
+        with pytest.raises(EndpointError):
+            h.result()
+        assert out[h.sid] == h.tokens   # partial output is preserved
