@@ -1,0 +1,425 @@
+"""Line-rate certification: soundness corpus + admission fail-fast A/B.
+
+Two claims from the registration-time WCET certifier (``core/wcet``),
+each with its own record:
+
+  * **Soundness corpus** (``section="soundness"``): a seeded corpus of
+    random verified programs (static and register-capped loops,
+    local/remote word ops, sync/async MEMCPYs with static and
+    register-held lengths, data-dependent forward jumps, WAITs,
+    atomics, register-chased offsets), each run on the ``pyvm`` oracle
+    with random params and replayed through ``simulate_task`` in
+    split-phase, serialized, and pipelined modes.  ``wcet_sound_ok``
+    is a hard bit: every simulated timing and occupancy figure, and
+    the trace's *exact* dynamic word/byte traffic, stays within the
+    certificate on every program — AND the corpus is non-vacuous (it
+    actually exercised loops, memcpys, async issues, remote ops, and
+    data-dependent skips).  ``check_regression`` fails the build on a
+    False, unconditionally.  ``bottleneck_agree_frac`` reports how
+    often the statically predicted bottleneck matches the simulator's
+    on the same program (informational — the certificate maximizes
+    over paths the trace need not take).
+  * **Admission fail-fast** (``section="failfast"``): a deterministic
+    overloaded serving run on a ``VirtualClock`` where every doorbell
+    pays an injected launch delay (``faults.delay_waves``).  Half the
+    posts carry deadlines the certificate proves infeasible (window
+    far below the certified WCET) yet still in the future both at
+    admission and at launch, so without certificates they are queued,
+    launched, and retire *after* their deadline — pure wasted fabric
+    work.  With ``ServingConfig(admission_wcet=True)`` they retire
+    ``STATUS_TIMEOUT`` at admission, unlaunched, while the feasible
+    half executes identically.  ``speedup_failfast`` (gated as a
+    lower bound) is the launched-then-late ratio ``(1 + late_off) /
+    (1 + late_on)``; ``wcet_failfast_ok`` is the hard bit that the
+    fail-fast run wastes nothing, loses no feasible work, and both
+    runs retire exactly one CQE per submission.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Set, Tuple
+
+import numpy as np
+
+from repro.core import faults, isa, memory, pyvm, simulator
+from repro.core.endpoint import TiaraEndpoint
+from repro.core.isa import Alu, Op
+from repro.core.memory import RegionTable
+from repro.core.program import OperatorBuilder, TiaraProgram
+from repro.core.serving_loop import (ServingConfig, ServingLoop,
+                                     VirtualClock)
+from repro.core.verifier import VerificationError, VerifiedOperator, verify
+
+from benchmarks._workbench import Row
+
+JSON_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_wcet.json")
+
+N_DEVICES = 2
+ROUNDS = 300
+QUICK_ROUNDS = 60
+# timing comparisons allow float roundoff only — the bound itself must
+# hold structurally, not within a tolerance
+_EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Part A: random-program soundness corpus
+# ---------------------------------------------------------------------------
+
+def corpus_table() -> RegionTable:
+    return memory.packed_table([("src", 1024), ("dst", 1024),
+                                ("acc", 256)])
+
+
+def random_program(rng: np.random.Generator, rt: RegionTable,
+                   idx: int) -> Tuple[TiaraProgram, Set[str]]:
+    """One random draw from the corpus grammar plus the set of feature
+    tags it exercised (for the non-vacuity check).  A draw may fail
+    verification (e.g. a loop nest over the step limit) — callers
+    redraw."""
+    b = OperatorBuilder(f"rand{idx}", n_params=4, regions=rt)
+    off = b.reg()       # word-op cursor into src/dst, masked to 1023
+    moff = b.reg()      # memcpy cursor, masked to 511 so off+len fits
+    aoff = b.reg()      # atomics cursor into acc, masked to 255
+    v = b.reg()         # live value
+    w = b.reg()         # scratch (register lengths / atomics result)
+    b.alu(off, b.param(0), Alu.AND, 1023)
+    b.alu(moff, b.param(0), Alu.AND, 511)
+    b.alu(aoff, b.param(1), Alu.AND, 255)
+    b.alu(v, b.param(2), Alu.ADD, 3)
+    state = {"async": 0}
+    feats: Set[str] = set()
+
+    def rand_dev() -> int:
+        # DEV_LOCAL resolves to the executing home; 0/1 are explicit
+        # pool rows (the certificate must charge remote for anything
+        # not statically DEV_LOCAL)
+        return int(rng.choice([isa.DEV_LOCAL, isa.DEV_LOCAL, 0, 1]))
+
+    def emit(depth: int) -> None:
+        k = int(rng.integers(8))
+        if k == 0:
+            aop = Alu(int(rng.choice([Alu.ADD, Alu.SUB, Alu.XOR,
+                                      Alu.MIN, Alu.MAX])))
+            b.alu(v, v, aop, int(rng.integers(0, 64)))
+        elif k == 1:
+            dev = rand_dev()
+            if dev != isa.DEV_LOCAL:
+                feats.add("remote")
+            b.load(v, "src", off, dev=dev)
+            if rng.random() < 0.5:
+                # data-dependent cursor: the chased-address family
+                b.alu(off, v, Alu.AND, 1023)
+                feats.add("chase")
+        elif k == 2:
+            dev = rand_dev()
+            if dev != isa.DEV_LOCAL:
+                feats.add("remote")
+            b.store(v, "dst", off, dev=dev)
+            feats.add("store")
+        elif k == 3:
+            feats.add("memcpy")
+            if rng.random() < 0.5:
+                n_words: object = int(rng.integers(1, 96))
+            else:
+                b.alu(w, b.param(3), Alu.AND, 63)
+                n_words = (w, int(rng.integers(8, 128)))
+                feats.add("reg_len")
+            is_async = bool(rng.random() < 0.35)
+            sdev, ddev = rand_dev(), rand_dev()
+            if isa.DEV_LOCAL not in (sdev, ddev):
+                feats.add("remote")
+            b.memcpy(dst_region="dst", dst_off=moff, src_region="src",
+                     src_off=moff, n_words=n_words, dst_dev=ddev,
+                     src_dev=sdev, is_async=is_async)
+            if is_async:
+                state["async"] += 1
+                feats.add("async")
+        elif k == 4:
+            b.caa(w, "acc", aoff, v, v)
+            feats.add("atomic")
+        elif k == 5 and depth < 2:
+            feats.add("loop")
+            if rng.random() < 0.5:
+                m: object = int(rng.integers(2, 7))
+            else:
+                m = (b.param(1), int(rng.integers(2, 9)))
+                feats.add("mreg_loop")
+            with b.loop(m):
+                for _ in range(int(rng.integers(1, 3))):
+                    emit(depth + 1)
+                b.alu(off, off, Alu.ADD, 1)
+                b.alu(off, off, Alu.AND, 1023)
+        elif k == 6:
+            # a data-dependent forward jump over a couple of
+            # constructs: the certificate must stay sound when the
+            # skipped work never runs
+            feats.add("jump")
+            lbl = b.mklabel()
+            b.jump(lbl, a=v, cond=Alu(int(rng.choice([Alu.LT, Alu.GE]))),
+                   b=int(rng.integers(0, 2048)))
+            for _ in range(int(rng.integers(1, 3))):
+                emit(depth + 1)
+            b.bind(lbl)
+        else:
+            b.wait(int(rng.integers(0, 2)))
+    for _ in range(int(rng.integers(3, 8))):
+        emit(0)
+    if state["async"]:
+        b.wait(0)
+    b.ret(v)
+    return b.build(), feats
+
+
+def _trace_traffic(trace: List[pyvm.TraceEvent]) -> Tuple[int, int, int]:
+    """Exact dynamic (words_read, words_written, memcpy_bytes) of one
+    executed trace — what the certificate's traffic fields bound."""
+    rd = wr = mb = 0
+    for ev in trace:
+        if ev.op in (Op.LOAD, Op.CAS, Op.CAA):
+            rd += 1
+        if ev.op in (Op.STORE, Op.CAS, Op.CAA):
+            wr += 1
+        if ev.op == Op.MEMCPY:
+            rd += ev.n_words
+            wr += ev.n_words
+            mb += ev.n_words * isa.WORD_BYTES
+    return rd, wr, mb
+
+
+def check_one(vop: VerifiedOperator, rt: RegionTable,
+              mem: np.ndarray, params: List[int],
+              home: int) -> Tuple[List[str], bool]:
+    """Run one program on the oracle and check every simulated figure
+    against the certificate.  Returns (violations, bottleneck_agree)."""
+    cert = vop.certificate
+    assert cert is not None
+    res = pyvm.run(vop, rt, mem, params, home=home, record_trace=True)
+    bad: List[str] = []
+    agree = False
+    for mode_kw in ({}, dict(serialize_async=True),
+                    dict(pipelined=True, serial_chain=False)):
+        sim = simulator.simulate_task(vop, res.trace, **mode_kw)
+        checks = [
+            ("nic_us", sim.nic_resident_us, cert.wcet_nic_us),
+            ("latency_us", sim.latency_us, cert.wcet_latency_us),
+            ("mp_cycles", sim.mp_cycles, cert.mp_cycles),
+            ("chan_cycles", sim.dma_channel_cycles,
+             cert.dma_channel_cycles),
+            ("small_reqs", sim.dma_small_reqs, cert.dma_small_reqs),
+            ("wire_bytes", sim.wire_bytes, cert.wire_bytes),
+        ]
+        for name, got, bound in checks:
+            if float(got) > float(bound) * (1 + _EPS) + _EPS:
+                bad.append(f"{vop.name}: {name} {got} > certified "
+                           f"{bound} ({mode_kw or 'split-phase'})")
+        if not mode_kw:
+            agree = simulator.bottleneck(sim) == cert.bottleneck
+    rd, wr, mb = _trace_traffic(list(res.trace))
+    for name, got, bound in (("words_read", rd, cert.words_read),
+                             ("words_written", wr, cert.words_written),
+                             ("memcpy_bytes", mb, cert.memcpy_bytes)):
+        if got > bound:
+            bad.append(f"{vop.name}: {name} {got} > certified {bound}")
+    if cert.mp_cycles != vop.step_bound:
+        bad.append(f"{vop.name}: certificate mp_cycles "
+                   f"{cert.mp_cycles} != step bound {vop.step_bound}")
+    return bad, agree
+
+
+def _soundness(quick: bool) -> dict:
+    rounds = QUICK_ROUNDS if quick else ROUNDS
+    rt = corpus_table()
+    rng = np.random.default_rng(2026)
+    mem0 = rng.integers(0, 2048,
+                        size=(N_DEVICES, rt.pool_words)).astype(np.int64)
+    checked = rejected = agree = 0
+    feats: Set[str] = set()
+    violations: List[str] = []
+    idx = 0
+    while checked < rounds:
+        prog, prog_feats = random_program(rng, rt, idx)
+        idx += 1
+        try:
+            vop = verify(prog, regions=rt)
+        except VerificationError:
+            rejected += 1       # a drawn nest over the step cap — fine
+            continue
+        params = [int(rng.integers(0, 2048)) for _ in range(4)]
+        bad, a = check_one(vop, rt, mem0.copy(), params,
+                           home=int(rng.integers(N_DEVICES)))
+        violations.extend(bad)
+        agree += int(a)
+        checked += 1
+        feats |= prog_feats
+    needed = {"loop", "memcpy", "async", "remote", "store", "jump",
+              "atomic", "chase"}
+    vacuous = sorted(needed - feats)
+    ok = not violations and not vacuous and checked == rounds
+    return dict(section="soundness", rounds=rounds,
+                checked=checked, rejected_draws=rejected,
+                bound_violations=len(violations),
+                violation_examples=violations[:5],
+                missing_features=vacuous,
+                bottleneck_agree_frac=agree / max(checked, 1),
+                wcet_sound_ok=bool(ok))
+
+
+# ---------------------------------------------------------------------------
+# Part B: admission fail-fast A/B on an overloaded VirtualClock run
+# ---------------------------------------------------------------------------
+
+N_INFEASIBLE = 32
+N_FEASIBLE = 32
+RING = 4
+WAVE_DELAY_S = 5e-6         # injected per-wave launch delay
+
+
+def _failfast_op() -> Tuple[TiaraProgram, RegionTable]:
+    """A bulk gather whose certified WCET (~hundred microseconds)
+    dwarfs the per-wave injected delay, so mid-wave deadlines are
+    statically infeasible for every wave of the run."""
+    rt = memory.packed_table([("src", 4096), ("dst", 4096)])
+    b = OperatorBuilder("gather32", n_params=1, regions=rt)
+    off = b.reg()
+    b.alu(off, b.param(0), Alu.AND, 1023)
+    with b.loop(32):
+        b.memcpy(dst_region="dst", dst_off=off, src_region="src",
+                 src_off=off, n_words=2048, src_dev=0)
+        b.alu(off, off, Alu.ADD, 7)
+        b.alu(off, off, Alu.AND, 1023)
+    b.ret()
+    return b.build(), rt
+
+
+def _failfast_run(admission_wcet: bool) -> dict:
+    prog, rt = _failfast_op()
+    clk = VirtualClock()
+    ep, sessions = TiaraEndpoint.for_tenants(
+        [("t", rt)], n_devices=1, clock=clk, sleep=clk.sleep)
+    sess = sessions["t"]
+    sess.register(prog)
+    op_id, _ = sess._resolve("gather32")
+    cert = ep.registry[op_id].certificate
+    assert cert is not None
+    wcet_s = cert.wcet_latency_us * 1e-6
+    loop = ServingLoop(ep, ServingConfig(
+        ring_size=RING, ring_age_s=0.0, max_pending=256,
+        admission_wcet=admission_wcet))
+    n_posts = N_INFEASIBLE + N_FEASIBLE
+    n_waves = n_posts // RING + 2
+    # the deadline scheme below needs every mid-wave deadline to sit
+    # under the certified WCET — i.e. the whole run is shorter than one
+    # worst-case execution
+    assert wcet_s > (n_waves + 1) * WAVE_DELAY_S
+    # every wave's doorbell pays an injected launch delay, so virtual
+    # time marches WAVE_DELAY_S per wave — the congested-NIC shape
+    ep.inject(faults.delay_waves(*([WAVE_DELAY_S] * n_waves)))
+    posts = []
+    for i in range(n_posts):
+        if i % 2 == 0:
+            # statically infeasible, but in the future both at
+            # admission (t=0) and at its wave's launch (wave k fires at
+            # k*D): a mid-wave deadline k*D + 0.6*D.  Without the
+            # certificate check the post launches and retires at
+            # (k+1)*D — after its deadline.  The window is always far
+            # below the certified WCET (asserted above).
+            deadline = (i // RING) * WAVE_DELAY_S + 0.6 * WAVE_DELAY_S
+            posts.append((loop.submit("t", "gather32", [i],
+                                      deadline_s=deadline), True))
+        else:
+            posts.append((loop.submit("t", "gather32", [i],
+                                      deadline_s=10.0), False))
+    loop.drain()
+    late = sum(
+        1 for c, _ in posts
+        if c.event is not None and c.event.wave >= 0
+        and c.deadline is not None and c.event.retired_at > c.deadline)
+    st = loop.stats
+    cqe_ok = (st.submitted
+              == st.executed + st.flushed + st.timed_out + st.rejected
+              + st.shed)
+    feasible_ok = sum(1 for c, inf in posts
+                      if not inf and c.status == isa.STATUS_OK)
+    return dict(admission_wcet=admission_wcet, launched=st.launched,
+                executed=st.executed, timed_out=st.timed_out,
+                late_launched=late, feasible_ok=feasible_ok,
+                cqe_ok=bool(cqe_ok))
+
+
+def _failfast(quick: bool) -> dict:
+    del quick       # deterministic and fast either way
+    off = _failfast_run(False)
+    on = _failfast_run(True)
+    # the gated lower bound: how much launched-then-late work the
+    # certificate check removed (1.0 = the feature does nothing)
+    speedup = (1 + off["late_launched"]) / (1 + on["late_launched"])
+    ok = (on["late_launched"] == 0
+          and on["feasible_ok"] == N_FEASIBLE
+          and off["feasible_ok"] == N_FEASIBLE
+          and off["late_launched"] > 0
+          and on["cqe_ok"] and off["cqe_ok"])
+    return dict(section="failfast", n_infeasible=N_INFEASIBLE,
+                n_feasible=N_FEASIBLE, ring=RING,
+                wave_delay_us=WAVE_DELAY_S * 1e6,
+                late_launched_off=off["late_launched"],
+                late_launched_on=on["late_launched"],
+                launched_off=off["launched"], launched_on=on["launched"],
+                timed_out_off=off["timed_out"],
+                timed_out_on=on["timed_out"],
+                speedup_failfast=float(speedup),
+                wcet_failfast_ok=bool(ok))
+
+
+def measure(quick: bool = False) -> List[dict]:
+    return [_soundness(quick), _failfast(quick)]
+
+
+def rows(quick: bool = False) -> List[Row]:
+    data = measure(quick=quick)
+    payload = dict(
+        workload="line-rate certification: random-program WCET "
+                 "soundness corpus (pyvm trace + cycle sim vs "
+                 "certificate) + deterministic admission fail-fast A/B "
+                 "on a VirtualClock overload run",
+        unit="programs / posts",
+        acceptance="simulated cycles/traffic never exceed the "
+                   "certificate on a non-vacuous corpus "
+                   "(wcet_sound_ok); statically-infeasible deadlines "
+                   "retire at admission without launching, removing "
+                   "all launched-then-late work (wcet_failfast_ok, "
+                   "speedup_failfast)",
+        results=data)
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+    out = []
+    for r in data:
+        if r["section"] == "soundness":
+            out.append(Row(
+                name=f"wcet/soundness/rounds={r['rounds']}",
+                us_per_call=0.0, derived=float(r["checked"]),
+                unit="programs",
+                note=(f"{r['bound_violations']} violations, "
+                      f"bottleneck agree "
+                      f"{r['bottleneck_agree_frac']:.0%}"
+                      + ("" if r["wcet_sound_ok"] else "  UNSOUND"))))
+        else:
+            out.append(Row(
+                name=f"wcet/failfast/inf={r['n_infeasible']}",
+                us_per_call=0.0,
+                derived=float(r["speedup_failfast"]), unit="x",
+                note=(f"late launches {r['late_launched_off']} -> "
+                      f"{r['late_launched_on']}"
+                      + ("" if r["wcet_failfast_ok"]
+                         else "  FAILFAST-BROKEN"))))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r.csv())
+    print(f"wrote {JSON_PATH}")

@@ -55,7 +55,16 @@ _MEASURED = ("us_per_call", "ops_per_s", "subwave_ops_per_s", "parity_ok",
              "tokens_per_s_tiara", "p99_resolve_us", "rehomes",
              "rehomed_words", "home_skew", "cross_words_rehome",
              "cross_words_static", "tiara_not_slower_ok",
-             "rehome_reduces_traffic_ok")
+             "rehome_reduces_traffic_ok",
+             # bench_wcet: soundness-corpus tallies and fail-fast A/B
+             # counters — measurements feeding wcet_sound_ok /
+             # wcet_failfast_ok and the gated speedup_failfast
+             "checked", "rejected_draws", "bound_violations",
+             "violation_examples", "missing_features",
+             "bottleneck_agree_frac", "wcet_sound_ok",
+             "late_launched_off", "late_launched_on", "launched_off",
+             "launched_on", "timed_out_off", "timed_out_on",
+             "wcet_failfast_ok")
 
 # gated non-speedup metrics.  Lower-bounded metrics fail when the
 # current value drops more than the band below baseline (like
@@ -82,6 +91,12 @@ _HARD_BITS = {
     "rehome_reduces_traffic_ok": "adaptive re-homing failed to reduce "
                                  "cross-device reply words vs the "
                                  "static-home run",
+    "wcet_sound_ok": "a simulated execution exceeded its registration "
+                     "certificate (or the seeded corpus was vacuous) — "
+                     "the line-rate certifier is unsound",
+    "wcet_failfast_ok": "certificate admission fail-fast launched a "
+                        "statically-infeasible post, lost feasible "
+                        "work, or broke the one-CQE-per-post identity",
 }
 
 # per-metric thresholds overriding --threshold: some normalizers are
@@ -121,7 +136,11 @@ _METRIC_THRESHOLDS = {"speedup_vs_single": 0.75,
                       # VirtualClock + cycle sim — bit-stable; tight
                       # bands absorb intentional retunes only
                       "speedup_tiara_resolve": 0.05,
-                      "speedup_rehome_traffic": 0.05}
+                      "speedup_rehome_traffic": 0.05,
+                      # bench_wcet's fail-fast A/B is fully
+                      # deterministic (seeded VirtualClock, injected
+                      # delays); any drop is a policy change
+                      "speedup_failfast": 0.05}
 
 
 def _identity(rec: dict) -> Tuple:

@@ -27,7 +27,7 @@ from benchmarks import (bench_async_overlap, bench_e2e_paged,
                         bench_mixed_batch, bench_moe, bench_offload,
                         bench_paged_attention, bench_ptw, bench_serving,
                         bench_sharded, bench_static_analysis,
-                        bench_table1, bench_vm_throughput)
+                        bench_table1, bench_vm_throughput, bench_wcet)
 from benchmarks._workbench import fmt_table
 
 # Per-module wall-clock budget: one hung bench (an XLA compile gone
@@ -96,6 +96,8 @@ MODULES = [
      bench_static_analysis),
     ("e2e_paged", "End-to-end disaggregated paged decode vs host resolve",
      bench_e2e_paged),
+    ("wcet", "Line-rate certification: soundness corpus + admission "
+     "fail-fast", bench_wcet),
 ]
 
 

@@ -66,6 +66,19 @@ def walk(start, depth):
     print("access analysis:", ep.registry[op_id].describe_analysis(),
           "\n")
 
+    #    ... and its line-rate certificate (core/wcet.py): sound static
+    #    upper bounds on worst-case cycles, word/wire traffic, and
+    #    per-resource occupancy, with the statically predicted
+    #    bottleneck.  The registry rejects operators whose certificate
+    #    exceeds its Budget (eBPF-style, naming the offending pc), and
+    #    the serving loop fail-fasts posts whose deadline is already
+    #    below the certified WCET.
+    cert = ep.registry[op_id].certificate
+    print("line-rate certificate:", cert.describe())
+    hot = cert.hottest("cycles")
+    print(f"hottest site: pc {hot.pc} {hot.op} x{hot.count} "
+          f"({hot.cycles:.0f} worst-case cycles)\n")
+
     # 4. Populate the memory node and post work to the queue pair.  The
     #    doorbell drains the send queue as one wave; completions land in
     #    the session's completion queue.

@@ -52,7 +52,7 @@ semantics needed (wrap64, ALU const-folds) are replicated locally.
 from __future__ import annotations
 
 import dataclasses
-from typing import (Dict, List, Optional, Sequence,
+from typing import (Dict, List, Optional, Protocol, Sequence,
                     Tuple)
 
 import numpy as np
@@ -334,14 +334,31 @@ class OpFootprint:
 _State = List[Optional[SymVal]]
 
 # structural protocol for verifier.LoopInfo without importing it
-# (verifier imports this module)
+# (verifier imports this module; ``core/wcet`` consumes the same shape
+# for its trip-scaled cost multipliers, so the protocol is public)
 
 
-class _LoopLike:
+class LoopLike(Protocol):
     pc: int
     start: int
     end: int
     bound: int
+
+
+_LoopLike = LoopLike
+
+
+def loop_multiplier(loops: Sequence[LoopLike], pc: int) -> int:
+    """Product of the loop-trip caps of every loop body enclosing
+    ``pc`` — how many times that instruction can execute per
+    invocation.  Shared by the verifier's step bound, the footprint
+    lattice's trip scaling, and the line-rate certifier's per-pc cost
+    attribution (one definition, three consumers)."""
+    m = 1
+    for l in loops:
+        if l.start <= pc <= l.end:
+            m *= max(int(l.bound), 0)
+    return m
 
 
 def _copy(state: _State) -> _State:

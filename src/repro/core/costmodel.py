@@ -629,16 +629,29 @@ class DispatchCostModel:
     def wave_us(self, *, batch: int, step_bound: int,
                 key: Optional[int] = None, mode: str = "mixed",
                 contention_rate: float = 0.0,
-                chain_iters: int = 0) -> float:
+                chain_iters: int = 0,
+                cert_ceiling_us: Optional[float] = None) -> float:
         """Scaled wall-clock prediction for one wave — the serving
         loop's formation-policy estimate (analytical shape x learned
-        host scale)."""
+        host scale).
+
+        ``cert_ceiling_us``: the wave's summed certified worst-case
+        latency (:class:`~repro.core.wcet.LineRateCertificate`), when
+        the caller has one.  The prediction is clamped to it: the EWMA
+        scale is a *learned* guess that a cold start or a poisoned
+        sample can inflate arbitrarily, while the certificate is a
+        static fact — no wave can cost more than the sum of its
+        members' certified worst cases, so no prediction should
+        either."""
         pred = self._unscaled_us(mode, batch=batch, step_bound=step_bound,
                                  contention_rate=contention_rate,
                                  chain_iters=chain_iters)
         if pred is None:
             pred = self.cost.batched_us(batch, step_bound, contention_rate)
-        return pred * self.dispatch_scale(key, mode)
+        scaled = pred * self.dispatch_scale(key, mode)
+        if cert_ceiling_us is not None:
+            scaled = min(scaled, cert_ceiling_us)
+        return scaled
 
     def launch_efficiency(self, *, batch: int, step_bound: int,
                           key: Optional[int] = None,

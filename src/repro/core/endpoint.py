@@ -74,7 +74,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core import faults, isa, memory, pyvm, vm
+from repro.core import faults, isa, memory, pyvm, vm, wcet
 from repro.core import registry as _registry
 from repro.core.costmodel import DispatchCostModel
 from repro.core.memory import Grant, RegionTable, RegionView
@@ -488,11 +488,13 @@ class TiaraEndpoint:
                      Callable[[Completion], Optional[int]]] = None,
                  clock: Optional[Callable[[], float]] = None,
                  sleep: Optional[Callable[[float], None]] = None,
+                 budget: Optional[wcet.Budget] = wcet.DEFAULT_BUDGET,
                  sep: str = "/"):
         self.regions = RegionTable(pool_words)
         self.registry = OperatorRegistry(self.regions, n_devices=n_devices,
                                          max_steps=max_steps,
-                                         cost_model=cost_model)
+                                         cost_model=cost_model,
+                                         budget=budget)
         self.n_devices = int(n_devices)
         self.mem = memory.make_pool(n_devices, self.regions)
         self.flush_watermark = flush_watermark

@@ -43,7 +43,7 @@ import numpy as np
 
 from repro.core import access
 from repro.core import compile as tcompile
-from repro.core import isa, vm
+from repro.core import isa, vm, wcet
 from repro.core.costmodel import (DispatchCostModel, DispatchDecision,
                                   SegmentStats)
 from repro.core.memory import Grant, RegionTable
@@ -99,11 +99,19 @@ class Slot:
         """The operator's registration-time symbolic access footprint."""
         return self.verified.footprint
 
+    @property
+    def certificate(self) -> Optional[wcet.LineRateCertificate]:
+        """The operator's registration-time line-rate certificate."""
+        return self.verified.certificate
+
     def describe_analysis(self) -> str:
         """One-line summary of the static analysis artifacts: derived
-        footprint, matched superoperators, and the nearest superop miss."""
+        footprint, line-rate certificate, matched superoperators, and
+        the nearest superop miss."""
         bits = ["footprint: "
                 + access.describe_footprint(self.footprint, self.regions)]
+        if self.certificate is not None:
+            bits.append("certificate: " + self.certificate.describe())
         if self.superops:
             bits.append("superops: " + ", ".join(
                 f"{kind}@pc{pc}" for kind, pc in self.superops))
@@ -151,11 +159,16 @@ class OperatorRegistry:
     def __init__(self, regions: RegionTable, *, n_devices: int = 1,
                  max_steps: Optional[int] = None,
                  cost_model: Optional[DispatchCostModel] = None,
-                 static_analysis: bool = True):
+                 static_analysis: bool = True,
+                 budget: Optional[wcet.Budget] = wcet.DEFAULT_BUDGET):
         self.regions = regions
         self.n_devices = int(n_devices)
         self.max_steps = max_steps
         self.cost_model = cost_model or DispatchCostModel()
+        # Line-rate admission budget: registration rejects operators
+        # whose certificate exceeds it (None disables enforcement —
+        # certificates are still derived and reported).
+        self.budget = budget
         # static_analysis=False disables the registration-time conflict
         # proofs at dispatch: every wave runs with the runtime sweep,
         # exactly the pre-analysis behaviour (escape hatch + A/B lever
@@ -201,6 +214,14 @@ class OperatorRegistry:
             kwargs["max_steps"] = self.max_steps
         verified = verify(program, grant=grant, regions=self.regions,
                           **kwargs)
+        # the eBPF-load budget check: an operator whose *certified*
+        # worst case exceeds the NIC's line-rate budget never gets a
+        # slot, and the error names the offending pc and resource
+        if self.budget is not None and verified.certificate is not None:
+            violations = self.budget.violations(verified.certificate)
+            if violations:
+                raise RegistrationError(
+                    f"{program.name}: " + "; ".join(violations))
         if len(self._slots) >= isa.OP_TABLE_SIZE:
             raise RegistrationError("op_id table full (256 entries)")
         if self._store_used + program.n_instr > isa.INSTR_STORE_SIZE:

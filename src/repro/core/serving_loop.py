@@ -120,6 +120,11 @@ class ServingConfig:
     block_timeout_s: float = 0.0    # submit(block=True) budget
     block_poll_s: float = 0.0005    # sleep step while blocked
     default_deadline_s: Optional[float] = None
+    admission_wcet: bool = True     # fail-fast posts whose operator's
+                                    # certified WCET already exceeds the
+                                    # remaining deadline (statically
+                                    # infeasible: never queued, never
+                                    # launched, still exactly one CQE)
     mode: str = "auto"              # doorbell engine mode
     placement: str = "single"       # doorbell placement
     opportunistic_poll: bool = True  # retire landed waves every pump
@@ -288,6 +293,13 @@ class ServingLoop:
             ep._retire_immediate(c, isa.STATUS_TIMEOUT)
             self.stats.bump(tenant, "timed_out")
             return c
+        if self._wcet_infeasible(c, now):
+            # statically infeasible deadline: the certificate already
+            # proves the worst case overruns it — fail fast instead of
+            # queueing work that could only expire after launch
+            ep._retire_immediate(c, isa.STATUS_TIMEOUT)
+            self.stats.bump(tenant, "timed_out")
+            return c
         if not self._admissible(tenant, now):
             gave_up = True
             if block and self.config.block_timeout_s > 0.0:
@@ -301,9 +313,11 @@ class ServingLoop:
                         break
                     if now >= give_up_at:
                         break
-                # the post may have expired while it waited for room
-                if not gave_up and c.deadline is not None \
-                        and c.deadline <= now:
+                # the post may have expired (or its remaining window
+                # shrunk below the certified WCET) while it waited
+                if not gave_up and ((c.deadline is not None
+                                     and c.deadline <= now)
+                                    or self._wcet_infeasible(c, now)):
                     ep._retire_immediate(c, isa.STATUS_TIMEOUT)
                     self.stats.bump(tenant, "timed_out")
                     return c
@@ -324,6 +338,20 @@ class ServingLoop:
         self._pending.setdefault(tenant, deque()).append(c)
         self.stats.bump(tenant, "admitted")
         return c
+
+    def _wcet_infeasible(self, c: Completion, now: float) -> bool:
+        """True when the post's deadline is *statically* infeasible:
+        the operator's certified worst-case latency
+        (:class:`~repro.core.wcet.LineRateCertificate`) already
+        overruns the time remaining, so queueing or launching could
+        only burn fabric work before the same ``STATUS_TIMEOUT``
+        retires.  Admission retires it immediately instead."""
+        if not self.config.admission_wcet or c.deadline is None:
+            return False
+        cert = self.ep.registry[c.op_id].certificate
+        if cert is None:
+            return False
+        return now + cert.wcet_latency_us * 1e-6 > c.deadline
 
     # -- backlog maintenance ----------------------------------------------
 
@@ -525,9 +553,16 @@ class ServingLoop:
                     ep._enqueue(c)
                 self._vtime = max(self._vtime,
                                   max(tag_of[c.seq] for c in picked))
+                # the wave's certified cost ceiling: no wave can cost
+                # more than the sum of its members' certified worst
+                # cases, so no EWMA prediction may price it above that
+                certs = [ep.registry[c.op_id].certificate for c in picked]
+                ceiling = (sum(x.wcet_latency_us for x in certs)
+                           if all(x is not None for x in certs) else None)
                 predicted_us = ep.cost_model.wave_us(
                     batch=len(picked), step_bound=steps, key=key,
-                    mode="mixed", contention_rate=contention)
+                    mode="mixed", contention_rate=contention,
+                    cert_ceiling_us=ceiling)
                 if cfg.placement != "single" and ep.n_devices > 1:
                     # non-single placements: price the wave through the
                     # placement model (the learned home-skew EWMA sets
@@ -541,6 +576,8 @@ class ServingLoop:
                             "sharded", predicted_us)
                     else:                       # "auto": the pick's cost
                         predicted_us = decision.costs[decision.mode]
+                    if ceiling is not None:
+                        predicted_us = min(predicted_us, ceiling)
                 handle = ep.doorbell(mode=cfg.mode,
                                      placement=cfg.placement,
                                      contention_rate=contention,

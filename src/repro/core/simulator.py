@@ -43,19 +43,19 @@ for the steady state of identical tasks: the slowest of
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import Any, Dict, List, Sequence, Set
 
 from repro.core import isa
 from repro.core.costmodel import HW, DEFAULT_HW
 from repro.core.isa import Op
 from repro.core.pyvm import TraceEvent
 from repro.core.verifier import VerifiedOperator
-
-# Bulk-DMA engine setup cost per transfer (descriptor fetch + doorbell),
-# [calib: anchors Fig. 10's ~8.7 GB/s at 4 KB blocks]
-DMA_SETUP_CYCLES = 18
-REQUEST_BYTES = 64      # op id + 8 param registers + header
-REPLY_BYTES = 16        # status + return value + header
+# The per-transfer DMA setup cost and wire header sizes are shared with
+# the static line-rate certifier (the certificate must charge exactly
+# what this simulator charges); ``core/wcet`` is their single source of
+# truth and this module re-exports them for its existing callers.
+from repro.core.wcet import (DMA_SETUP_CYCLES, REPLY_BYTES,  # noqa: F401
+                             REQUEST_BYTES)
 
 
 @dataclasses.dataclass
@@ -106,7 +106,7 @@ def simulate_task(vop: VerifiedOperator, trace: Sequence[TraceEvent],
     wire_bpc = hw.wire_eff_gbs * clk            # bytes per cycle
     pcie_bpc = hw.pcie_gbs * clk
 
-    loop_pcs = set()
+    loop_pcs: Set[int] = set()
     for l in vop.loops:
         loop_pcs.update(range(l.start, l.end + 1))
     can_pipeline = pipelined and not serial_chain
@@ -120,7 +120,7 @@ def simulate_task(vop: VerifiedOperator, trace: Sequence[TraceEvent],
     outstanding: List[float] = []     # completion times of in-flight copies
     async_issued = 0
     wait_stall = 0.0
-    seen_pcs = set()
+    seen_pcs: Set[int] = set()
     # serializing shared resources (per-NIC): the PCIe channel and the
     # network port — async transfers queue on them, which is what makes a
     # pipelined gather line-rate-bound rather than latency-bound
@@ -216,7 +216,7 @@ def simulate_task(vop: VerifiedOperator, trace: Sequence[TraceEvent],
 
 
 def overlap_speedup(vop: VerifiedOperator, trace: Sequence[TraceEvent],
-                    hw: HW = DEFAULT_HW, **kwargs) -> float:
+                    hw: HW = DEFAULT_HW, **kwargs: Any) -> float:
     """NIC-residency ratio of the serialized timeline (every Memcpy
     synchronous) over the split-phase one — how much latency the async
     issue + deferred retirement actually hides for this trace."""
@@ -228,7 +228,7 @@ def overlap_speedup(vop: VerifiedOperator, trace: Sequence[TraceEvent],
 def saturated_throughput_mops(sim: TaskSim, hw: HW = DEFAULT_HW) -> float:
     """Bottleneck law over shared resources, in Mops."""
     clk_us = hw.clk_ns / 1e3
-    demands_us = {
+    demands_us: Dict[str, float] = {
         "mp": sim.mp_cycles * clk_us / hw.n_mps,
         "dma_channel": sim.dma_channel_cycles * clk_us,
         "wire": sim.wire_bytes / hw.wire_bytes_per_us,
@@ -239,13 +239,13 @@ def saturated_throughput_mops(sim: TaskSim, hw: HW = DEFAULT_HW) -> float:
 
 def bottleneck(sim: TaskSim, hw: HW = DEFAULT_HW) -> str:
     clk_us = hw.clk_ns / 1e3
-    demands_us = {
+    demands_us: Dict[str, float] = {
         "mp": sim.mp_cycles * clk_us / hw.n_mps,
         "dma_channel": sim.dma_channel_cycles * clk_us,
         "wire": sim.wire_bytes / hw.wire_bytes_per_us,
         "slots": sim.nic_resident_us / hw.slots,
     }
-    return max(demands_us, key=demands_us.get)
+    return max(demands_us, key=lambda k: demands_us[k])
 
 
 def effective_gather_gbs(sim: TaskSim, payload_bytes: int,

@@ -36,7 +36,7 @@ from typing import FrozenSet, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import access, isa
+from repro.core import access, isa, wcet
 from repro.core.isa import (Alu, Instr, Op, FLAG_DEV_REG, FLAG_DSTDEV_REG,
                             FLAG_IMMB, FLAG_LEN_REG, FLAG_MREG,
                             FLAG_SRCDEV_REG, FLAG_THR_REG)
@@ -69,6 +69,13 @@ class VerifiedOperator:
     offset, a trip-scaled loop window, or top (whole region).  It is
     what wave-formation substitutes concrete params into to prove a
     mixed wave conflict-free and skip the runtime sweep.
+
+    ``certificate`` is the registration-time line-rate certificate
+    (``core/wcet``): sound upper bounds on worst-case cycles, traffic,
+    and per-resource occupancy, derived against the default hardware
+    model.  The registry enforces it against its budget, the serving
+    loop fail-fasts statically-infeasible deadlines with it, and the
+    cost model clamps its learned wave prices to it.
     """
 
     program: TiaraProgram
@@ -77,6 +84,7 @@ class VerifiedOperator:
     max_loop_depth: int
     n_async_sites: int
     footprint: Optional[access.OpFootprint] = None
+    certificate: Optional[wcet.LineRateCertificate] = None
 
     @property
     def name(self) -> str:
@@ -141,12 +149,10 @@ def _enclosing(loops: List[LoopInfo], pc: int) -> FrozenSet[int]:
     return frozenset(l.pc for l in loops if l.start <= pc <= l.end)
 
 
-def _multiplier(loops: List[LoopInfo], pc: int) -> int:
-    m = 1
-    for l in loops:
-        if l.start <= pc <= l.end:
-            m *= max(l.bound, 0)
-    return m
+# one multiplier definition for the step bound, the footprint lattice,
+# and the line-rate certificate (they must agree for the certificate's
+# mp_cycles == step_bound identity to hold)
+_multiplier = access.loop_multiplier
 
 
 def verify(program: TiaraProgram, *, grant: Optional[Grant] = None,
@@ -292,4 +298,5 @@ def verify(program: TiaraProgram, *, grant: Optional[Grant] = None,
         max_loop_depth=max_depth,
         n_async_sites=n_async,
         footprint=access.analyze(program, loops, regions),
+        certificate=wcet.certify(program, loops, regions),
     )

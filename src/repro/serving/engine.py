@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -201,9 +200,9 @@ class ServingEngine:
 
     # -- client API -------------------------------------------------------
 
-    def submit(self, prompt: List[int], *args: int, max_new: int = 32,
+    def submit(self, prompt: List[int], *, max_new: int = 32,
                deadline_s: Optional[float] = None,
-               tenant: str = "default") -> Any:
+               tenant: str = "default") -> SequenceHandle:
         """Admit one sequence; returns its :class:`SequenceHandle`
         (``ServingLoop.submit`` semantics: exactly one terminal status
         per submission).  An already-full waiting queue
@@ -211,23 +210,10 @@ class ServingEngine:
         ``deadline_s`` that expires before the sequence is admitted to
         a slot times out with ``STATUS_TIMEOUT`` and never prefills.
 
-        .. deprecated:: PR 9
-           The positional form ``submit(prompt, max_new)`` (which
-           returned the bare ``sid``) is kept for one release behind a
-           ``DeprecationWarning``; see the ROADMAP migration table.
+        The PR-9 deprecated positional form ``submit(prompt, max_new)``
+        (which returned the bare ``sid``) is gone; ``max_new`` is
+        keyword-only and the old int sid is ``handle.sid``.
         """
-        if args:
-            warnings.warn(
-                "ServingEngine.submit(prompt, max_new) positional form "
-                "is deprecated; call submit(prompt, max_new=...) — it "
-                "returns a SequenceHandle (the old int sid is "
-                "handle.sid)", DeprecationWarning, stacklevel=2)
-            if len(args) != 1:
-                raise TypeError(
-                    f"submit() takes at most 2 positional arguments "
-                    f"({1 + len(args)} given)")
-            # old contract: the bare int sid
-            return self._submit(prompt, int(args[0]), None, "default").sid
         return self._submit(prompt, max_new, deadline_s, tenant)
 
     def _submit(self, prompt: List[int], max_new: int,

@@ -75,7 +75,7 @@ def test_region_layout_export():
 
 # -- unified submit surface (satellite 1) ----------------------------------
 
-def test_submit_returns_handle_and_shim_warns(tiny):
+def test_submit_returns_handle_and_positional_gone(tiny):
     cfg, params = tiny
     eng = _engine(cfg, params)
     h = eng.submit(_prompts(cfg, 1)[0], max_new=3)
@@ -83,12 +83,13 @@ def test_submit_returns_handle_and_shim_warns(tiny):
     toks = h.result()
     assert h.ok and h.status == isa.STATUS_OK and toks == h.tokens
     assert len(toks) == 3
-    # deprecated positional form: warns, returns the bare int sid
-    with pytest.warns(DeprecationWarning):
-        sid = eng.submit(_prompts(cfg, 1)[0], 3)
-    assert isinstance(sid, int) and sid == 1
+    # the PR-9 positional shim is gone: max_new is keyword-only now
+    with pytest.raises(TypeError):
+        eng.submit(_prompts(cfg, 1)[0], 3)  # type: ignore[misc]
+    h2 = eng.submit(_prompts(cfg, 1)[0], max_new=3)
+    assert h2.sid == 1
     out = eng.run_to_completion()
-    assert out[sid] == eng.handle(sid).tokens
+    assert out[h2.sid] == h2.tokens
 
 
 def test_submit_admission_statuses(tiny):

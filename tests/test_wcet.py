@@ -1,0 +1,279 @@
+"""Line-rate certification (``core/wcet``): registration-time WCET /
+traffic / occupancy certificates and their three enforcement points.
+
+The invariants under test:
+
+1. Every successful registration carries a ``LineRateCertificate``; it
+   survives a JSON round-trip, and the registry surfaces it through
+   ``describe_analysis()`` / ``dump()``.
+2. The certificate is *sound*: simulated executions (pyvm trace
+   through the cycle simulator, all modes) never exceed the certified
+   cycles, occupancy, or traffic on a seeded random-program corpus
+   (hypothesis-driven when installed), and ``mp_cycles`` equals the
+   verifier's step bound exactly.
+3. The certificate is *enforced*: an over-budget operator is rejected
+   at registration with a diagnostic naming the hottest pc and the
+   violated resource; a statically-infeasible deadline retires
+   ``STATUS_TIMEOUT`` at admission without ever launching (and the
+   check can be disabled); the dispatch cost model's learned wave
+   estimate clamps to the summed certified bound.
+4. The stock operator suite registers within ``wcet.DEFAULT_BUDGET``.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import isa, memory, operators, wcet
+from repro.core.costmodel import DispatchCostModel
+from repro.core.endpoint import TiaraEndpoint
+from repro.core.isa import Alu
+from repro.core.memory import Grant
+from repro.core.program import OperatorBuilder
+from repro.core.registry import OperatorRegistry, RegistrationError
+from repro.core.serving_loop import ServingConfig, ServingLoop, VirtualClock
+from repro.core.verifier import VerificationError, verify
+
+from benchmarks.bench_wcet import (check_one, corpus_table,
+                                   random_program, _failfast_op)
+
+
+def _table():
+    return memory.packed_table([("src", 1024), ("dst", 1024)])
+
+
+def _hog(rt):
+    """~2.5M certified cycles (4096 iterations x 4 local loads) — over
+    the default 2^21-cycle budget while staying under the verifier's
+    step cap."""
+    b = OperatorBuilder("hog", n_params=1, regions=rt)
+    z = b.const(0)
+    r = b.reg()
+    with b.loop(4096):
+        for _ in range(4):
+            b.load(r, "src", z)
+    b.ret(r)
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+# 1. attachment + reporting
+# ---------------------------------------------------------------------------
+
+def test_certificate_attached_at_registration():
+    rt = _table()
+    reg = OperatorRegistry(rt)
+    reg.add_tenant(Grant.all_of(rt, "t"))
+    b = OperatorBuilder("probe", n_params=1, regions=rt)
+    off = b.reg()
+    b.alu(off, b.param(0), Alu.AND, 1023)
+    b.load(b.reg(), "src", off, dev=0)
+    b.ret()
+    op_id = reg.register("t", b.build())
+    cert = reg[op_id].certificate
+    assert cert is not None
+    assert cert.wcet_cycles > 0 and cert.wcet_latency_us > 0
+    assert cert.words_read >= 1
+    assert cert.bottleneck in ("mp", "dma_channel", "wire", "slots")
+    assert cert.per_pc        # per-site attribution is never empty
+
+
+def test_certificate_json_roundtrip_and_dump():
+    rt = _table()
+    reg = OperatorRegistry(rt)
+    reg.add_tenant(Grant.all_of(rt, "t"))
+    b = OperatorBuilder("rep", n_params=1, regions=rt)
+    off = b.reg()
+    b.alu(off, b.param(0), Alu.AND, 511)
+    with b.loop(8):
+        b.memcpy(dst_region="dst", dst_off=off, src_region="src",
+                 src_off=off, n_words=64, src_dev=0)
+    b.ret()
+    op_id = reg.register("t", b.build())
+    cert = reg[op_id].certificate
+    blob = json.loads(json.dumps(cert.to_json()))
+    assert blob["wcet_cycles"] == pytest.approx(cert.wcet_cycles)
+    assert blob["memcpy_bytes"] == cert.memcpy_bytes
+    assert blob["bottleneck"] == cert.bottleneck
+    pcs = {e["pc"] for e in blob["per_pc"]}
+    assert all(isinstance(e["op"], str) for e in blob["per_pc"])
+    assert pcs == {e.pc for e in cert.per_pc}
+    # the registry surfaces the certificate in its analysis reporting
+    assert "certificate:" in reg[op_id].describe_analysis()
+    assert "certificate:" in reg.dump()
+
+
+def test_hottest_site_attribution():
+    rt = _table()
+    vop = verify(_hog(rt), regions=rt)
+    hot = vop.certificate.hottest("cycles")
+    assert hot.count == 4096 * 4 or hot.count == 4096
+    assert hot.op == "LOAD"
+
+
+# ---------------------------------------------------------------------------
+# 2. soundness
+# ---------------------------------------------------------------------------
+
+def test_mp_cycles_equals_step_bound():
+    rt = corpus_table()
+    rng = np.random.default_rng(11)
+    for idx in range(20):
+        prog, _ = random_program(rng, rt, idx)
+        try:
+            vop = verify(prog, regions=rt)
+        except VerificationError:
+            continue
+        assert vop.certificate.mp_cycles == vop.step_bound
+
+
+def test_soundness_seeded_corpus():
+    rt = corpus_table()
+    rng = np.random.default_rng(3)
+    mem0 = rng.integers(0, 2048, size=(2, rt.pool_words)).astype(np.int64)
+    feats = set()
+    checked = 0
+    for idx in range(40):
+        prog, prog_feats = random_program(rng, rt, idx)
+        try:
+            vop = verify(prog, regions=rt)
+        except VerificationError:
+            continue
+        params = [int(rng.integers(0, 2048)) for _ in range(4)]
+        bad, _ = check_one(vop, rt, mem0.copy(), params,
+                           home=int(rng.integers(2)))
+        assert not bad, bad
+        feats |= prog_feats
+        checked += 1
+    # non-vacuity: the draw actually exercised the hard families
+    assert checked >= 30
+    assert {"loop", "memcpy", "remote"} <= feats
+
+
+def test_soundness_property_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    rt = corpus_table()
+    rng0 = np.random.default_rng(5)
+    mem0 = rng0.integers(0, 2048, size=(2, rt.pool_words)).astype(np.int64)
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1))
+    def prop(seed):
+        rng = np.random.default_rng(seed)
+        prog, _ = random_program(rng, rt, 0)
+        try:
+            vop = verify(prog, regions=rt)
+        except VerificationError:
+            return
+        params = [int(rng.integers(0, 2048)) for _ in range(4)]
+        bad, _ = check_one(vop, rt, mem0.copy(), params,
+                           home=int(rng.integers(2)))
+        assert not bad, bad
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# 3. enforcement
+# ---------------------------------------------------------------------------
+
+def test_over_budget_rejected_names_pc_and_resource():
+    rt = _table()
+    reg = OperatorRegistry(rt)       # wcet.DEFAULT_BUDGET
+    reg.add_tenant(Grant.all_of(rt, "t"))
+    with pytest.raises(RegistrationError) as ei:
+        reg.register("t", _hog(rt))
+    msg = str(ei.value)
+    assert "hog" in msg
+    assert "cycles" in msg           # the violated resource
+    assert "pc" in msg               # the hottest site
+    assert "LOAD" in msg
+
+
+def test_budget_none_admits_and_tight_budget_rejects_traffic():
+    rt = _table()
+    reg = OperatorRegistry(rt, budget=None)
+    reg.add_tenant(Grant.all_of(rt, "t"))
+    reg.register("t", _hog(rt))      # no budget, no gate
+    tight = OperatorRegistry(
+        rt, budget=wcet.Budget(max_memcpy_bytes=128))
+    tight.add_tenant(Grant.all_of(rt, "t"))
+    b = OperatorBuilder("mover", n_params=0, regions=rt)
+    z = b.const(0)
+    b.memcpy(dst_region="dst", dst_off=z, src_region="src", src_off=z,
+             n_words=64, src_dev=0)
+    b.ret()
+    with pytest.raises(RegistrationError) as ei:
+        tight.register("t", b.build())
+    assert "memcpy" in str(ei.value).lower()
+
+
+def test_admission_failfast_retires_timeout_without_launch():
+    prog, rt = _failfast_op()
+    clk = VirtualClock()
+    ep, sessions = TiaraEndpoint.for_tenants(
+        [("t", rt)], n_devices=1, clock=clk, sleep=clk.sleep)
+    sessions["t"].register(prog)
+    loop = ServingLoop(ep, ServingConfig(ring_size=2, ring_age_s=0.0))
+    op_id, _ = sessions["t"]._resolve("gather32")
+    cert = ep.registry[op_id].certificate
+    wcet_s = cert.wcet_latency_us * 1e-6
+    # infeasible: in the future, but below the certified WCET
+    c = loop.submit("t", "gather32", [0], deadline_s=0.25 * wcet_s)
+    assert c.done and c.status == isa.STATUS_TIMEOUT
+    assert c.event is not None and c.event.wave == -1   # never launched
+    assert loop.stats.launched == 0
+    assert loop.stats.timed_out == 1
+    # a feasible post on the same loop still executes
+    c2 = loop.submit("t", "gather32", [1], deadline_s=10.0)
+    loop.drain()
+    assert c2.status == isa.STATUS_OK and c2.event.wave >= 0
+    st = loop.stats
+    assert st.submitted == (st.executed + st.flushed + st.timed_out
+                            + st.rejected + st.shed)
+
+
+def test_admission_failfast_disabled_launches():
+    prog, rt = _failfast_op()
+    clk = VirtualClock()
+    ep, sessions = TiaraEndpoint.for_tenants(
+        [("t", rt)], n_devices=1, clock=clk, sleep=clk.sleep)
+    sessions["t"].register(prog)
+    loop = ServingLoop(ep, ServingConfig(
+        ring_size=1, ring_age_s=0.0, admission_wcet=False))
+    op_id, _ = sessions["t"]._resolve("gather32")
+    wcet_s = ep.registry[op_id].certificate.wcet_latency_us * 1e-6
+    c = loop.submit("t", "gather32", [0], deadline_s=0.25 * wcet_s)
+    loop.drain()
+    # without the certificate check the post launches normally (the
+    # virtual clock never passes the deadline here, so it completes)
+    assert c.event is not None and c.event.wave >= 0
+    assert loop.stats.launched == 1
+
+
+def test_wave_us_clamps_to_certified_ceiling():
+    m = DispatchCostModel()
+    free = m.wave_us(batch=8, step_bound=4096, key=1)
+    assert m.wave_us(batch=8, step_bound=4096, key=1,
+                     cert_ceiling_us=free * 0.5) <= free * 0.5
+    # a ceiling above the estimate changes nothing
+    assert m.wave_us(batch=8, step_bound=4096, key=1,
+                     cert_ceiling_us=free * 10) == pytest.approx(free)
+
+
+# ---------------------------------------------------------------------------
+# 4. stock suite fits the default budget
+# ---------------------------------------------------------------------------
+
+def test_stock_operators_within_default_budget():
+    specs = [operators.GraphWalk(), operators.PageTableWalk(),
+             operators.DistLock(), operators.PagedKVFetch(),
+             operators.MoEExpertGather(), operators.NSASelect()]
+    for w in specs:
+        rt = w.regions()
+        vop = verify(w.build(rt), regions=rt)
+        assert vop.certificate is not None
+        assert wcet.DEFAULT_BUDGET.violations(vop.certificate) == []
